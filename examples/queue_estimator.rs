@@ -1,0 +1,84 @@
+//! Standalone queue-wait estimation service — ASA's estimator as a library,
+//! fed by live observations, with the AOT-compiled XLA kernel on the hot
+//! path when artifacts are available.
+//!
+//! Demonstrates: per-geometry stores, JSON persistence across "sessions",
+//! the XLA/pure-rust backend swap, and prediction-accuracy accounting.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example queue_estimator
+//! ```
+
+use asa::coordinator::actions::ActionGrid;
+use asa::coordinator::asa::AsaConfig;
+use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use asa::coordinator::state::{AsaStore, GeometryKey};
+use asa::runtime::XlaKernel;
+use asa::simulator::{JobSpec, SimEvent, Simulator, SystemConfig};
+use asa::util::rng::Rng;
+
+fn main() {
+    // Prefer the AOT XLA artifact; fall back to pure rust.
+    let mut kernel: Box<dyn UpdateKernel> =
+        match XlaKernel::load_default(ActionGrid::paper().values()) {
+            Ok(k) => {
+                println!("backend: XLA/PJRT (AOT artifact)");
+                Box::new(k)
+            }
+            Err(e) => {
+                println!("backend: pure-rust ({e})");
+                Box::new(PureRustKernel)
+            }
+        };
+
+    let mut sim = Simulator::new(SystemConfig::uppmax(), 77);
+    sim.run_until(12 * 3600);
+    let mut store = AsaStore::new(AsaConfig::default());
+    let mut rng = Rng::new(1);
+    let key = GeometryKey::new("uppmax", 320);
+
+    println!("\nfeeding 30 live observations of geometry uppmax:320 ...");
+    let mut hits = 0;
+    for i in 0..30 {
+        let (action, predicted) = store.estimator(&key).sample_wait(&mut rng);
+        let id = sim.submit(JobSpec::new(9, format!("probe{i}"), 320, 1200));
+        let wait = loop {
+            match sim.step() {
+                Some(SimEvent::Started { id: sid, time }) if sid == id => {
+                    break time - sim.job(id).submit_time;
+                }
+                Some(_) => {}
+                None => unreachable!("background trace never ends"),
+            }
+        };
+        store
+            .estimator(&key)
+            .observe(action, wait, kernel.as_mut(), &mut rng);
+        if predicted <= wait {
+            hits += 1;
+        }
+        sim.cancel(id);
+        sim.run_until(sim.now() + 600);
+        if (i + 1) % 10 == 0 {
+            println!(
+                "  after {:>2} obs: expected wait {:>7.0} s, mode {:>6} s, hit ratio {:.0}%",
+                i + 1,
+                store.estimator(&key).expected_wait(),
+                store.estimator(&key).best_wait(),
+                100.0 * hits as f64 / (i + 1) as f64
+            );
+        }
+    }
+
+    // Persist learned state; a later session restores it instantly.
+    let path = std::env::temp_dir().join("asa-estimator-state.json");
+    store.save_file(&path).expect("save state");
+    let (restored, errors) = AsaStore::load_file(AsaConfig::default(), &path).expect("load");
+    assert!(errors.is_empty());
+    println!(
+        "\nstate saved to {} and restored: {} geometries, {} observations",
+        path.display(),
+        restored.len(),
+        restored.get(&key).map(|e| e.observations()).unwrap_or(0)
+    );
+}

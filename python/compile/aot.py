@@ -1,0 +1,59 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Batch-size variants exported; the rust runtime pads a batch to the
+# smallest variant that fits (or loops the largest).
+BATCHES = (1, 8, 64)
+M = 53  # paper grid width; must match rust ActionGrid::paper()
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--m", type=int, default=M)
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"m": args.m, "variants": []}
+    for batch in BATCHES:
+        ex = model.example_args(batch, args.m)
+        lowered = jax.jit(model.asa_step).lower(*ex)
+        text = to_hlo_text(lowered)
+        name = f"asa_step_b{batch}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({"batch": batch, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

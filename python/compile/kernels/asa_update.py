@@ -1,0 +1,121 @@
+"""Layer 1 — the ASA exponential-weights update as a Pallas kernel.
+
+The paper's Algorithm 1 line 7,
+
+    p_{t+1,a}  <-  e^{-gamma_t * l_ta} * p_{t,a} / N_t ,
+
+batched over B independent job geometries (rows), each with m waiting-time
+alternatives, plus the probability floor the rust reference kernel applies
+(see ``rust/src/coordinator/kernel.rs::P_FLOOR``).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is VPU work, not MXU —
+one geometry row per block row, the action axis padded to the 128-lane
+dimension. The whole working set for a row update is `3·m` floats, so a
+(block_b, m_pad) block stays comfortably in VMEM and the row reduction
+(normalisation) happens inside one block without cross-block traffic.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same computation
+runs under the rust runtime. Correctness against ``ref.py`` is enforced by
+``python/tests/test_kernel.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Must match rust/src/coordinator/kernel.rs::P_FLOOR.
+P_FLOOR = 1e-6
+
+
+def _update_kernel(p_ref, loss_ref, gamma_ref, out_ref):
+    """One block: rows of p, loss and per-row gamma -> updated rows."""
+    p = p_ref[...]
+    loss = loss_ref[...]
+    gamma = gamma_ref[...]  # (block_b, 1)
+    w = p * jnp.exp(-gamma * loss)
+    norm = jnp.sum(w, axis=-1, keepdims=True)
+    # Degenerate rows (all mass vanished) reset to uniform — same rule as
+    # the rust reference kernel.
+    m = p.shape[-1]
+    uniform = jnp.full_like(w, 1.0 / m)
+    safe = norm > 0.0
+    w = jnp.where(safe, w / jnp.where(safe, norm, 1.0), uniform)
+    # Probability floor + renormalise (keeps every alternative reachable).
+    w = jnp.maximum(w, P_FLOOR)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out_ref[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def asa_update(p, loss, gamma, *, block_b=8):
+    """Batched ASA probability update.
+
+    Args:
+      p:     f32[B, m]  current distributions (rows sum to 1).
+      loss:  f32[B, m]  per-action losses for this round.
+      gamma: f32[B]     per-row learning rate (non-increasing over rounds).
+      block_b: rows per Pallas block.
+
+    Returns:
+      f32[B, m] updated, floored, renormalised distributions.
+    """
+    b, m = p.shape
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    gamma_col = gamma.reshape(b, 1)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), p.dtype),
+        interpret=True,
+    )(p, loss, gamma_col)
+
+
+def _stats_kernel(p_ref, values_ref, out_ref):
+    """Expected wait, entropy and max-probability per row."""
+    p = p_ref[...]
+    values = values_ref[...]  # (1, m) broadcast row
+    expected = jnp.sum(p * values, axis=-1)
+    logp = jnp.log(jnp.maximum(p, 1e-30))
+    entropy = -jnp.sum(p * logp, axis=-1)
+    pmax = jnp.max(p, axis=-1)
+    out_ref[...] = jnp.stack([expected, entropy, pmax], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def asa_stats(p, values, *, block_b=8):
+    """Per-row summary statistics of the distributions.
+
+    Args:
+      p:      f32[B, m] distributions.
+      values: f32[m]    the action grid in seconds.
+
+    Returns:
+      f32[B, 3]: (expected wait, entropy, max probability) per row.
+    """
+    b, m = p.shape
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    values_row = values.reshape(1, m)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 3), p.dtype),
+        interpret=True,
+    )(p, values_row)

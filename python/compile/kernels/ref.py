@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+The contract every backend must satisfy (rust PureRustKernel, the Pallas
+kernel, and the AOT artifact): multiplicative update, degenerate-row reset
+to uniform, probability floor, renormalisation.
+"""
+
+import jax.numpy as jnp
+
+P_FLOOR = 1e-6
+
+
+def asa_update_ref(p, loss, gamma):
+    """Reference batched update. Shapes: p,loss f32[B,m]; gamma f32[B]."""
+    w = p * jnp.exp(-gamma[:, None] * loss)
+    norm = jnp.sum(w, axis=-1, keepdims=True)
+    m = p.shape[-1]
+    uniform = jnp.full_like(w, 1.0 / m)
+    safe = norm > 0.0
+    w = jnp.where(safe, w / jnp.where(safe, norm, 1.0), uniform)
+    w = jnp.maximum(w, P_FLOOR)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def asa_stats_ref(p, values):
+    """Reference row stats: (expected wait, entropy, pmax) per row."""
+    expected = jnp.sum(p * values[None, :], axis=-1)
+    logp = jnp.log(jnp.maximum(p, 1e-30))
+    entropy = -jnp.sum(p * logp, axis=-1)
+    pmax = jnp.max(p, axis=-1)
+    return jnp.stack([expected, entropy, pmax], axis=-1)

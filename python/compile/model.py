@@ -1,0 +1,47 @@
+"""Layer 2 — the full batched ASA policy step as a JAX computation.
+
+One invocation performs, for B tracked job geometries at once:
+
+  1. the exponential-weights update (delegating to the L1 Pallas kernel), and
+  2. the per-row summary statistics the coordinator reports (expected wait,
+     entropy, max probability).
+
+The function is lowered once by ``aot.py`` to HLO text and executed from the
+rust runtime (``rust/src/runtime``) via PJRT — python never runs on the
+request path. Batch-size variants {1, 8, 64} are exported so the rust side
+pads at most to the next variant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import asa_update as k
+
+
+def asa_step(p, loss, gamma, values):
+    """Full ASA policy step.
+
+    Args:
+      p:      f32[B, m] current distributions.
+      loss:   f32[B, m] per-action losses.
+      gamma:  f32[B]    learning rates.
+      values: f32[m]    the action grid (seconds).
+
+    Returns:
+      (new_p f32[B,m], stats f32[B,3]) — stats rows are
+      (expected wait, entropy, max probability) of the *updated* rows.
+    """
+    b = p.shape[0]
+    block_b = 8 if b % 8 == 0 else 1
+    new_p = k.asa_update(p, loss, gamma, block_b=block_b)
+    stats = k.asa_stats(new_p, values, block_b=block_b)
+    return new_p, stats
+
+
+def example_args(batch, m=53):
+    """Representative inputs used for AOT lowering (shapes/dtypes only)."""
+    p = jnp.full((batch, m), 1.0 / m, dtype=jnp.float32)
+    loss = jnp.zeros((batch, m), dtype=jnp.float32)
+    gamma = jnp.ones((batch,), dtype=jnp.float32)
+    values = jnp.arange(m, dtype=jnp.float32)
+    return p, loss, gamma, values

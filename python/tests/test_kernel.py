@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas kernels against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes-compatible value ranges and gamma scales;
+every case must match ``ref.py`` to f32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import asa_update as k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def normalise(rows):
+    rows = np.asarray(rows, dtype=np.float32)
+    return rows / rows.sum(axis=-1, keepdims=True)
+
+
+def random_case(rng, b, m):
+    p = normalise(rng.uniform(1e-5, 1.0, size=(b, m)))
+    loss = rng.uniform(0.0, 1.0, size=(b, m)).astype(np.float32)
+    gamma = rng.uniform(0.01, 3.0, size=(b,)).astype(np.float32)
+    return jnp.array(p), jnp.array(loss), jnp.array(gamma)
+
+
+@pytest.mark.parametrize("b,m,block", [(1, 53, 1), (8, 53, 8), (64, 53, 8), (8, 16, 8)])
+def test_update_matches_ref(b, m, block):
+    rng = np.random.default_rng(b * 100 + m)
+    p, loss, gamma = random_case(rng, b, m)
+    got = k.asa_update(p, loss, gamma, block_b=block)
+    want = ref.asa_update_ref(p, loss, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,m", [(8, 53), (64, 53)])
+def test_update_rows_sum_to_one(b, m):
+    rng = np.random.default_rng(7)
+    p, loss, gamma = random_case(rng, b, m)
+    got = np.asarray(k.asa_update(p, loss, gamma))
+    np.testing.assert_allclose(got.sum(axis=-1), np.ones(b), rtol=1e-5)
+    assert (got >= k.P_FLOOR / 2).all(), "floor must hold"
+
+
+def test_update_degenerate_row_resets_to_uniform():
+    m = 53
+    p = jnp.full((1, m), 1.0 / m, dtype=jnp.float32)
+    loss = jnp.full((1, m), 1.0, dtype=jnp.float32)
+    gamma = jnp.array([200.0], dtype=jnp.float32)  # exp(-200) underflows f32
+    got = np.asarray(k.asa_update(p, loss, gamma, block_b=1))
+    np.testing.assert_allclose(got, np.full((1, m), 1.0 / m), rtol=1e-5)
+
+
+def test_stats_matches_ref():
+    rng = np.random.default_rng(11)
+    p, _, _ = random_case(rng, 8, 53)
+    values = jnp.array(rng.uniform(1.0, 1e5, size=(53,)).astype(np.float32))
+    got = k.asa_stats(p, values, block_b=8)
+    want = ref.asa_stats_ref(p, values)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_update_rejects_indivisible_batch():
+    p = jnp.ones((6, 53), dtype=jnp.float32) / 53
+    with pytest.raises(ValueError):
+        k.asa_update(p, jnp.zeros_like(p), jnp.ones((6,), jnp.float32), block_b=8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b_pow=st.integers(min_value=0, max_value=3),
+    m=st.integers(min_value=4, max_value=80),
+    gamma_scale=st.floats(min_value=1e-3, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_update_matches_ref_hypothesis(b_pow, m, gamma_scale, seed):
+    b = 2**b_pow
+    rng = np.random.default_rng(seed)
+    p = normalise(rng.uniform(1e-6, 1.0, size=(b, m)))
+    loss = rng.uniform(0.0, 2.0, size=(b, m)).astype(np.float32)
+    gamma = (rng.uniform(0.1, 1.0, size=(b,)) * gamma_scale).astype(np.float32)
+    block = b if b <= 8 else 8
+    got = np.asarray(k.asa_update(jnp.array(p), jnp.array(loss), jnp.array(gamma), block_b=block))
+    want = np.asarray(ref.asa_update_ref(jnp.array(p), jnp.array(loss), jnp.array(gamma)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+    assert np.isfinite(got).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_repeated_updates_concentrate_on_zero_loss_action(seed):
+    rng = np.random.default_rng(seed)
+    m = 53
+    p = jnp.full((1, m), 1.0 / m, dtype=jnp.float32)
+    loss = np.ones((1, m), dtype=np.float32)
+    best = int(rng.integers(0, m))
+    loss[0, best] = 0.0
+    loss = jnp.array(loss)
+    gamma = jnp.array([0.5], dtype=jnp.float32)
+    for _ in range(60):
+        p = k.asa_update(p, loss, gamma, block_b=1)
+    assert int(np.argmax(np.asarray(p)[0])) == best
+    assert np.asarray(p)[0, best] > 0.99

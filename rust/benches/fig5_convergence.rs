@@ -1,0 +1,55 @@
+//! Bench: regenerate Fig. 5 (convergence simulation, 3 policies × 1000
+//! iterations) and time it under both kernel backends.
+use asa::coordinator::kernel::PureRustKernel;
+use asa::experiments::convergence;
+use asa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5_convergence");
+    b.case("fig5 1000 iters x 3 policies (pure-rust)", || {
+        let mut k = PureRustKernel;
+        convergence::run(1000, 5, &mut k)
+    });
+    if let Ok(mut xla) = asa::runtime::XlaKernel::load_default(
+        asa::coordinator::actions::ActionGrid::paper().values(),
+    ) {
+        b.samples = 3;
+        b.case("fig5 1000 iters x 3 policies (xla-pjrt)", || {
+            convergence::run(1000, 5, &mut xla)
+        });
+    }
+    // Regenerate and print the actual figure once.
+    let mut k = PureRustKernel;
+    let r = convergence::run(1000, 5, &mut k);
+    println!("{}", r.summary().render());
+
+    // Ablation (paper §4.5): the tuned policy's repetition parameter trades
+    // re-convergence speed against following the last observation too
+    // eagerly. Measured as total loss over the Fig.-5 scenario.
+    use asa::coordinator::asa::{AsaConfig, AsaEstimator};
+    use asa::coordinator::policy::Policy;
+    use asa::util::rng::Rng;
+    println!("
+ablation: tuned repetition parameter (total 0/1 loss, 1000 iters)");
+    for rep in [1u32, 10, 50, 200] {
+        let mut total = 0.0;
+        for seed in [5u64, 6, 7] {
+            let mut est = AsaEstimator::new(AsaConfig {
+                policy: Policy::Tuned { rep },
+                ..AsaConfig::default()
+            });
+            let mut rng = Rng::new(seed ^ 0xbeef);
+            let mut truth_rng = Rng::new(seed);
+            let levels: Vec<i64> = (0..5)
+                .map(|_| truth_rng.uniform(30f64.ln(), 60_000f64.ln()).exp() as i64)
+                .collect();
+            for i in 0..1000usize {
+                let w = levels[(i / 200).min(4)];
+                let (a, _) = est.sample_wait(&mut rng);
+                total += est.observe(a, w, &mut k, &mut rng);
+            }
+        }
+        println!("  rep={rep:<4} mean total loss {:.1}", total / 3.0);
+    }
+    b.finish();
+}

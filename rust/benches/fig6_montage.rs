@@ -1,0 +1,16 @@
+//! Bench: regenerate the montage makespan-breakdown figure (18 sessions:
+//! 6 scalings x 3 strategies) and report the wall cost.
+use asa::experiments::campaign::{self, SCALINGS};
+use asa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig6_montage");
+    b.samples = 3;
+    b.budget_secs = 10.0;
+    b.case("campaign montage (18 sessions)", || {
+        campaign::run_campaign(&["montage"], &SCALINGS, false, 42)
+    });
+    let cells = campaign::run_campaign(&["montage"], &SCALINGS, false, 42);
+    println!("{}", campaign::makespan_breakdown(&cells, "montage").render());
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 9 (total resource usage per strategy).
+use asa::experiments::{campaign, usage};
+use asa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig9_usage");
+    b.samples = 3;
+    b.budget_secs = 20.0;
+    b.case("full campaign + usage aggregation", || {
+        let cells =
+            campaign::run_campaign(&["montage", "blast", "statistics"], &campaign::SCALINGS, false, 42);
+        usage::aggregate(&cells)
+    });
+    let cells =
+        campaign::run_campaign(&["montage", "blast", "statistics"], &campaign::SCALINGS, false, 42);
+    println!("{}", usage::chart(&cells));
+    println!("{}", usage::table(&cells).render());
+    b.finish();
+}

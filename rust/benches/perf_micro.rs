@@ -1,0 +1,81 @@
+//! Micro-benchmarks for the hot paths (the §Perf iteration log targets):
+//! the scheduling pass, the simulator event loop under background load,
+//! and the ASA update under both kernel backends.
+use asa::coordinator::actions::ActionGrid;
+use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use asa::simulator::{Simulator, SystemConfig};
+use asa::util::bench::Bench;
+use asa::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("perf_micro");
+
+    // 1) Simulator throughput: 24 h of HPC2n background churn.
+    b.samples = 5;
+    b.case("sim: 24h hpc2n background", || {
+        let mut sim = Simulator::new(SystemConfig::hpc2n(), 42);
+        sim.run_until(24 * 3600);
+        sim.metrics.started
+    });
+    b.case("sim: 24h uppmax background", || {
+        let mut sim = Simulator::new(SystemConfig::uppmax(), 42);
+        sim.run_until(24 * 3600);
+        sim.metrics.started
+    });
+
+    // 2) ASA update kernel: single rows and batches.
+    let grid = ActionGrid::paper();
+    let m = grid.len();
+    let mut rng = Rng::new(1);
+    let mk_row = |rng: &mut Rng| -> Vec<f64> {
+        let mut p: Vec<f64> = (0..m).map(|_| rng.uniform(1e-4, 1.0)).collect();
+        let s: f64 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        p
+    };
+    let loss: Vec<f64> = (0..m).map(|i| if i == 7 { 0.0 } else { 1.0 }).collect();
+
+    let mut pure = PureRustKernel;
+    let row = mk_row(&mut rng);
+    b.case_throughput("kernel pure-rust: 10k single updates", 10_000, || {
+        let mut p = row.clone();
+        for _ in 0..10_000 {
+            pure.update(&mut p, &loss, 0.3);
+        }
+        p[0]
+    });
+
+    let rows = 64;
+    let mut batch: Vec<f64> = Vec::new();
+    for _ in 0..rows {
+        batch.extend(mk_row(&mut rng));
+    }
+    let losses: Vec<f64> = (0..rows).flat_map(|_| loss.clone()).collect();
+    let gammas = vec![0.3; rows];
+    b.case_throughput("kernel pure-rust: 64-row batch x100", 6_400, || {
+        let mut p = batch.clone();
+        for _ in 0..100 {
+            pure.update_batch(m, &mut p, &losses, &gammas);
+        }
+        p[0]
+    });
+
+    if let Ok(mut xla) = asa::runtime::XlaKernel::load_default(grid.values()) {
+        b.samples = 3;
+        b.case_throughput("kernel xla-pjrt: 100 single updates", 100, || {
+            let mut p = row.clone();
+            for _ in 0..100 {
+                xla.update(&mut p, &loss, 0.3);
+            }
+            p[0]
+        });
+        b.case_throughput("kernel xla-pjrt: 64-row batch x100", 6_400, || {
+            let mut p = batch.clone();
+            for _ in 0..100 {
+                xla.update_batch(m, &mut p, &losses, &gammas);
+            }
+            p[0]
+        });
+    }
+    b.finish();
+}

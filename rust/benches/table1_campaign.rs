@@ -1,0 +1,16 @@
+//! Bench: regenerate Table 1 (the full 54-run strategy comparison).
+use asa::experiments::campaign::{self, SCALINGS};
+use asa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table1_campaign");
+    b.samples = 3;
+    b.budget_secs = 30.0;
+    b.case("table1: 54 runs (3 wf x 6 scalings x 3 strategies)", || {
+        campaign::run_campaign(&["montage", "blast", "statistics"], &SCALINGS, false, 42)
+    });
+    let cells =
+        campaign::run_campaign(&["montage", "blast", "statistics"], &SCALINGS, false, 42);
+    println!("{}", campaign::table1(&cells).render());
+    b.finish();
+}

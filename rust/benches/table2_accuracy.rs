@@ -1,0 +1,19 @@
+//! Bench: regenerate Table 2 (prediction-accuracy probes). Uses a reduced
+//! probe count per case for timing; prints the full 60-probe table once.
+use asa::coordinator::kernel::PureRustKernel;
+use asa::experiments::accuracy;
+use asa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table2_accuracy");
+    b.samples = 2;
+    b.budget_secs = 30.0;
+    b.case("table2: 20 probes x 18 geometries", || {
+        let mut k = PureRustKernel;
+        accuracy::run_table2(20, 42, &mut k)
+    });
+    let mut k = PureRustKernel;
+    let rows = accuracy::run_table2(60, 42, &mut k);
+    println!("{}", accuracy::table2(&rows).render());
+    b.finish();
+}

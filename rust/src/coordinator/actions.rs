@@ -1,0 +1,153 @@
+//! The discretised waiting-time action grid.
+//!
+//! Paper §4.3: m = 53 alternatives spanning multiples of 10s, 100s, 1k,
+//! 10k and 100k seconds (max ≈ 28 h, the largest wait observed on either
+//! system), with more alternatives in the 10s/100s decades where small-job
+//! waits are most variable.
+
+use crate::Time;
+
+/// An ordered grid of candidate waiting times (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActionGrid {
+    values: Vec<Time>,
+}
+
+impl ActionGrid {
+    /// The paper's m = 53 grid:
+    /// `{1,2,5} ∪ {10..95 step 5} ∪ {100..950 step 50} ∪
+    ///  {1000..9000 step 1000} ∪ {20k,40k,60k,80k,100k}`.
+    pub fn paper() -> Self {
+        let mut values: Vec<Time> = vec![1, 2, 5];
+        values.extend((10..=95).step_by(5)); // 18 values
+        values.extend((100..=950).step_by(50)); // 18 values
+        values.extend((1000..=9000).step_by(1000)); // 9 values
+        values.extend([20_000, 40_000, 60_000, 80_000, 100_000]);
+        let grid = ActionGrid { values };
+        debug_assert_eq!(grid.len(), 53);
+        grid
+    }
+
+    /// A custom grid (must be strictly increasing and non-empty).
+    pub fn new(values: Vec<Time>) -> Self {
+        assert!(!values.is_empty());
+        assert!(
+            values.windows(2).all(|w| w[0] < w[1]),
+            "grid must be strictly increasing"
+        );
+        ActionGrid { values }
+    }
+
+    /// Small uniform grid for unit tests/simulations (e.g. Fig. 5 uses the
+    /// same grid as the real runs, but tests want tiny ones).
+    pub fn linear(lo: Time, hi: Time, m: usize) -> Self {
+        assert!(m >= 2 && hi > lo);
+        let step = (hi - lo) as f64 / (m - 1) as f64;
+        let mut values: Vec<Time> = (0..m)
+            .map(|i| lo + (step * i as f64).round() as Time)
+            .collect();
+        values.dedup();
+        ActionGrid { values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn value(&self, idx: usize) -> Time {
+        self.values[idx]
+    }
+
+    pub fn values(&self) -> &[Time] {
+        &self.values
+    }
+
+    pub fn max_value(&self) -> Time {
+        *self.values.last().unwrap()
+    }
+
+    /// Index of the alternative closest to `wait`, in log distance —
+    /// the "best possible action" of the loss definition (eq. 3).
+    /// Log distance matches the grid's decade structure: being 50 s off a
+    /// 60 s wait is a miss, being 50 s off a 20 000 s wait is a bullseye.
+    pub fn closest(&self, wait: Time) -> usize {
+        let lw = ((wait.max(0)) as f64 + 1.0).ln();
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (i, &v) in self.values.iter().enumerate() {
+            let d = ((v as f64 + 1.0).ln() - lw).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_has_53_alternatives() {
+        let g = ActionGrid::paper();
+        assert_eq!(g.len(), 53);
+        assert_eq!(g.max_value(), 100_000);
+        assert!(g.values().windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn paper_grid_density_is_highest_in_low_decades() {
+        let g = ActionGrid::paper();
+        let in_10s = g.values().iter().filter(|&&v| (10..100).contains(&v)).count();
+        let in_10k = g
+            .values()
+            .iter()
+            .filter(|&&v| (10_000..100_000).contains(&v))
+            .count();
+        assert!(in_10s > in_10k, "10s decade should be denser");
+    }
+
+    #[test]
+    fn closest_finds_exact_values() {
+        let g = ActionGrid::paper();
+        for (i, &v) in g.values().iter().enumerate() {
+            assert_eq!(g.closest(v), i, "value {v}");
+        }
+    }
+
+    #[test]
+    fn closest_is_log_scaled() {
+        let g = ActionGrid::paper();
+        // 30 000 s sits between 20k and 40k; log-midpoint is √(2e4·4e4)≈28.3k,
+        // so 30 000 → 40k.
+        assert_eq!(g.value(g.closest(30_000)), 40_000);
+        assert_eq!(g.value(g.closest(26_000)), 20_000);
+    }
+
+    #[test]
+    fn closest_handles_extremes() {
+        let g = ActionGrid::paper();
+        assert_eq!(g.closest(0), 0);
+        assert_eq!(g.value(g.closest(10_000_000)), 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_grid_rejected() {
+        ActionGrid::new(vec![5, 3]);
+    }
+
+    #[test]
+    fn linear_grid() {
+        let g = ActionGrid::linear(0, 100, 11);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g.value(0), 0);
+        assert_eq!(g.value(10), 100);
+    }
+}

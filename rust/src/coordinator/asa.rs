@@ -1,0 +1,451 @@
+//! Algorithm 1 — the Adaptive Scheduling Algorithm.
+//!
+//! ASA maintains a probability vector `p` over m waiting-time alternatives.
+//! Observations are grouped into *minibatch rounds*: losses accumulate in
+//! `ℓ_t` until `max_a ℓ_ta ≥ 1`, at which point one multiplicative update
+//! `p ← e^{−γ_t ℓ_t} ⊙ p / N_t` closes the round (outer-loop iteration t).
+//! `γ_t` is a non-increasing sequence, which yields the Appendix-A regret
+//! bound `Σℓ(θ^{s−1}) − Σℓ(θ̄) ≤ 4η(t) + ln m + √(2t ln(m/δ))`.
+//!
+//! The multiplicative update itself is delegated to an [`UpdateKernel`]
+//! so the AOT-compiled JAX/Pallas artifact can serve as the backend.
+
+use crate::coordinator::actions::ActionGrid;
+use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::loss::{loss, loss_vector, LossKind};
+use crate::coordinator::policy::Policy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Time;
+
+/// Estimator configuration.
+#[derive(Clone, Debug)]
+pub struct AsaConfig {
+    pub grid: ActionGrid,
+    pub policy: Policy,
+    pub loss: LossKind,
+    /// γ_t = gamma0 / √t (t = 1-based round counter), floored at min_gamma.
+    pub gamma0: f64,
+    pub min_gamma: f64,
+}
+
+impl Default for AsaConfig {
+    fn default() -> Self {
+        AsaConfig {
+            grid: ActionGrid::paper(),
+            policy: Policy::Tuned { rep: 50 },
+            loss: LossKind::ZeroOne,
+            gamma0: 1.0,
+            min_gamma: 0.05,
+        }
+    }
+}
+
+/// One per-job-geometry instance of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct AsaEstimator {
+    cfg: AsaConfig,
+    /// The distribution over alternatives (line 7's p_t).
+    p: Vec<f64>,
+    /// ℓ_t — losses accumulated in the current round.
+    round_loss: Vec<f64>,
+    /// Completed rounds (η(t) in Appendix A; also drives γ_t).
+    rounds: u64,
+    /// Total observations fed in.
+    observations: u64,
+    /// Lifetime per-action cumulative loss (greedy policy + diagnostics).
+    cum_loss: Vec<f64>,
+    /// Σ losses of the actions the algorithm actually played (regret LHS).
+    algo_loss: f64,
+}
+
+impl AsaEstimator {
+    pub fn new(cfg: AsaConfig) -> Self {
+        let m = cfg.grid.len();
+        AsaEstimator {
+            cfg,
+            p: vec![1.0 / m as f64; m],
+            round_loss: vec![0.0; m],
+            rounds: 0,
+            observations: 0,
+            cum_loss: vec![0.0; m],
+            algo_loss: 0.0,
+        }
+    }
+
+    pub fn config(&self) -> &AsaConfig {
+        &self.cfg
+    }
+
+    pub fn m(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn probabilities(&self) -> &[f64] {
+        &self.p
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    pub fn algo_loss(&self) -> f64 {
+        self.algo_loss
+    }
+
+    /// Current learning rate γ_t (non-increasing in the round counter).
+    pub fn gamma(&self) -> f64 {
+        (self.cfg.gamma0 / ((self.rounds + 1) as f64).sqrt()).max(self.cfg.min_gamma)
+    }
+
+    /// Sample the next waiting-time action according to the policy.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match self.cfg.policy {
+            Policy::Default | Policy::Tuned { .. } => rng.weighted(&self.p),
+            Policy::Greedy => {
+                // "The minimum perceived loss is always used": exploit the
+                // current mode of p, ties resolved to the smallest wait (the
+                // conservative end — which is why, after a sudden drop in
+                // the true wait, greedy decays into submit-at-stage-end
+                // behaviour, Fig. 5).
+                let mut best = 0;
+                for i in 1..self.p.len() {
+                    if self.p[i] > self.p[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Sampled action as a waiting time in seconds.
+    pub fn sample_wait(&self, rng: &mut Rng) -> (usize, Time) {
+        let a = self.sample(rng);
+        (a, self.cfg.grid.value(a))
+    }
+
+    /// Mass-weighted expected waiting time (the "ASA WT" column).
+    pub fn expected_wait(&self) -> f64 {
+        self.p
+            .iter()
+            .zip(self.cfg.grid.values())
+            .map(|(p, &v)| p * v as f64)
+            .sum()
+    }
+
+    /// Mode of the distribution as a waiting time.
+    pub fn best_wait(&self) -> Time {
+        let mut best = 0;
+        for i in 1..self.p.len() {
+            if self.p[i] > self.p[best] {
+                best = i;
+            }
+        }
+        self.cfg.grid.value(best)
+    }
+
+    /// Feed one observation: the chosen `action` and the realised queue
+    /// `wait`. Returns the incurred loss.
+    pub fn observe(
+        &mut self,
+        action: usize,
+        wait: Time,
+        kernel: &mut dyn UpdateKernel,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert!(action < self.m());
+        self.observations += 1;
+        let l = loss(self.cfg.loss, &self.cfg.grid, action, wait);
+        self.algo_loss += l;
+        self.cum_loss[action] += l;
+        self.round_loss[action] += l;
+
+        // Tuned policy: re-apply the observation's *full* loss vector a
+        // random number (≤ rep) of times. r identical multiplicative
+        // updates collapse into a single update with r·γ.
+        if let Policy::Tuned { rep } = self.cfg.policy {
+            if rep > 0 {
+                let r = rng.range_u64(1, rep as u64 + 1) as f64;
+                let lv = loss_vector(self.cfg.loss, &self.cfg.grid, wait);
+                let g = self.gamma() * r;
+                kernel.update(&mut self.p, &lv, g);
+            }
+        }
+
+        // Inner loop guard (Algorithm 1 line 3): close the round once any
+        // action's accumulated loss reaches 1.
+        if self
+            .round_loss
+            .iter()
+            .fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+            >= 1.0
+        {
+            let g = self.gamma();
+            let m = self.m();
+            let losses = std::mem::replace(&mut self.round_loss, vec![0.0; m]);
+            kernel.update(&mut self.p, &losses, g);
+            self.rounds += 1;
+        }
+        l
+    }
+
+    /// Appendix-A Theorem 1 bound on the regret after `t` observations with
+    /// `eta` completed rounds, at confidence `1 − delta`.
+    pub fn regret_bound(t: u64, m: usize, eta: u64, delta: f64) -> f64 {
+        assert!(delta > 0.0 && delta < 1.0);
+        4.0 * eta as f64
+            + (m as f64).ln()
+            + (2.0 * t as f64 * (m as f64 / delta).ln()).sqrt()
+    }
+
+    /// Measured regret against the best single action in hindsight:
+    /// `Σ ℓ(played) − min_a Σ ℓ(a-if-always-played)` requires replaying the
+    /// wait history, so callers track it via [`AsaEstimator::algo_loss`] and
+    /// their own per-action tally; this helper just subtracts.
+    pub fn regret_vs(&self, best_fixed_loss: f64) -> f64 {
+        self.algo_loss - best_fixed_loss
+    }
+
+    /// Serialize learning state (not config) for cross-run persistence.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("p", self.p.as_slice())
+            .with("round_loss", self.round_loss.as_slice())
+            .with("cum_loss", self.cum_loss.as_slice())
+            .with("rounds", self.rounds as i64)
+            .with("observations", self.observations as i64)
+            .with("algo_loss", self.algo_loss)
+    }
+
+    /// Restore learning state saved by [`AsaEstimator::to_json`]. The grid
+    /// width must match.
+    pub fn restore(cfg: AsaConfig, j: &Json) -> Result<Self, String> {
+        let read_vec = |key: &str| -> Result<Vec<f64>, String> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .ok_or_else(|| format!("missing array {key}"))
+        };
+        let p = read_vec("p")?;
+        if p.len() != cfg.grid.len() {
+            return Err(format!(
+                "grid width mismatch: saved {} vs config {}",
+                p.len(),
+                cfg.grid.len()
+            ));
+        }
+        let round_loss = read_vec("round_loss")?;
+        let cum_loss = read_vec("cum_loss")?;
+        let rounds = j.get("rounds").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let observations = j
+            .get("observations")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0) as u64;
+        let algo_loss = j.get("algo_loss").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Ok(AsaEstimator {
+            cfg,
+            p,
+            round_loss,
+            rounds,
+            observations,
+            cum_loss,
+            algo_loss,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::PureRustKernel;
+
+    fn est(policy: Policy) -> AsaEstimator {
+        AsaEstimator::new(AsaConfig {
+            policy,
+            ..AsaConfig::default()
+        })
+    }
+
+    #[test]
+    fn starts_uniform() {
+        let e = est(Policy::Default);
+        let m = e.m() as f64;
+        assert!(e.probabilities().iter().all(|&p| (p - 1.0 / m).abs() < 1e-12));
+        assert_eq!(e.rounds(), 0);
+    }
+
+    #[test]
+    fn converges_to_stationary_wait_default() {
+        let mut e = est(Policy::Default);
+        let mut k = PureRustKernel;
+        let mut rng = Rng::new(1);
+        let truth = 300; // a grid point
+        for _ in 0..4000 {
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, truth, &mut k, &mut rng);
+        }
+        assert_eq!(e.best_wait(), 300, "p peaked at {}", e.best_wait());
+        // The default policy converges slowly (it keeps exploring — the
+        // paper's Fig. 5 observation); the mode must clearly dominate the
+        // uniform mass but need not be near 1.
+        let idx = e.config().grid.closest(truth);
+        assert!(e.probabilities()[idx] > 0.25, "p={}", e.probabilities()[idx]);
+    }
+
+    #[test]
+    fn tuned_converges_much_faster() {
+        let mut rng = Rng::new(2);
+        let mut k = PureRustKernel;
+        let truth = 2000;
+        let mut def = est(Policy::Default);
+        let mut tun = est(Policy::Tuned { rep: 50 });
+        for _ in 0..60 {
+            let (a, _) = def.sample_wait(&mut rng);
+            def.observe(a, truth, &mut k, &mut rng);
+            let (a, _) = tun.sample_wait(&mut rng);
+            tun.observe(a, truth, &mut k, &mut rng);
+        }
+        let idx = def.config().grid.closest(truth);
+        assert!(
+            tun.probabilities()[idx] > def.probabilities()[idx],
+            "tuned {} !> default {}",
+            tun.probabilities()[idx],
+            def.probabilities()[idx]
+        );
+        assert_eq!(tun.best_wait(), 2000);
+    }
+
+    #[test]
+    fn tuned_readapts_after_regime_change() {
+        let mut rng = Rng::new(3);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Tuned { rep: 50 });
+        for _ in 0..100 {
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, 5000, &mut k, &mut rng);
+        }
+        assert_eq!(e.best_wait(), 5000);
+        for _ in 0..100 {
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, 50, &mut k, &mut rng);
+        }
+        assert_eq!(e.best_wait(), 50, "must re-converge after drop");
+    }
+
+    #[test]
+    fn greedy_gets_stuck_after_drop() {
+        let mut rng = Rng::new(4);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Greedy);
+        // Learn truth=9000 greedily: after one elimination sweep the
+        // never-punished 9000-arm is the mode and collects zero loss.
+        for _ in 0..500 {
+            let a = e.sample(&mut rng);
+            e.observe(a, 9000, &mut k, &mut rng);
+        }
+        let stuck_at = e.config().grid.value(e.sample(&mut rng));
+        assert_eq!(stuck_at, 9000);
+        // Truth drops. Greedy must first grind the stale mode's mass down
+        // (one round per play at a shrunken γ_t), then ties break toward
+        // the conservative smallest wait — it does NOT find the new optimum
+        // within a realistic horizon (paper Fig. 5's red curve).
+        let mut found = false;
+        let best = e.config().grid.closest(20);
+        for _ in 0..50 {
+            let a = e.sample(&mut rng);
+            if a == best {
+                found = true;
+            }
+            e.observe(a, 20, &mut k, &mut rng);
+        }
+        assert!(!found, "greedy should not discover the new optimum quickly");
+    }
+
+    #[test]
+    fn rounds_close_on_unit_loss() {
+        let mut rng = Rng::new(5);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Default);
+        // A wrong action scores loss 1 → closes a round immediately.
+        let wrong = 0;
+        e.observe(wrong, 100_000, &mut k, &mut rng);
+        assert_eq!(e.rounds(), 1);
+        // The right action scores 0 → round stays open.
+        let right = e.config().grid.closest(100_000);
+        e.observe(right, 100_000, &mut k, &mut rng);
+        assert_eq!(e.rounds(), 1);
+    }
+
+    #[test]
+    fn gamma_is_non_increasing() {
+        let mut rng = Rng::new(6);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Default);
+        let mut last = f64::INFINITY;
+        for _ in 0..50 {
+            let g = e.gamma();
+            assert!(g <= last);
+            last = g;
+            e.observe(0, 100_000, &mut k, &mut rng); // always loss 1
+        }
+        assert!(e.gamma() >= e.config().min_gamma);
+    }
+
+    #[test]
+    fn regret_bound_formula() {
+        // 4η + ln m + √(2t ln(m/δ))
+        let b = AsaEstimator::regret_bound(100, 53, 10, 0.05);
+        let expect = 40.0 + (53f64).ln() + (2.0 * 100.0 * (53.0 / 0.05f64).ln()).sqrt();
+        assert!((b - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_state() {
+        let mut rng = Rng::new(7);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Tuned { rep: 10 });
+        for _ in 0..40 {
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, 450, &mut k, &mut rng);
+        }
+        let j = e.to_json();
+        let restored =
+            AsaEstimator::restore(e.config().clone(), &Json::parse(&j.pretty()).unwrap())
+                .unwrap();
+        assert_eq!(restored.rounds(), e.rounds());
+        assert_eq!(restored.observations(), e.observations());
+        for (a, b) in restored.probabilities().iter().zip(e.probabilities()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_grid() {
+        let e = est(Policy::Default);
+        let j = e.to_json();
+        let cfg = AsaConfig {
+            grid: ActionGrid::linear(0, 10, 5),
+            ..AsaConfig::default()
+        };
+        assert!(AsaEstimator::restore(cfg, &j).is_err());
+    }
+
+    #[test]
+    fn expected_wait_tracks_convergence() {
+        let mut rng = Rng::new(8);
+        let mut k = PureRustKernel;
+        let mut e = est(Policy::Tuned { rep: 50 });
+        let before = e.expected_wait();
+        for _ in 0..200 {
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, 60_000, &mut k, &mut rng);
+        }
+        assert!(e.expected_wait() > before);
+        assert!((e.expected_wait() - 60_000.0).abs() < 10_000.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! The multiplicative-update compute kernel abstraction.
+//!
+//! Algorithm 1's line-7 update, `p ← e^{−γ·ℓ} ⊙ p / N`, is the numeric hot
+//! spot of the system: it runs for every observation of every tracked job
+//! geometry, is re-applied `rep` times per observation under the *tuned*
+//! policy, and millions of times in the convergence/regret sweeps. The
+//! update is therefore pluggable:
+//!
+//! * [`PureRustKernel`] — the reference implementation (f64).
+//! * `runtime::XlaKernel` — the AOT-compiled JAX/Pallas artifact executed
+//!   through PJRT (f32), loaded from `artifacts/` (see `python/compile/`).
+//!
+//! Both must agree to within f32 tolerance; `rust/tests/runtime_xla.rs`
+//! cross-checks them.
+
+/// A batched exponential-weights update backend.
+pub trait UpdateKernel {
+    /// In-place update of one probability row:
+    /// `p[i] ← p[i]·exp(−gamma·loss[i])`, then renormalise to Σp = 1.
+    fn update(&mut self, p: &mut [f64], loss: &[f64], gamma: f64);
+
+    /// Batched update over `rows` independent (p, loss, gamma) triples, all
+    /// of width `m`. `p` has `rows*m` elements, as does `loss`.
+    /// Default: loop over [`UpdateKernel::update`].
+    fn update_batch(&mut self, m: usize, p: &mut [f64], loss: &[f64], gamma: &[f64]) {
+        assert_eq!(p.len() % m, 0);
+        assert_eq!(p.len(), loss.len());
+        let rows = p.len() / m;
+        assert_eq!(rows, gamma.len());
+        for r in 0..rows {
+            let (ps, ls) = (&mut p[r * m..(r + 1) * m], &loss[r * m..(r + 1) * m]);
+            self.update(ps, ls, gamma[r]);
+        }
+    }
+
+    /// Expected waiting time under `p` for grid `values` (Σ pᵢ·vᵢ).
+    fn expected_value(&mut self, p: &[f64], values: &[f64]) -> f64 {
+        p.iter().zip(values).map(|(a, b)| a * b).sum()
+    }
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Probability floor applied after every update. Keeps every alternative
+/// reachable (the paper's "it still allows ASA to keep exploring the
+/// interval space"): without it, repeated multiplicative punishment
+/// underflows an action's mass to exactly zero and no later evidence can
+/// resurrect it. The AOT kernel applies the same floor (f32-safe).
+pub const P_FLOOR: f64 = 1e-6;
+
+/// Reference implementation in plain rust (f64).
+#[derive(Debug, Default, Clone)]
+pub struct PureRustKernel;
+
+impl UpdateKernel for PureRustKernel {
+    fn update(&mut self, p: &mut [f64], loss: &[f64], gamma: f64) {
+        debug_assert_eq!(p.len(), loss.len());
+        debug_assert!(gamma >= 0.0);
+        // Fast path for the paper's 0/1 loss (eq. 3): one exp() instead of
+        // m of them (measured ~3× on the update micro-bench, see
+        // EXPERIMENTS.md §Perf).
+        let zero_one = loss.iter().all(|&l| l == 0.0 || l == 1.0);
+        let mut norm = 0.0;
+        if zero_one {
+            let punish = (-gamma).exp();
+            for (pi, &li) in p.iter_mut().zip(loss) {
+                if li != 0.0 {
+                    *pi *= punish;
+                }
+                norm += *pi;
+            }
+        } else {
+            for (pi, &li) in p.iter_mut().zip(loss) {
+                *pi *= (-gamma * li).exp();
+                norm += *pi;
+            }
+        }
+        if norm <= f64::MIN_POSITIVE {
+            // Degenerate: all mass vanished (enormous losses). Reset to
+            // uniform rather than emitting NaNs — matches the algorithm's
+            // "resetting when bad estimates are detected" behaviour (§5).
+            let u = 1.0 / p.len() as f64;
+            p.iter_mut().for_each(|x| *x = u);
+            return;
+        }
+        // Normalise, floor, renormalise (floor mass is ≤ m·P_FLOOR ≪ 1).
+        let mut norm2 = 0.0;
+        for pi in p.iter_mut() {
+            *pi = (*pi / norm).max(P_FLOOR);
+            norm2 += *pi;
+        }
+        p.iter_mut().for_each(|x| *x /= norm2);
+    }
+
+    fn name(&self) -> &'static str {
+        "pure-rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(m: usize) -> Vec<f64> {
+        vec![1.0 / m as f64; m]
+    }
+
+    #[test]
+    fn update_preserves_normalisation() {
+        let mut k = PureRustKernel;
+        let mut p = uniform(53);
+        let mut loss = vec![1.0; 53];
+        loss[7] = 0.0;
+        k.update(&mut p, &loss, 0.5);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(p[7] > p[8], "unpunished action gains mass");
+    }
+
+    #[test]
+    fn zero_gamma_is_identity() {
+        let mut k = PureRustKernel;
+        let mut p = vec![0.2, 0.3, 0.5];
+        let before = p.clone();
+        k.update(&mut p, &[1.0, 0.0, 1.0], 0.0);
+        for (a, b) in p.iter().zip(&before) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_updates_concentrate_mass() {
+        let mut k = PureRustKernel;
+        let mut p = uniform(10);
+        let mut loss = vec![1.0; 10];
+        loss[3] = 0.0;
+        for _ in 0..200 {
+            k.update(&mut p, &loss, 0.3);
+        }
+        assert!(p[3] > 0.999, "p[3]={}", p[3]);
+    }
+
+    #[test]
+    fn degenerate_mass_resets_to_uniform() {
+        let mut k = PureRustKernel;
+        let mut p = vec![1e-308, 1e-308];
+        k.update(&mut p, &[2000.0, 2000.0], 1.0);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut k = PureRustKernel;
+        let m = 5;
+        let mut p1 = vec![0.1, 0.2, 0.3, 0.25, 0.15];
+        let mut p2 = vec![0.3, 0.3, 0.2, 0.1, 0.1];
+        let l1 = vec![0.0, 1.0, 1.0, 1.0, 1.0];
+        let l2 = vec![1.0, 1.0, 0.0, 1.0, 1.0];
+        let mut expect1 = p1.clone();
+        let mut expect2 = p2.clone();
+        k.update(&mut expect1, &l1, 0.7);
+        k.update(&mut expect2, &l2, 0.9);
+
+        let mut batch: Vec<f64> = p1.drain(..).chain(p2.drain(..)).collect();
+        let loss: Vec<f64> = l1.into_iter().chain(l2).collect();
+        k.update_batch(m, &mut batch, &loss, &[0.7, 0.9]);
+        for (a, b) in batch.iter().zip(expect1.iter().chain(expect2.iter())) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn expected_value_dot_product() {
+        let mut k = PureRustKernel;
+        let v = k.expected_value(&[0.5, 0.5], &[10.0, 20.0]);
+        assert!((v - 15.0).abs() < 1e-12);
+    }
+}

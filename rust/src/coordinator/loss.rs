@@ -1,0 +1,94 @@
+//! Loss functions scoring a sampled waiting-time action against the
+//! realised queue wait.
+
+use crate::coordinator::actions::ActionGrid;
+use crate::Time;
+
+/// Which loss to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// Paper eq. 3: 0 iff the sampled action is the grid's closest
+    /// alternative to the realised wait, else 1.
+    ZeroOne,
+    /// Graded ablation: loss grows with log-distance between the action and
+    /// the realised wait, clipped to [0, 1]. (Paper: "more complex functions
+    /// could be used".)
+    Graded,
+}
+
+/// Loss of taking `action` (grid index) when the realised wait was `wait`.
+pub fn loss(kind: LossKind, grid: &ActionGrid, action: usize, wait: Time) -> f64 {
+    match kind {
+        LossKind::ZeroOne => {
+            if grid.closest(wait) == action {
+                0.0
+            } else {
+                1.0
+            }
+        }
+        LossKind::Graded => {
+            let a = (grid.value(action) as f64 + 1.0).ln();
+            let w = (wait.max(0) as f64 + 1.0).ln();
+            // One decade of error ⇒ full loss.
+            ((a - w).abs() / std::f64::consts::LN_10).min(1.0)
+        }
+    }
+}
+
+/// Full loss vector over the grid for one realised wait. The optimal action
+/// scores 0; under `ZeroOne` every other action scores 1 (this is the
+/// vector the *tuned* policy re-applies, and what the batched L1/L2 kernel
+/// consumes).
+pub fn loss_vector(kind: LossKind, grid: &ActionGrid, wait: Time) -> Vec<f64> {
+    (0..grid.len()).map(|a| loss(kind, grid, a, wait)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_one_is_zero_only_at_closest() {
+        let g = ActionGrid::paper();
+        let w = 137; // closest grid point is 150
+        let best = g.closest(w);
+        for a in 0..g.len() {
+            let l = loss(LossKind::ZeroOne, &g, a, w);
+            if a == best {
+                assert_eq!(l, 0.0);
+            } else {
+                assert_eq!(l, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn graded_increases_with_distance() {
+        let g = ActionGrid::paper();
+        let w = 100;
+        let at = |idx: usize| loss(LossKind::Graded, &g, idx, w);
+        let i100 = g.closest(100);
+        assert!(at(i100) < 0.05);
+        assert!(at(i100 + 4) > at(i100 + 1));
+        assert!(at(g.len() - 1) == 1.0); // 100k vs 100 s: ≥ 1 decade
+    }
+
+    #[test]
+    fn loss_vector_has_single_zero_under_zero_one() {
+        let g = ActionGrid::paper();
+        let v = loss_vector(LossKind::ZeroOne, &g, 5000);
+        assert_eq!(v.len(), g.len());
+        assert_eq!(v.iter().filter(|&&x| x == 0.0).count(), 1);
+        assert_eq!(v.iter().filter(|&&x| x == 1.0).count(), g.len() - 1);
+    }
+
+    #[test]
+    fn graded_vector_bounded() {
+        let g = ActionGrid::paper();
+        for &w in &[0, 7, 1000, 99_999] {
+            for l in loss_vector(LossKind::Graded, &g, w) {
+                assert!((0.0..=1.0).contains(&l));
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The paper's contribution: the Adaptive Scheduling Algorithm and the
+//! proactive submission machinery around it.
+//!
+//! * [`actions`] — the discretised waiting-time alternatives (m = 53, §4.3).
+//! * [`loss`] — the 0/1 "closest alternative" loss (eq. 3) + graded variant.
+//! * [`asa`] — Algorithm 1: exponential-weights over minibatch *rounds*
+//!   with the non-increasing γ_t schedule (convergence per Appendix A).
+//! * [`policy`] — sampling policies: Default, Tuned (repetition parameter),
+//!   Greedy (Fig. 5's three curves).
+//! * [`kernel`] — the multiplicative-update compute kernel abstraction:
+//!   pure-rust reference and (via [`crate::runtime`]) the AOT-compiled
+//!   JAX/Pallas artifact.
+//! * [`state`] — per-job-geometry estimator store, shared across runs and
+//!   persistable to JSON (paper §4.3: "Algorithm 1's state is kept across
+//!   different runs").
+//! * [`strategy`] — the proactive ASA submission strategy (and its Naïve
+//!   variant) driving workflows over the simulator.
+//! * [`pool`] — the Mesos-like unified resource pool (paper §3.1).
+//! * [`contextual`] — the paper's §6 future-work extension: queue-state-
+//!   conditioned estimation (a bank of Algorithm-1 instances per context).
+
+pub mod actions;
+pub mod loss;
+pub mod asa;
+pub mod policy;
+pub mod kernel;
+pub mod state;
+pub mod strategy;
+pub mod pool;
+pub mod contextual;
+
+pub use actions::ActionGrid;
+pub use asa::{AsaConfig, AsaEstimator};
+pub use kernel::{PureRustKernel, UpdateKernel};
+pub use policy::Policy;
+pub use state::{AsaStore, GeometryKey};

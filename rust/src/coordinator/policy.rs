@@ -1,0 +1,61 @@
+//! Sampling policies — the three curves of Fig. 5.
+
+/// How the estimator chooses the next waiting-time action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Algorithm 1 verbatim: sample `a ~ p_t` every time. Explores
+    /// persistently; converges slowly and re-converges slowly after regime
+    /// changes (the black curve).
+    Default,
+    /// The paper's tuned policy: after each observation the loss vector is
+    /// "randomly and repeatedly" re-applied up to `rep` times (the pink
+    /// curve; §4.5 uses rep = 50 and warns large values bias ASA towards
+    /// the last observed waiting time).
+    Tuned { rep: u32 },
+    /// Always exploit: pick the action with the lowest cumulative loss.
+    /// With the 0/1 loss this gets stuck in a local minimum when the true
+    /// wait drops (the red curve: "behaving as if the algorithm was not
+    /// used at all").
+    Greedy,
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Default => "default".into(),
+            Policy::Tuned { rep } => format!("tuned(rep={rep})"),
+            Policy::Greedy => "greedy".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "default" => Some(Policy::Default),
+            "greedy" => Some(Policy::Greedy),
+            "tuned" => Some(Policy::Tuned { rep: 50 }),
+            other => other
+                .strip_prefix("tuned:")
+                .and_then(|r| r.parse().ok())
+                .map(|rep| Policy::Tuned { rep }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Policy::parse("default"), Some(Policy::Default));
+        assert_eq!(Policy::parse("greedy"), Some(Policy::Greedy));
+        assert_eq!(Policy::parse("tuned"), Some(Policy::Tuned { rep: 50 }));
+        assert_eq!(Policy::parse("tuned:7"), Some(Policy::Tuned { rep: 7 }));
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Policy::Tuned { rep: 50 }.name(), "tuned(rep=50)");
+    }
+}

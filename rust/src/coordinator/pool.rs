@@ -1,0 +1,268 @@
+//! The unified resource-pool layer (paper §3.1, Fig. 3).
+//!
+//! ASA's architecture presents the application with *one global pool of
+//! resources* spanning all of its live batch allocations (the Mesos-derived
+//! "Unified View"). Tasks are placed onto any allocation with free cores,
+//! can fail and be migrated, and allocations can disappear (stage jobs end,
+//! get cancelled) with their tasks re-queued — the fault-tolerance and
+//! elasticity features §3.1 describes.
+
+use crate::simulator::JobId;
+use crate::Cores;
+use std::collections::HashMap;
+
+/// Task identifier within the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+/// Lifecycle of a pool task (the Mesos task states the WMS observes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting for capacity.
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    /// Its allocation vanished; awaiting migration.
+    Orphaned,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    cores: Cores,
+    state: TaskState,
+    placed_on: Option<JobId>,
+}
+
+#[derive(Clone, Debug)]
+struct Alloc {
+    cores: Cores,
+    free: Cores,
+}
+
+/// The unified view over all live allocations of one application.
+#[derive(Debug, Default)]
+pub struct ResourcePool {
+    allocs: HashMap<JobId, Alloc>,
+    tasks: HashMap<TaskId, Task>,
+    queue: Vec<TaskId>,
+    next_task: u64,
+}
+
+impl ResourcePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A batch allocation became available to the application.
+    pub fn register_allocation(&mut self, job: JobId, cores: Cores) {
+        let prev = self.allocs.insert(job, Alloc { cores, free: cores });
+        assert!(prev.is_none(), "allocation {job:?} registered twice");
+        self.drain_queue();
+    }
+
+    /// An allocation ended; running tasks on it become orphaned and are
+    /// re-queued for migration onto remaining capacity.
+    pub fn release_allocation(&mut self, job: JobId) -> Vec<TaskId> {
+        if self.allocs.remove(&job).is_none() {
+            return Vec::new();
+        }
+        let mut orphaned = Vec::new();
+        for (&tid, task) in self.tasks.iter_mut() {
+            if task.placed_on == Some(job) && task.state == TaskState::Running {
+                task.state = TaskState::Orphaned;
+                task.placed_on = None;
+                orphaned.push(tid);
+            }
+        }
+        orphaned.sort_unstable();
+        for &tid in &orphaned {
+            self.queue.push(tid);
+        }
+        self.drain_queue();
+        orphaned
+    }
+
+    /// Submit a task needing `cores`; it is placed immediately if any
+    /// allocation has room, else queued.
+    pub fn launch(&mut self, cores: Cores) -> TaskId {
+        let tid = TaskId(self.next_task);
+        self.next_task += 1;
+        self.tasks.insert(
+            tid,
+            Task {
+                cores,
+                state: TaskState::Queued,
+                placed_on: None,
+            },
+        );
+        self.queue.push(tid);
+        self.drain_queue();
+        tid
+    }
+
+    fn place(&mut self, tid: TaskId) -> bool {
+        let need = self.tasks[&tid].cores;
+        // Best-fit: the allocation with the least free cores that still fits
+        // (reduces fragmentation across stage allocations).
+        let target = self
+            .allocs
+            .iter()
+            .filter(|(_, a)| a.free >= need)
+            .min_by_key(|(job, a)| (a.free, job.0))
+            .map(|(&job, _)| job);
+        match target {
+            Some(job) => {
+                self.allocs.get_mut(&job).unwrap().free -= need;
+                let task = self.tasks.get_mut(&tid).unwrap();
+                task.placed_on = Some(job);
+                task.state = TaskState::Running;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn drain_queue(&mut self) {
+        let mut remaining = Vec::new();
+        let queue = std::mem::take(&mut self.queue);
+        for tid in queue {
+            let state = self.tasks[&tid].state;
+            if matches!(state, TaskState::Queued | TaskState::Orphaned) && !self.place(tid) {
+                remaining.push(tid);
+            }
+        }
+        self.queue = remaining;
+    }
+
+    fn finish(&mut self, tid: TaskId, state: TaskState) {
+        let task = self.tasks.get_mut(&tid).expect("unknown task");
+        if let Some(job) = task.placed_on.take() {
+            if let Some(alloc) = self.allocs.get_mut(&job) {
+                alloc.free += task.cores;
+            }
+        }
+        task.state = state;
+        self.drain_queue();
+    }
+
+    /// Mark a running task completed, freeing its cores.
+    pub fn complete(&mut self, tid: TaskId) {
+        assert_eq!(self.state(tid), Some(TaskState::Running));
+        self.finish(tid, TaskState::Completed);
+    }
+
+    /// Mark a running task failed; `retry` relaunches it (the Mesos
+    /// framework "migrate a failed task to another resource" action).
+    pub fn fail(&mut self, tid: TaskId, retry: bool) -> Option<TaskId> {
+        assert_eq!(self.state(tid), Some(TaskState::Running));
+        let cores = self.tasks[&tid].cores;
+        self.finish(tid, TaskState::Failed);
+        if retry {
+            Some(self.launch(cores))
+        } else {
+            None
+        }
+    }
+
+    pub fn state(&self, tid: TaskId) -> Option<TaskState> {
+        self.tasks.get(&tid).map(|t| t.state)
+    }
+
+    pub fn total_cores(&self) -> Cores {
+        self.allocs.values().map(|a| a.cores).sum()
+    }
+
+    pub fn free_cores(&self) -> Cores {
+        self.allocs.values().map(|a| a.free).sum()
+    }
+
+    pub fn queued_tasks(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_tasks(&self) -> usize {
+        self.tasks
+            .values()
+            .filter(|t| t.state == TaskState::Running)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_place_across_allocations() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 10);
+        pool.register_allocation(JobId(2), 10);
+        let a = pool.launch(8);
+        let b = pool.launch(8);
+        assert_eq!(pool.state(a), Some(TaskState::Running));
+        assert_eq!(pool.state(b), Some(TaskState::Running));
+        assert_eq!(pool.free_cores(), 4);
+        let c = pool.launch(8);
+        assert_eq!(pool.state(c), Some(TaskState::Queued));
+        pool.complete(a);
+        assert_eq!(pool.state(c), Some(TaskState::Running));
+    }
+
+    #[test]
+    fn best_fit_packs_tightest_allocation() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 100);
+        pool.register_allocation(JobId(2), 10);
+        let t = pool.launch(10);
+        assert_eq!(pool.state(t), Some(TaskState::Running));
+        // Task should land on the 10-core allocation, leaving 100 free.
+        assert_eq!(pool.free_cores(), 100);
+    }
+
+    #[test]
+    fn released_allocation_orphans_and_migrates() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 4);
+        pool.register_allocation(JobId(2), 4);
+        let t = pool.launch(4);
+        let u = pool.launch(4);
+        assert_eq!(pool.running_tasks(), 2);
+        // Find which allocation t landed on and release the other's twin.
+        let orphans = pool.release_allocation(JobId(1));
+        // Exactly one of t,u was on JobId(1); it should re-queue, and with
+        // JobId(2) full it stays queued until the other finishes.
+        assert_eq!(orphans.len(), 1);
+        assert_eq!(pool.queued_tasks(), 1);
+        let survivor = if orphans[0] == t { u } else { t };
+        pool.complete(survivor);
+        assert_eq!(pool.state(orphans[0]), Some(TaskState::Running));
+    }
+
+    #[test]
+    fn failed_task_can_retry() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 2);
+        let t = pool.launch(2);
+        let retry = pool.fail(t, true).unwrap();
+        assert_eq!(pool.state(t), Some(TaskState::Failed));
+        assert_eq!(pool.state(retry), Some(TaskState::Running));
+    }
+
+    #[test]
+    fn fail_without_retry() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 2);
+        let t = pool.launch(2);
+        assert!(pool.fail(t, false).is_none());
+        assert_eq!(pool.free_cores(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn double_registration_panics() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 2);
+        pool.register_allocation(JobId(1), 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! Cross-run estimator store, keyed by job geometry.
+//!
+//! Paper §4.3: "Algorithm 1's state is kept across different runs … shared
+//! among the different workflow submissions", and §4.8/§5 report that the
+//! sharing is "in a per job-geometry basis". A geometry is (system, cores).
+//! The store persists to JSON so campaigns can be resumed and inspected.
+
+use crate::coordinator::asa::{AsaConfig, AsaEstimator};
+use crate::util::json::Json;
+use crate::Cores;
+use std::collections::BTreeMap;
+
+/// Estimator key: one learning state per (system, requested cores).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GeometryKey {
+    pub system: String,
+    pub cores: Cores,
+}
+
+impl GeometryKey {
+    pub fn new(system: &str, cores: Cores) -> Self {
+        GeometryKey {
+            system: system.to_string(),
+            cores,
+        }
+    }
+
+    fn tag(&self) -> String {
+        format!("{}:{}", self.system, self.cores)
+    }
+
+    fn parse(tag: &str) -> Option<Self> {
+        let (system, cores) = tag.rsplit_once(':')?;
+        Some(GeometryKey {
+            system: system.to_string(),
+            cores: cores.parse().ok()?,
+        })
+    }
+}
+
+/// All live estimators for a campaign.
+pub struct AsaStore {
+    cfg: AsaConfig,
+    map: BTreeMap<GeometryKey, AsaEstimator>,
+}
+
+impl AsaStore {
+    pub fn new(cfg: AsaConfig) -> Self {
+        AsaStore {
+            cfg,
+            map: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &AsaConfig {
+        &self.cfg
+    }
+
+    /// Get or create the estimator for a geometry.
+    pub fn estimator(&mut self, key: &GeometryKey) -> &mut AsaEstimator {
+        let cfg = self.cfg.clone();
+        self.map
+            .entry(key.clone())
+            .or_insert_with(|| AsaEstimator::new(cfg))
+    }
+
+    pub fn get(&self, key: &GeometryKey) -> Option<&AsaEstimator> {
+        self.map.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &GeometryKey> {
+        self.map.keys()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (key, est) in &self.map {
+            obj.set(&key.tag(), est.to_json());
+        }
+        obj
+    }
+
+    /// Restore a store persisted with [`AsaStore::to_json`]. Geometries with
+    /// incompatible grids are skipped (reported in the error list).
+    pub fn restore(cfg: AsaConfig, j: &Json) -> (Self, Vec<String>) {
+        let mut store = AsaStore::new(cfg.clone());
+        let mut errors = Vec::new();
+        if let Json::Obj(entries) = j {
+            for (tag, sub) in entries {
+                match GeometryKey::parse(tag) {
+                    Some(key) => match AsaEstimator::restore(cfg.clone(), sub) {
+                        Ok(est) => {
+                            store.map.insert(key, est);
+                        }
+                        Err(e) => errors.push(format!("{tag}: {e}")),
+                    },
+                    None => errors.push(format!("bad geometry tag {tag:?}")),
+                }
+            }
+        } else {
+            errors.push("store JSON is not an object".into());
+        }
+        (store, errors)
+    }
+
+    pub fn save_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    pub fn load_file(
+        cfg: AsaConfig,
+        path: &std::path::Path,
+    ) -> std::io::Result<(Self, Vec<String>)> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        Ok(Self::restore(cfg, &j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::PureRustKernel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn geometry_tags_round_trip() {
+        let k = GeometryKey::new("hpc2n", 112);
+        assert_eq!(GeometryKey::parse(&k.tag()), Some(k));
+        assert!(GeometryKey::parse("no-cores").is_none());
+    }
+
+    #[test]
+    fn estimators_are_shared_per_geometry() {
+        let mut store = AsaStore::new(AsaConfig::default());
+        let key = GeometryKey::new("uppmax", 320);
+        let mut rng = Rng::new(1);
+        let mut kern = PureRustKernel;
+        {
+            let e = store.estimator(&key);
+            let (a, _) = e.sample_wait(&mut rng);
+            e.observe(a, 9000, &mut kern, &mut rng);
+        }
+        // Same key → same estimator with history.
+        assert_eq!(store.estimator(&key).observations(), 1);
+        // Different cores → fresh estimator.
+        let other = GeometryKey::new("uppmax", 640);
+        assert_eq!(store.estimator(&other).observations(), 0);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn store_round_trips_through_json() {
+        let mut store = AsaStore::new(AsaConfig::default());
+        let mut rng = Rng::new(2);
+        let mut kern = PureRustKernel;
+        for cores in [28, 56, 112] {
+            let key = GeometryKey::new("hpc2n", cores);
+            let e = store.estimator(&key);
+            for _ in 0..10 {
+                let (a, _) = e.sample_wait(&mut rng);
+                e.observe(a, 300, &mut kern, &mut rng);
+            }
+        }
+        let j = store.to_json();
+        let (restored, errs) = AsaStore::restore(AsaConfig::default(), &j);
+        assert!(errs.is_empty(), "{errs:?}");
+        assert_eq!(restored.len(), 3);
+        let key = GeometryKey::new("hpc2n", 56);
+        assert_eq!(
+            restored.get(&key).unwrap().observations(),
+            store.get(&key).unwrap().observations()
+        );
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut store = AsaStore::new(AsaConfig::default());
+        let key = GeometryKey::new("hpc2n", 28);
+        store.estimator(&key);
+        let path = std::env::temp_dir().join(format!("asa-store-{}.json", std::process::id()));
+        store.save_file(&path).unwrap();
+        let (loaded, errs) = AsaStore::load_file(AsaConfig::default(), &path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(errs.is_empty());
+        assert_eq!(loaded.len(), 1);
+    }
+}

@@ -1,0 +1,308 @@
+//! Table 2 — prediction accuracy per job geometry.
+//!
+//! Each workflow's job geometry is submitted 60 times, one minute apart
+//! (paper §4.8); for every submission ASA predicts the wait beforehand and
+//! learns from the realised wait. Reported per geometry: mean real WT,
+//! mean predicted WT, mean perceived WT, hit/miss ratios and the core-hour
+//! overhead (OH) a proactive submission would have incurred on misses.
+//!
+//! Hit/miss semantics (paper §4.8): a *miss* is an over-prediction — the
+//! allocation would have been granted before the previous stage finished,
+//! forcing a cancel + resubmit and charging idle head time; a *hit* means
+//! the prediction was at or below the realised wait, so the stage starts
+//! with perceived wait `real − predicted ≥ 0` and zero overhead.
+
+use crate::coordinator::asa::AsaConfig;
+use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::state::{AsaStore, GeometryKey};
+use crate::simulator::{JobSpec, SimEvent, Simulator, SystemConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use crate::{Cores, Time};
+
+/// Accuracy results for one (workflow, geometry).
+#[derive(Clone, Debug)]
+pub struct GeometryAccuracy {
+    pub workflow: &'static str,
+    pub system: &'static str,
+    pub cores: Cores,
+    pub real_wt: Summary,
+    pub asa_wt: Summary,
+    pub perceived_wt: Summary,
+    pub hits: u32,
+    pub misses: u32,
+    /// Core-hour overhead across missed submissions.
+    pub oh_hours: Summary,
+}
+
+impl GeometryAccuracy {
+    pub fn hit_ratio(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+}
+
+/// Run the 60-probe experiment for one workflow geometry.
+///
+/// `probe_runtime` approximates the workflow's first-stage duration so the
+/// probes have realistic backfill behaviour.
+pub fn probe_geometry(
+    sim: &mut Simulator,
+    store: &mut AsaStore,
+    kernel: &mut dyn UpdateKernel,
+    rng: &mut Rng,
+    workflow: &'static str,
+    cores: Cores,
+    probe_runtime: Time,
+    probes: usize,
+    spacing: Time,
+) -> GeometryAccuracy {
+    let system = sim.config().name;
+    let key = GeometryKey::new(system, cores);
+    let mut acc = GeometryAccuracy {
+        workflow,
+        system,
+        cores,
+        real_wt: Summary::new(),
+        asa_wt: Summary::new(),
+        perceived_wt: Summary::new(),
+        hits: 0,
+        misses: 0,
+        oh_hours: Summary::new(),
+    };
+    let user = 7;
+    // How long an early allocation idles before the coordinator notices and
+    // cancels it (one WMS polling epoch) — the charge a miss incurs.
+    const CANCEL_LATENCY: Time = 600;
+    // A grant this little early needs no resubmission (it lands within one
+    // scheduling epoch of the need date): counted as a hit.
+    const HIT_TOLERANCE: Time = 120;
+    // Submit probes on the 1-minute cadence, predicting before each and
+    // *learning from every start event as it happens* — ASA is an online
+    // learner, so predictions for later probes already reflect the waits
+    // of earlier ones. A probe is cancelled the moment it starts (its wait
+    // is the measurement); otherwise 60 peak-geometry allocations would
+    // stack up and measure their own self-induced congestion.
+    let mut pending: std::collections::HashMap<crate::simulator::JobId, (usize, Time)> =
+        Default::default();
+    let t0 = sim.now();
+    let mut done = 0usize;
+    let score = |acc: &mut GeometryAccuracy,
+                     store: &mut AsaStore,
+                     rng: &mut Rng,
+                     kernel: &mut dyn UpdateKernel,
+                     action: usize,
+                     predicted: Time,
+                     real: Time| {
+        store.estimator(&key).observe(action, real, kernel, rng);
+        acc.real_wt.add(real as f64 / 3600.0);
+        acc.asa_wt.add(predicted as f64 / 3600.0);
+        if predicted > real + HIT_TOLERANCE {
+            acc.misses += 1;
+            let idle = (predicted - real).min(CANCEL_LATENCY);
+            acc.oh_hours.add(idle as f64 * cores as f64 / 3600.0);
+            acc.perceived_wt.add(0.0);
+        } else {
+            acc.hits += 1;
+            acc.perceived_wt.add(((real - predicted).max(0)) as f64 / 3600.0);
+        }
+    };
+    for i in 0..probes {
+        // Drain observable events up to this probe's submission instant.
+        while let Some(ev) = sim.step_until(t0 + i as Time * spacing) {
+            if let SimEvent::Started { id, time } = ev {
+                if let Some((action, predicted)) = pending.remove(&id) {
+                    let real = time - sim.job(id).submit_time;
+                    sim.cancel(id);
+                    score(&mut acc, store, rng, kernel, action, predicted, real);
+                    done += 1;
+                }
+            }
+        }
+        let (action, predicted) = store.estimator(&key).sample_wait(rng);
+        let id = sim.submit(JobSpec::new(
+            user,
+            format!("{workflow}-probe{i}"),
+            cores,
+            probe_runtime,
+        ));
+        pending.insert(id, (action, predicted));
+    }
+    // Collect the tail.
+    let deadline = sim.now() + 30 * 24 * 3600;
+    while done < probes {
+        match sim.step_until(deadline) {
+            Some(SimEvent::Started { id, time }) => {
+                if let Some((action, predicted)) = pending.remove(&id) {
+                    let real = time - sim.job(id).submit_time;
+                    sim.cancel(id);
+                    score(&mut acc, store, rng, kernel, action, predicted, real);
+                    done += 1;
+                }
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    acc
+}
+
+/// The full Table-2 experiment across all workflows and scalings.
+pub fn run_table2(probes: usize, seed: u64, kernel: &mut dyn UpdateKernel) -> Vec<GeometryAccuracy> {
+    let mut out = Vec::new();
+    for (sys_name, scales) in [("hpc2n", [28u32, 56, 112]), ("uppmax", [160, 320, 640])] {
+        let system = SystemConfig::by_name(sys_name).unwrap();
+        for workflow in ["montage", "blast", "statistics"] {
+            let wf = crate::workflow::apps::by_name(workflow).unwrap();
+            let mut store = AsaStore::new(AsaConfig::default());
+            for &cores in &scales {
+                let mut sim = Simulator::new(system.clone(), seed ^ cores as u64);
+                sim.run_until(6 * 3600);
+                let mut rng = Rng::new(seed ^ 0xacc ^ cores as u64);
+                // The probed geometry is the workflow's peak job shape: its
+                // scaling in cores and its full execution time (these are
+                // the "job geometries related to each workflow", §4.8).
+                let probe_runtime = wf.total_exec(cores, system.cores_per_node);
+                // Warm-up (unrecorded): the paper's estimator state is kept
+                // across runs, so probes never start from a cold uniform.
+                probe_geometry(
+                    &mut sim, &mut store, kernel, &mut rng, workflow, cores,
+                    probe_runtime, 10, 60,
+                );
+                out.push(probe_geometry(
+                    &mut sim,
+                    &mut store,
+                    kernel,
+                    &mut rng,
+                    workflow,
+                    cores,
+                    probe_runtime,
+                    probes,
+                    60,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Render Table 2.
+pub fn table2(rows: &[GeometryAccuracy]) -> Table {
+    let mut t = Table::new([
+        "workflow", "cores", "Real WT (h)", "ASA WT (h)", "ASA PWT (h)",
+        "Hit %", "Miss %", "OH loss (h)",
+    ]);
+    for r in rows {
+        t.row([
+            r.workflow.to_string(),
+            format!("{}", r.cores),
+            r.real_wt.pm(1),
+            r.asa_wt.pm(1),
+            r.perceived_wt.pm(1),
+            format!("{:.0}", r.hit_ratio() * 100.0),
+            format!("{:.0}", (1.0 - r.hit_ratio()) * 100.0),
+            if r.misses == 0 {
+                "0".into()
+            } else {
+                format!("{:.1}±{:.1}", r.oh_hours.mean(), r.oh_hours.std())
+            },
+        ]);
+    }
+    t
+}
+
+pub fn to_json(rows: &[GeometryAccuracy]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("workflow", r.workflow)
+                    .with("system", r.system)
+                    .with("cores", r.cores)
+                    .with("real_wt_h", r.real_wt.mean())
+                    .with("real_wt_std", r.real_wt.std())
+                    .with("asa_wt_h", r.asa_wt.mean())
+                    .with("pwt_h", r.perceived_wt.mean())
+                    .with("hit_ratio", r.hit_ratio())
+                    .with("oh_hours", r.oh_hours.total())
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::PureRustKernel;
+
+    #[test]
+    fn probes_learn_and_classify() {
+        let mut system = SystemConfig::testbed(32, 28);
+        system.workload = crate::simulator::trace::WorkloadProfile::quiet();
+        let mut sim = Simulator::new(system, 5);
+        let mut store = AsaStore::new(AsaConfig::default());
+        let mut kernel = PureRustKernel;
+        let mut rng = Rng::new(6);
+        let acc = probe_geometry(
+            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 28, 300, 10, 60,
+        );
+        assert_eq!(acc.hits + acc.misses, 10);
+        assert_eq!(acc.real_wt.count(), 10);
+        // Estimator accumulated the observations.
+        let key = GeometryKey::new("testbed", 28);
+        assert_eq!(store.get(&key).unwrap().observations(), 10);
+    }
+
+    #[test]
+    fn quiet_machine_converges_to_high_hits() {
+        // On an idle machine the real wait is ~0; ASA learns tiny waits and
+        // predictions at the grid floor (1s)... which still over-predict a
+        // 0-second wait. This documents that misses concentrate at the grid
+        // floor — the paper's small-geometry behaviour.
+        let mut system = SystemConfig::testbed(32, 28);
+        system.workload = crate::simulator::trace::WorkloadProfile::quiet();
+        let mut sim = Simulator::new(system, 8);
+        let mut store = AsaStore::new(AsaConfig::default());
+        let mut kernel = PureRustKernel;
+        let mut rng = Rng::new(9);
+        let acc = probe_geometry(
+            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 14, 300, 20, 60,
+        );
+        // All probes got measured, and the estimator learned that this
+        // machine's waits are tiny: its posterior concentrates at the grid
+        // floor (cold-start samples early on may still over-predict — the
+        // paper's small-geometry OH behaviour).
+        assert_eq!(acc.real_wt.count(), 20);
+        let key = GeometryKey::new("testbed", 14);
+        assert!(
+            store.get(&key).unwrap().expected_wait() < 60.0,
+            "expected_wait={}",
+            store.get(&key).unwrap().expected_wait()
+        );
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![GeometryAccuracy {
+            workflow: "montage",
+            system: "hpc2n",
+            cores: 28,
+            real_wt: Summary::of(&[0.4, 0.5]),
+            asa_wt: Summary::of(&[0.7, 0.6]),
+            perceived_wt: Summary::of(&[0.2]),
+            hits: 6,
+            misses: 4,
+            oh_hours: Summary::of(&[1.7]),
+        }];
+        let rendered = table2(&rows).render();
+        assert!(rendered.contains("montage"));
+        assert!(rendered.contains("60"));
+        assert!(to_json(&rows).as_arr().unwrap().len() == 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! Fig. 5 — convergence of ASA's waiting-time estimate under regime shifts.
+//!
+//! A 1000-iteration simulation where the true waiting time changes at
+//! iterations 0, 200, 400, 600 and 800; three sampling policies (Greedy,
+//! Default, Tuned rep=50) chase it. The output series are the per-iteration
+//! estimates (the sampled action's value) alongside the stepped truth.
+
+use crate::coordinator::asa::{AsaConfig, AsaEstimator};
+use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::policy::Policy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{ascii_chart, Table};
+use crate::Time;
+
+/// One policy's trajectory.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub policy: Policy,
+    /// Sampled estimate per iteration (seconds).
+    pub estimates: Vec<Time>,
+    /// Mode of p per iteration (the "converged" value).
+    pub modes: Vec<Time>,
+    /// Total loss incurred.
+    pub total_loss: f64,
+}
+
+/// The full Fig.-5 dataset.
+#[derive(Clone, Debug)]
+pub struct ConvergenceResult {
+    pub truth: Vec<Time>,
+    pub trajectories: Vec<Trajectory>,
+}
+
+/// Run the simulation. The truth sequence is drawn from the grid's range at
+/// the five shift points (seeded), observations are noiseless waits equal to
+/// the current truth (the paper's hypothetical scenario).
+pub fn run(iterations: usize, seed: u64, kernel: &mut dyn UpdateKernel) -> ConvergenceResult {
+    let mut truth_rng = Rng::new(seed);
+    // Five regime levels at 0,200,400,600,800 (scaled for other lengths).
+    let shift_every = (iterations / 5).max(1);
+    let levels: Vec<Time> = (0..5)
+        .map(|_| {
+            // Log-uniform over [30 s, 60 000 s]: spans the grid decades.
+            let lo = (30f64).ln();
+            let hi = (60_000f64).ln();
+            truth_rng.uniform(lo, hi).exp() as Time
+        })
+        .collect();
+    let truth: Vec<Time> = (0..iterations)
+        .map(|i| levels[(i / shift_every).min(4)])
+        .collect();
+
+    let policies = [
+        Policy::Greedy,
+        Policy::Default,
+        Policy::Tuned { rep: 50 },
+    ];
+    let mut trajectories = Vec::new();
+    for policy in policies {
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        let mut est = AsaEstimator::new(AsaConfig {
+            policy,
+            ..AsaConfig::default()
+        });
+        let mut estimates = Vec::with_capacity(iterations);
+        let mut modes = Vec::with_capacity(iterations);
+        let mut total_loss = 0.0;
+        for &w in &truth {
+            let (a, secs) = est.sample_wait(&mut rng);
+            estimates.push(secs);
+            total_loss += est.observe(a, w, kernel, &mut rng);
+            modes.push(est.best_wait());
+        }
+        trajectories.push(Trajectory {
+            policy,
+            estimates,
+            modes,
+            total_loss,
+        });
+    }
+    ConvergenceResult {
+        truth,
+        trajectories,
+    }
+}
+
+impl ConvergenceResult {
+    /// Render the figure as an ASCII chart (log-scale estimates).
+    pub fn chart(&self) -> String {
+        let logs = |xs: &[Time]| -> Vec<f64> {
+            xs.iter().map(|&x| (x.max(1) as f64).log10()).collect()
+        };
+        let truth = logs(&self.truth);
+        let series_data: Vec<(String, Vec<f64>)> = std::iter::once(("truth".to_string(), truth))
+            .chain(self.trajectories.iter().map(|t| {
+                (t.policy.name(), logs(&t.modes))
+            }))
+            .collect();
+        let series: Vec<(&str, &[f64])> = series_data
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect();
+        let mut out = String::from("Fig. 5 — estimate (log10 seconds) vs iteration\n");
+        out.push_str(&ascii_chart(&series, 100, 18));
+        out
+    }
+
+    /// Per-policy summary table: total loss and post-shift recovery time.
+    pub fn summary(&self) -> Table {
+        let mut t = Table::new(["policy", "total loss", "mean recovery (iters)", "final mode (s)"]);
+        let shift_every = (self.truth.len() / 5).max(1);
+        for traj in &self.trajectories {
+            // Recovery: iterations after each shift until the mode matches
+            // the grid point closest to the new truth.
+            let grid = crate::coordinator::actions::ActionGrid::paper();
+            let mut recoveries = Vec::new();
+            for k in 0..5 {
+                let start = k * shift_every;
+                if start >= self.truth.len() {
+                    break;
+                }
+                let target = grid.value(grid.closest(self.truth[start]));
+                let end = ((k + 1) * shift_every).min(self.truth.len());
+                let rec = (start..end)
+                    .position(|i| traj.modes[i] == target)
+                    .map(|x| x as f64)
+                    .unwrap_or((end - start) as f64);
+                recoveries.push(rec);
+            }
+            let mean_rec = recoveries.iter().sum::<f64>() / recoveries.len() as f64;
+            t.row([
+                traj.policy.name(),
+                format!("{:.0}", traj.total_loss),
+                format!("{mean_rec:.0}"),
+                format!("{}", traj.modes.last().copied().unwrap_or(0)),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj().with(
+            "truth",
+            Json::Arr(self.truth.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        let mut arr = Vec::new();
+        for t in &self.trajectories {
+            arr.push(
+                Json::obj()
+                    .with("policy", t.policy.name())
+                    .with("total_loss", t.total_loss)
+                    .with(
+                        "estimates",
+                        Json::Arr(t.estimates.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    )
+                    .with(
+                        "modes",
+                        Json::Arr(t.modes.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    ),
+            );
+        }
+        doc.set("trajectories", Json::Arr(arr));
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::PureRustKernel;
+
+    #[test]
+    fn tuned_beats_default_beats_nothing() {
+        let mut k = PureRustKernel;
+        let r = run(1000, 5, &mut k);
+        assert_eq!(r.trajectories.len(), 3);
+        let loss = |p: &str| {
+            r.trajectories
+                .iter()
+                .find(|t| t.policy.name().starts_with(p))
+                .unwrap()
+                .total_loss
+        };
+        // Tuned adapts fastest ⇒ lowest loss (Fig. 5's qualitative claim).
+        assert!(
+            loss("tuned") < loss("default"),
+            "tuned {} !< default {}",
+            loss("tuned"),
+            loss("default")
+        );
+    }
+
+    #[test]
+    fn truth_steps_five_times() {
+        let mut k = PureRustKernel;
+        let r = run(1000, 9, &mut k);
+        let mut distinct: Vec<Time> = r.truth.clone();
+        distinct.dedup();
+        assert!(distinct.len() >= 2 && distinct.len() <= 5);
+        assert_eq!(r.truth.len(), 1000);
+    }
+
+    #[test]
+    fn tuned_mode_tracks_final_truth() {
+        let mut k = PureRustKernel;
+        let r = run(1000, 5, &mut k);
+        let grid = crate::coordinator::actions::ActionGrid::paper();
+        let target = grid.value(grid.closest(*r.truth.last().unwrap()));
+        let tuned = r
+            .trajectories
+            .iter()
+            .find(|t| matches!(t.policy, Policy::Tuned { .. }))
+            .unwrap();
+        assert_eq!(*tuned.modes.last().unwrap(), target);
+    }
+
+    #[test]
+    fn chart_and_summary_render() {
+        let mut k = PureRustKernel;
+        let r = run(200, 1, &mut k);
+        assert!(r.chart().contains("truth"));
+        assert!(r.summary().render().contains("greedy"));
+        assert!(r.to_json().get("trajectories").is_some());
+    }
+}

@@ -1,0 +1,39 @@
+//! One driver per table/figure of the paper's evaluation (see DESIGN.md §4).
+//!
+//! * [`convergence`] — Fig. 5 (policy convergence under regime shifts).
+//! * [`campaign`] — Figs. 6–8 and Table 1 (the 54-run strategy comparison).
+//! * [`accuracy`] — Table 2 (60-probe prediction-accuracy experiment).
+//! * [`usage`] — Fig. 9 (total resource usage incl. ASA overheads).
+//! * [`regret`] — Appendix A (measured regret vs the Theorem-1 bound).
+
+pub mod convergence;
+pub mod campaign;
+pub mod accuracy;
+pub mod usage;
+pub mod regret;
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Where experiment outputs (JSON/CSV) land.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Write a JSON result document and echo the path.
+pub fn write_result(name: &str, doc: &Json) {
+    let path = results_dir().join(format!("{name}.json"));
+    if std::fs::write(&path, doc.pretty()).is_ok() {
+        println!("-> wrote {}", path.display());
+    }
+}
+
+/// Write a CSV result file and echo the path.
+pub fn write_csv(name: &str, csv: &str) {
+    let path = results_dir().join(format!("{name}.csv"));
+    if std::fs::write(&path, csv).is_ok() {
+        println!("-> wrote {}", path.display());
+    }
+}

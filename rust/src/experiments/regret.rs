@@ -1,0 +1,160 @@
+//! Appendix A — measured regret vs the Theorem-1 bound.
+//!
+//! Runs Algorithm 1 on synthetic non-stationary wait sequences and compares
+//! the measured regret (algorithm loss minus the best fixed action's loss in
+//! hindsight) against `4η(t) + ln m + √(2t ln(m/δ))`.
+
+use crate::coordinator::actions::ActionGrid;
+use crate::coordinator::asa::{AsaConfig, AsaEstimator};
+use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::loss::{loss, LossKind};
+use crate::coordinator::policy::Policy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::Time;
+
+/// One regret measurement.
+#[derive(Clone, Debug)]
+pub struct RegretPoint {
+    pub t: u64,
+    pub eta: u64,
+    pub algo_loss: f64,
+    pub best_fixed_loss: f64,
+    pub regret: f64,
+    pub bound: f64,
+}
+
+/// Run one seeded trial of `t_max` observations with `shifts` regime
+/// changes, recording regret at checkpoints.
+pub fn run_trial(
+    t_max: u64,
+    shifts: usize,
+    seed: u64,
+    policy: Policy,
+    kernel: &mut dyn UpdateKernel,
+) -> Vec<RegretPoint> {
+    let cfg = AsaConfig {
+        policy,
+        ..AsaConfig::default()
+    };
+    let grid = cfg.grid.clone();
+    let m = grid.len();
+    let mut est = AsaEstimator::new(cfg);
+    let mut rng = Rng::new(seed);
+    let mut truth_rng = Rng::new(seed ^ 0x1234);
+
+    // Piecewise-constant truth.
+    let seg = (t_max as usize / shifts.max(1)).max(1);
+    let mut truth_levels: Vec<Time> = Vec::new();
+    for _ in 0..shifts.max(1) {
+        let lo = (30f64).ln();
+        let hi = (60_000f64).ln();
+        truth_levels.push(truth_rng.uniform(lo, hi).exp() as Time);
+    }
+
+    // Track per-action cumulative loss (for the best-fixed-in-hindsight).
+    let mut fixed = vec![0.0f64; m];
+    let mut points = Vec::new();
+    let checkpoints: Vec<u64> = (1..=10).map(|k| k * t_max / 10).collect();
+    for s in 0..t_max {
+        let w = truth_levels[((s as usize) / seg).min(truth_levels.len() - 1)];
+        let (a, _) = est.sample_wait(&mut rng);
+        est.observe(a, w, kernel, &mut rng);
+        for i in 0..m {
+            fixed[i] += loss(LossKind::ZeroOne, &grid, i, w);
+        }
+        let t = s + 1;
+        if checkpoints.contains(&t) {
+            let best = fixed.iter().copied().fold(f64::INFINITY, f64::min);
+            let regret = est.algo_loss() - best;
+            points.push(RegretPoint {
+                t,
+                eta: est.rounds(),
+                algo_loss: est.algo_loss(),
+                best_fixed_loss: best,
+                regret,
+                bound: AsaEstimator::regret_bound(t, m, est.rounds(), 0.05),
+            });
+        }
+    }
+    points
+}
+
+pub fn table(points: &[RegretPoint]) -> Table {
+    let mut t = Table::new(["t", "η(t)", "algo loss", "best fixed", "regret", "bound"]);
+    for p in points {
+        t.row([
+            format!("{}", p.t),
+            format!("{}", p.eta),
+            format!("{:.0}", p.algo_loss),
+            format!("{:.0}", p.best_fixed_loss),
+            format!("{:.0}", p.regret),
+            format!("{:.0}", p.bound),
+        ]);
+    }
+    t
+}
+
+pub fn to_json(points: &[RegretPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .with("t", p.t as i64)
+                    .with("eta", p.eta as i64)
+                    .with("regret", p.regret)
+                    .with("bound", p.bound)
+            })
+            .collect(),
+    )
+}
+
+/// The bound uses the paper's grid (m=53) — sanity helper for tests.
+pub fn grid_width() -> usize {
+    ActionGrid::paper().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::PureRustKernel;
+
+    #[test]
+    fn regret_stays_under_bound_default_policy() {
+        let mut k = PureRustKernel;
+        for seed in [1u64, 2, 3] {
+            let pts = run_trial(2000, 5, seed, Policy::Default, &mut k);
+            for p in &pts {
+                assert!(
+                    p.regret <= p.bound,
+                    "seed {seed}: regret {} > bound {} at t={}",
+                    p.regret,
+                    p.bound,
+                    p.t
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn regret_stays_under_bound_tuned_policy() {
+        let mut k = PureRustKernel;
+        let pts = run_trial(2000, 5, 7, Policy::Tuned { rep: 50 }, &mut k);
+        for p in &pts {
+            assert!(p.regret <= p.bound, "regret {} > bound {}", p.regret, p.bound);
+        }
+    }
+
+    #[test]
+    fn checkpoints_are_monotone_in_t() {
+        let mut k = PureRustKernel;
+        let pts = run_trial(1000, 3, 11, Policy::Default, &mut k);
+        assert_eq!(pts.len(), 10);
+        for w in pts.windows(2) {
+            assert!(w[1].t > w[0].t);
+            assert!(w[1].algo_loss >= w[0].algo_loss);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig. 9 — total resource usage per workflow × strategy, ASA overheads
+//! included.
+
+use crate::experiments::campaign::Cell;
+use crate::util::json::Json;
+use crate::util::table::{bar_chart, Table};
+
+/// Aggregate core-hours per (workflow, strategy) over all scalings.
+pub fn aggregate(cells: &[Cell]) -> Vec<(String, String, f64)> {
+    let mut totals: std::collections::BTreeMap<(String, String), f64> = Default::default();
+    for c in cells {
+        let mut ch = c.run.core_hours();
+        if let Some(stats) = &c.asa_stats {
+            ch += stats.overhead_core_secs as f64 / 3600.0;
+        }
+        *totals
+            .entry((c.run.workflow.to_string(), c.run.strategy.clone()))
+            .or_default() += ch;
+    }
+    totals
+        .into_iter()
+        .map(|((wf, strat), ch)| (wf, strat, ch))
+        .collect()
+}
+
+/// Render Fig. 9 as labelled bars.
+pub fn chart(cells: &[Cell]) -> String {
+    let rows = aggregate(cells);
+    let items: Vec<(String, f64)> = rows
+        .iter()
+        .map(|(wf, strat, ch)| (format!("{wf}/{strat}"), *ch))
+        .collect();
+    let mut out = String::from("Fig. 9 — total core-hours (ASA overheads included)\n");
+    out.push_str(&bar_chart(&items, 60));
+    out
+}
+
+/// Tabular form with the per-strategy saving vs Big Job.
+pub fn table(cells: &[Cell]) -> Table {
+    let rows = aggregate(cells);
+    let mut t = Table::new(["workflow", "strategy", "core-hours", "vs big-job"]);
+    for (wf, strat, ch) in &rows {
+        let big = rows
+            .iter()
+            .find(|(w, s, _)| w == wf && s == "big-job")
+            .map(|(_, _, c)| *c)
+            .unwrap_or(*ch);
+        t.row([
+            wf.clone(),
+            strat.clone(),
+            format!("{ch:.1}"),
+            format!("{:+.0}%", (ch / big - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+pub fn to_json(cells: &[Cell]) -> Json {
+    Json::Arr(
+        aggregate(cells)
+            .into_iter()
+            .map(|(wf, strat, ch)| {
+                Json::obj()
+                    .with("workflow", wf)
+                    .with("strategy", strat)
+                    .with("core_hours", ch)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::spec::{StageRecord, WorkflowRun};
+
+    fn cell(wf: &'static str, strategy: &str, ch_secs: i64) -> Cell {
+        Cell {
+            run: WorkflowRun {
+                workflow: wf,
+                strategy: strategy.into(),
+                system: "hpc2n",
+                scale: 28,
+                submitted_at: 0,
+                finished_at: 100,
+                stages: vec![StageRecord {
+                    stage: 0,
+                    name: "s",
+                    cores: 1,
+                    submitted: 0,
+                    started: 0,
+                    finished: 100,
+                    perceived_wait: 0,
+                    charged_core_secs: ch_secs,
+                }],
+            },
+            asa_stats: None,
+        }
+    }
+
+    #[test]
+    fn aggregates_over_scalings() {
+        let cells = vec![
+            cell("montage", "big-job", 7200),
+            cell("montage", "big-job", 3600),
+            cell("montage", "asa", 3600),
+        ];
+        let rows = aggregate(&cells);
+        let big = rows.iter().find(|(_, s, _)| s == "big-job").unwrap().2;
+        let asa = rows.iter().find(|(_, s, _)| s == "asa").unwrap().2;
+        assert!((big - 3.0).abs() < 1e-9);
+        assert!((asa - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chart_and_table_render() {
+        let cells = vec![cell("blast", "big-job", 7200), cell("blast", "asa", 3600)];
+        assert!(chart(&cells).contains("blast/asa"));
+        let t = table(&cells).render();
+        assert!(t.contains("-50%"));
+    }
+}

@@ -1,0 +1,42 @@
+//! # ASA — The Adaptive Scheduling Algorithm
+//!
+//! A full reproduction of *"ASA — The Adaptive Scheduling Algorithm"*
+//! (Souza, Ghoshal, Ramakrishnan, Pelckmans, Tordsson; CS.DC 2024):
+//! a reinforcement-learning (exponential-weights, minibatch-round) estimator
+//! of HPC batch-queue waiting times, driving *proactive* per-stage job
+//! submission for scientific workflows.
+//!
+//! The crate is organised in the three-layer architecture described in
+//! `DESIGN.md`:
+//!
+//! * [`coordinator`] — the paper's contribution: Algorithm 1, sampling
+//!   policies, submission strategies (Big-Job / Per-Stage / ASA / ASA-Naïve),
+//!   the proactive submission planner and the unified resource pool.
+//! * [`simulator`] — the substrate the paper ran on: a discrete-event
+//!   Slurm-like cluster (fair-share multifactor priority + EASY backfill,
+//!   job dependencies, background workload traces) standing in for the
+//!   HPC2n and UPPMAX production systems.
+//! * [`workflow`] — a Tigres-like WMS with the paper's three applications
+//!   (Montage, BLAST, Statistics) as calibrated analytic stage models, plus
+//!   the E-HPC per-stage elasticity feature.
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   policy-update artifact (`artifacts/*.hlo.txt`) and executes it from the
+//!   rust hot path (python never runs at request time).
+//! * [`experiments`] — one driver per table/figure in the paper's
+//!   evaluation section (Fig. 5–9, Tables 1–2, §4.5 sensitivity, App. A).
+//! * [`util`] — in-tree infrastructure (deterministic RNG, stats, JSON,
+//!   CLI parsing, property-testing and bench harnesses) because the build
+//!   environment is fully offline.
+
+pub mod util;
+pub mod simulator;
+pub mod workflow;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;
+
+/// Simulation time in whole seconds since the start of an experiment.
+pub type Time = i64;
+
+/// Number of CPU cores.
+pub type Cores = u32;

@@ -1,0 +1,260 @@
+//! `asa` — CLI for the Adaptive Scheduling Algorithm reproduction.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts:
+//!
+//! ```text
+//! asa convergence   Fig. 5   policy convergence under regime shifts
+//! asa campaign      Figs 6-8 makespan breakdowns (one workflow)
+//! asa table1        Table 1  full 54-run strategy comparison
+//! asa table2        Table 2  prediction-accuracy probes
+//! asa usage         Fig. 9   total resource usage per strategy
+//! asa regret        App. A   measured regret vs Theorem-1 bound
+//! asa info          runtime/artifact status
+//! ```
+
+use asa::coordinator::actions::ActionGrid;
+use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use asa::experiments::{accuracy, campaign, convergence, regret, usage, write_csv, write_result};
+use asa::runtime::XlaKernel;
+use asa::util::cli::Cli;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let code = match cmd.as_str() {
+        "convergence" => cmd_convergence(args),
+        "campaign" => cmd_campaign(args),
+        "table1" => cmd_table1(args),
+        "table2" => cmd_table2(args),
+        "usage" => cmd_usage(args),
+        "regret" => cmd_regret(args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "asa — Adaptive Scheduling Algorithm (paper reproduction)\n\n\
+         SUBCOMMANDS:\n\
+           convergence  Fig. 5: Greedy/Default/Tuned convergence simulation\n\
+           campaign     Figs 6-8: makespan breakdown for one workflow\n\
+           table1       Table 1: full strategy-comparison campaign\n\
+           table2       Table 2: prediction-accuracy probe experiment\n\
+           usage        Fig. 9: total resource usage per strategy\n\
+           regret       Appendix A: measured regret vs Theorem-1 bound\n\
+           info         artifact/runtime status\n\n\
+         Run `asa <subcommand> --help` for options."
+    );
+}
+
+/// Pick the update-kernel backend: XLA artifact if available and requested.
+fn make_kernel(use_xla: bool) -> Box<dyn UpdateKernel> {
+    if use_xla {
+        match XlaKernel::load_default(ActionGrid::paper().values()) {
+            Ok(k) => {
+                eprintln!("[asa] using XLA/PJRT kernel (AOT artifact)");
+                return Box::new(k);
+            }
+            Err(e) => {
+                eprintln!("[asa] XLA kernel unavailable ({e}); falling back to pure-rust");
+            }
+        }
+    }
+    Box::new(PureRustKernel)
+}
+
+fn cmd_convergence(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa convergence", "Fig. 5 convergence simulation")
+        .opt_default("iters", "1000", "iterations")
+        .opt_default("seed", "5", "rng seed (drives the truth steps)")
+        .flag("xla", "run updates through the AOT XLA artifact");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let iters = a.get_usize("iters", 1000).unwrap();
+    let seed = a.get_u64("seed", 5).unwrap();
+    let mut kernel = make_kernel(a.flag("xla"));
+    let result = convergence::run(iters, seed, kernel.as_mut());
+    println!("{}", result.chart());
+    println!("{}", result.summary().render());
+    write_result("fig5_convergence", &result.to_json());
+    0
+}
+
+fn campaign_cells(workflows: &[&str], include_naive: bool, seed: u64) -> Vec<campaign::Cell> {
+    campaign::run_campaign(workflows, &campaign::SCALINGS, include_naive, seed)
+}
+
+fn cmd_campaign(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa campaign", "makespan breakdown for one workflow (Figs 6-8)")
+        .opt_default("workflow", "montage", "montage | blast | statistics")
+        .opt_default("seed", "42", "campaign seed")
+        .flag("naive", "include the ASA-Naive strategy (§4.5)");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let wf = a.get_or("workflow", "montage").to_string();
+    if asa::workflow::apps::by_name(&wf).is_none() {
+        eprintln!("unknown workflow {wf:?}");
+        return 2;
+    }
+    let seed = a.get_u64("seed", 42).unwrap();
+    let cells = campaign_cells(&[&wf], a.flag("naive"), seed);
+    let table = campaign::makespan_breakdown(&cells, &wf);
+    println!("{}", table.render());
+    let fig = match wf.as_str() {
+        "montage" => "fig6_montage",
+        "blast" => "fig7_blast",
+        _ => "fig8_statistics",
+    };
+    write_csv(fig, &table.to_csv());
+    write_result(fig, &campaign::cells_to_json(&cells));
+    0
+}
+
+fn cmd_table1(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa table1", "full 54-run strategy comparison")
+        .opt_default("seed", "42", "campaign seed")
+        .flag("naive", "include ASA-Naive sessions");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let seed = a.get_u64("seed", 42).unwrap();
+    let cells = campaign_cells(&["montage", "blast", "statistics"], a.flag("naive"), seed);
+    let t = campaign::table1(&cells);
+    println!("{}", t.render());
+    write_csv("table1", &t.to_csv());
+    write_result("table1_cells", &campaign::cells_to_json(&cells));
+    // Fig. 9 falls out of the same campaign data.
+    println!("{}", usage::chart(&cells));
+    write_result("fig9_usage", &usage::to_json(&cells));
+    0
+}
+
+fn cmd_table2(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa table2", "prediction-accuracy probes (60 per geometry)")
+        .opt_default("probes", "60", "submissions per geometry")
+        .opt_default("seed", "42", "seed")
+        .flag("xla", "run updates through the AOT XLA artifact");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let probes = a.get_usize("probes", 60).unwrap();
+    let seed = a.get_u64("seed", 42).unwrap();
+    let mut kernel = make_kernel(a.flag("xla"));
+    let rows = accuracy::run_table2(probes, seed, kernel.as_mut());
+    let t = accuracy::table2(&rows);
+    println!("{}", t.render());
+    write_csv("table2", &t.to_csv());
+    write_result("table2", &accuracy::to_json(&rows));
+    0
+}
+
+fn cmd_usage(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa usage", "Fig. 9 total resource usage")
+        .opt_default("seed", "42", "campaign seed");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let seed = a.get_u64("seed", 42).unwrap();
+    let cells = campaign_cells(&["montage", "blast", "statistics"], false, seed);
+    println!("{}", usage::chart(&cells));
+    println!("{}", usage::table(&cells).render());
+    write_result("fig9_usage", &usage::to_json(&cells));
+    0
+}
+
+fn cmd_regret(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa regret", "Appendix A regret vs bound")
+        .opt_default("t", "5000", "observations")
+        .opt_default("shifts", "5", "regime shifts")
+        .opt_default("seed", "3", "seed")
+        .opt_default("policy", "default", "default | tuned[:rep] | greedy")
+        .flag("xla", "run updates through the AOT XLA artifact");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let t_max = a.get_u64("t", 5000).unwrap();
+    let shifts = a.get_usize("shifts", 5).unwrap();
+    let seed = a.get_u64("seed", 3).unwrap();
+    let policy = match asa::coordinator::policy::Policy::parse(a.get_or("policy", "default")) {
+        Some(p) => p,
+        None => {
+            eprintln!("bad --policy");
+            return 2;
+        }
+    };
+    let mut kernel = make_kernel(a.flag("xla"));
+    let pts = regret::run_trial(t_max, shifts, seed, policy, kernel.as_mut());
+    println!("{}", regret::table(&pts).render());
+    write_result("regret", &regret::to_json(&pts));
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!(
+        "asa {} — three-layer reproduction of ASA (CS.DC 2024)",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("grid: m = {}", ActionGrid::paper().len());
+    match asa::runtime::find_artifact_dir() {
+        Some(dir) => match asa::runtime::AsaRuntime::load(&dir) {
+            Ok(rt) => println!(
+                "artifacts: {} (m={}, batch variants {:?}) — XLA/PJRT OK",
+                dir.display(),
+                rt.m(),
+                rt.batches()
+            ),
+            Err(e) => println!("artifacts: {} — load FAILED: {e}", dir.display()),
+        },
+        None => println!("artifacts: not found (run `make artifacts`)"),
+    }
+    for sys in ["hpc2n", "uppmax"] {
+        let cfg = asa::simulator::SystemConfig::by_name(sys).unwrap();
+        println!(
+            "system {sys}: {} nodes × {} cores = {} cores",
+            cfg.nodes,
+            cfg.cores_per_node,
+            cfg.total_cores()
+        );
+    }
+    0
+}

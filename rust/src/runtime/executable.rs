@@ -1,0 +1,162 @@
+//! Loading and executing the AOT `asa_step` artifacts.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One compiled batch variant.
+struct Variant {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed ASA policy-step runtime.
+///
+/// Holds one compiled executable per exported batch size; [`AsaRuntime::step`]
+/// pads the caller's batch up to the smallest variant that fits and loops
+/// the largest variant for oversized batches.
+pub struct AsaRuntime {
+    variants: Vec<Variant>,
+    m: usize,
+}
+
+/// Result of one policy step for a batch of geometries.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Updated distributions, row-major `[batch][m]`.
+    pub p: Vec<f32>,
+    /// Per-row `(expected wait, entropy, max probability)`.
+    pub stats: Vec<[f32; 3]>,
+}
+
+impl AsaRuntime {
+    /// Load every variant listed in `manifest.json` under `dir` and compile
+    /// them on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let manifest = Json::parse(&manifest_text)
+            .map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let m = manifest
+            .get("m")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow!("manifest missing 'm'"))? as usize;
+        let client = xla::PjRtClient::cpu()?;
+        let mut variants = Vec::new();
+        for entry in manifest
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?
+        {
+            let batch = entry
+                .get("batch")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| anyhow!("variant missing 'batch'"))? as usize;
+            let file = entry
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("variant missing 'file'"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            variants.push(Variant { batch, exe });
+        }
+        if variants.is_empty() {
+            bail!("no variants in manifest");
+        }
+        variants.sort_by_key(|v| v.batch);
+        Ok(AsaRuntime { variants, m })
+    }
+
+    /// Load from the conventional location (see
+    /// [`crate::runtime::find_artifact_dir`]).
+    pub fn load_default() -> Result<Self> {
+        let dir = crate::runtime::find_artifact_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    /// Grid width (m) the artifacts were compiled for.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Exported batch sizes.
+    pub fn batches(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    /// Execute one batched policy step.
+    ///
+    /// * `p`, `loss`: row-major `[rows][m]`.
+    /// * `gamma`: `[rows]`.
+    /// * `values`: `[m]` action grid in seconds.
+    pub fn step(
+        &self,
+        p: &[f32],
+        loss: &[f32],
+        gamma: &[f32],
+        values: &[f32],
+    ) -> Result<StepOutput> {
+        let m = self.m;
+        if values.len() != m {
+            bail!("values width {} != m {}", values.len(), m);
+        }
+        if p.len() != loss.len() || p.len() % m != 0 {
+            bail!("bad p/loss shape");
+        }
+        let rows = p.len() / m;
+        if gamma.len() != rows {
+            bail!("gamma length {} != rows {}", gamma.len(), rows);
+        }
+        let mut out_p = vec![0f32; rows * m];
+        let mut out_stats = vec![[0f32; 3]; rows];
+
+        let max_batch = self.variants.last().unwrap().batch;
+        let mut row = 0;
+        while row < rows {
+            let remaining = rows - row;
+            let chunk = remaining.min(max_batch);
+            // Smallest variant that fits this chunk.
+            let variant = self
+                .variants
+                .iter()
+                .find(|v| v.batch >= chunk)
+                .unwrap_or_else(|| self.variants.last().unwrap());
+            let b = variant.batch;
+            // Pad the chunk up to the variant's batch with uniform rows.
+            let mut pp = vec![1.0 / m as f32; b * m];
+            let mut ll = vec![0f32; b * m];
+            let mut gg = vec![0f32; b];
+            pp[..chunk * m].copy_from_slice(&p[row * m..(row + chunk) * m]);
+            ll[..chunk * m].copy_from_slice(&loss[row * m..(row + chunk) * m]);
+            gg[..chunk].copy_from_slice(&gamma[row..row + chunk]);
+
+            let lit_p = xla::Literal::vec1(&pp).reshape(&[b as i64, m as i64])?;
+            let lit_l = xla::Literal::vec1(&ll).reshape(&[b as i64, m as i64])?;
+            let lit_g = xla::Literal::vec1(&gg);
+            let lit_v = xla::Literal::vec1(values);
+            let result = variant.exe.execute::<xla::Literal>(&[lit_p, lit_l, lit_g, lit_v])?
+                [0][0]
+                .to_literal_sync()?;
+            let (new_p, stats) = result.to_tuple2()?;
+            let new_p = new_p.to_vec::<f32>()?;
+            let stats = stats.to_vec::<f32>()?;
+            out_p[row * m..(row + chunk) * m].copy_from_slice(&new_p[..chunk * m]);
+            for i in 0..chunk {
+                out_stats[row + i] = [stats[i * 3], stats[i * 3 + 1], stats[i * 3 + 2]];
+            }
+            row += chunk;
+        }
+        Ok(StepOutput {
+            p: out_p,
+            stats: out_stats,
+        })
+    }
+}
+
+// NOTE: unit tests for the runtime live in rust/tests/runtime_xla.rs since
+// they need the artifacts built by `make artifacts`.

@@ -1,0 +1,81 @@
+//! [`XlaKernel`]: the coordinator's `UpdateKernel` backed by the AOT
+//! artifact. Converts between the coordinator's f64 state and the
+//! artifact's f32 computation; the probability floor baked into the
+//! artifact matches `coordinator::kernel::P_FLOOR`.
+
+use crate::coordinator::kernel::UpdateKernel;
+use crate::runtime::executable::AsaRuntime;
+
+/// PJRT-backed exponential-weights kernel.
+pub struct XlaKernel {
+    rt: AsaRuntime,
+    /// The action grid in seconds (f32) fed as the `values` operand.
+    values: Vec<f32>,
+    /// Executed-step counter (for perf reporting).
+    pub steps: u64,
+}
+
+impl XlaKernel {
+    pub fn new(rt: AsaRuntime, grid_values: &[i64]) -> Self {
+        assert_eq!(
+            rt.m(),
+            grid_values.len(),
+            "artifact m={} vs grid m={}",
+            rt.m(),
+            grid_values.len()
+        );
+        XlaKernel {
+            rt,
+            values: grid_values.iter().map(|&v| v as f32).collect(),
+            steps: 0,
+        }
+    }
+
+    /// Load artifacts from the conventional location for the given grid.
+    pub fn load_default(grid_values: &[i64]) -> anyhow::Result<Self> {
+        let rt = AsaRuntime::load_default()?;
+        Ok(Self::new(rt, grid_values))
+    }
+
+    pub fn runtime(&self) -> &AsaRuntime {
+        &self.rt
+    }
+}
+
+impl UpdateKernel for XlaKernel {
+    fn update(&mut self, p: &mut [f64], loss: &[f64], gamma: f64) {
+        let m = self.rt.m();
+        assert_eq!(p.len(), m);
+        assert_eq!(loss.len(), m);
+        let pf: Vec<f32> = p.iter().map(|&x| x as f32).collect();
+        let lf: Vec<f32> = loss.iter().map(|&x| x as f32).collect();
+        let out = self
+            .rt
+            .step(&pf, &lf, &[gamma as f32], &self.values)
+            .expect("XLA step failed");
+        self.steps += 1;
+        for (dst, &src) in p.iter_mut().zip(&out.p) {
+            *dst = src as f64;
+        }
+    }
+
+    fn update_batch(&mut self, m: usize, p: &mut [f64], loss: &[f64], gamma: &[f64]) {
+        assert_eq!(m, self.rt.m());
+        assert_eq!(p.len(), loss.len());
+        let pf: Vec<f32> = p.iter().map(|&x| x as f32).collect();
+        let lf: Vec<f32> = loss.iter().map(|&x| x as f32).collect();
+        let gf: Vec<f32> = gamma.iter().map(|&x| x as f32).collect();
+        let out = self
+            .rt
+            .step(&pf, &lf, &gf, &self.values)
+            .expect("XLA batched step failed");
+        self.steps += 1;
+        for (dst, &src) in p.iter_mut().zip(&out.p) {
+            *dst = src as f64;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

@@ -1,0 +1,41 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas policy-step
+//! artifacts (`artifacts/asa_step_b{1,8,64}.hlo.txt`) and executes them
+//! from the rust hot path. Python never runs at request time — `make
+//! artifacts` is the only python invocation, at build time.
+//!
+//! [`XlaKernel`] adapts the artifact to the coordinator's
+//! [`crate::coordinator::kernel::UpdateKernel`] interface so the whole ASA
+//! stack can run its multiplicative updates through XLA;
+//! `rust/tests/runtime_xla.rs` cross-checks it against
+//! [`crate::coordinator::kernel::PureRustKernel`].
+
+pub mod executable;
+pub mod kernel;
+
+pub use executable::AsaRuntime;
+pub use kernel::XlaKernel;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$ASA_ARTIFACTS`, else `artifacts/` in the
+/// current directory or any ancestor (so tests/benches work from target
+/// subdirectories).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("ASA_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join(DEFAULT_ARTIFACT_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Core inventory and allocation accounting.
+//!
+//! Jobs are allocated at core granularity (the paper's workflows request
+//! core counts, not topologies). The cluster tracks free cores and the set
+//! of running allocations; node boundaries matter only for capacity
+//! (total = nodes × cores_per_node), matching how queue-wait dynamics arise.
+
+use crate::simulator::job::JobId;
+use crate::{Cores, Time};
+use std::collections::HashMap;
+
+/// One live allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct Allocation {
+    pub job: JobId,
+    pub cores: Cores,
+    pub started: Time,
+    /// Hard end bound (start + time_limit) — what backfill plans against.
+    pub limit_end: Time,
+}
+
+/// The machine: capacity plus live allocations.
+#[derive(Debug)]
+pub struct Cluster {
+    total: Cores,
+    free: Cores,
+    allocs: HashMap<JobId, Allocation>,
+}
+
+impl Cluster {
+    pub fn new(total: Cores) -> Self {
+        Cluster {
+            total,
+            free: total,
+            allocs: HashMap::new(),
+        }
+    }
+
+    pub fn total_cores(&self) -> Cores {
+        self.total
+    }
+
+    pub fn free_cores(&self) -> Cores {
+        self.free
+    }
+
+    pub fn used_cores(&self) -> Cores {
+        self.total - self.free
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_cores() as f64 / self.total as f64
+    }
+
+    pub fn fits(&self, cores: Cores) -> bool {
+        cores <= self.free
+    }
+
+    /// Allocate for a job. Panics on over-allocation (scheduler bug).
+    pub fn allocate(&mut self, job: JobId, cores: Cores, now: Time, limit_end: Time) {
+        assert!(
+            self.fits(cores),
+            "over-allocation: want {cores}, free {}",
+            self.free
+        );
+        assert!(
+            !self.allocs.contains_key(&job),
+            "job {job:?} already allocated"
+        );
+        self.free -= cores;
+        self.allocs.insert(
+            job,
+            Allocation {
+                job,
+                cores,
+                started: now,
+                limit_end,
+            },
+        );
+    }
+
+    /// Release a job's allocation (finish/cancel). No-op if not allocated.
+    pub fn release(&mut self, job: JobId) -> Option<Allocation> {
+        let alloc = self.allocs.remove(&job)?;
+        self.free += alloc.cores;
+        debug_assert!(self.free <= self.total);
+        Some(alloc)
+    }
+
+    pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
+        self.allocs.get(&job)
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// Live allocations sorted by planned end time — the input to the EASY
+    /// backfill "shadow time" computation.
+    pub fn allocations_by_end(&self) -> Vec<Allocation> {
+        let mut v: Vec<Allocation> = self.allocs.values().copied().collect();
+        v.sort_by_key(|a| (a.limit_end, a.job));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release() {
+        let mut c = Cluster::new(100);
+        c.allocate(JobId(1), 60, 0, 100);
+        assert_eq!(c.free_cores(), 40);
+        assert!(!c.fits(41));
+        assert!(c.fits(40));
+        let a = c.release(JobId(1)).unwrap();
+        assert_eq!(a.cores, 60);
+        assert_eq!(c.free_cores(), 100);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let mut c = Cluster::new(200);
+        assert_eq!(c.utilization(), 0.0);
+        c.allocate(JobId(1), 50, 0, 10);
+        assert!((c.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-allocation")]
+    fn over_allocation_panics() {
+        let mut c = Cluster::new(10);
+        c.allocate(JobId(1), 11, 0, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "already allocated")]
+    fn double_allocation_panics() {
+        let mut c = Cluster::new(10);
+        c.allocate(JobId(1), 2, 0, 10);
+        c.allocate(JobId(1), 2, 0, 10);
+    }
+
+    #[test]
+    fn release_unknown_is_none() {
+        let mut c = Cluster::new(10);
+        assert!(c.release(JobId(9)).is_none());
+    }
+
+    #[test]
+    fn allocations_sorted_by_end() {
+        let mut c = Cluster::new(100);
+        c.allocate(JobId(1), 10, 0, 300);
+        c.allocate(JobId(2), 10, 0, 100);
+        c.allocate(JobId(3), 10, 0, 200);
+        let ends: Vec<Time> = c.allocations_by_end().iter().map(|a| a.limit_end).collect();
+        assert_eq!(ends, vec![100, 200, 300]);
+    }
+}

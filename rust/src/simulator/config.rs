@@ -1,0 +1,225 @@
+//! JSON configuration loading for custom systems and workloads.
+//!
+//! The two paper systems are built-in presets; downstream users point the
+//! CLI/examples at a JSON document to simulate their own centre:
+//!
+//! ```json
+//! {
+//!   "name": "mycluster",
+//!   "nodes": 128, "cores_per_node": 64,
+//!   "scheduler": {"weight_fairshare": 10000, "backfill_depth": 500},
+//!   "workload": {
+//!     "target_load": 0.97, "burstiness": 0.7,
+//!     "regime_period": 14400, "regime_lo": 0.6, "regime_hi": 1.4,
+//!     "user_pool": 80, "backlog_factor": 1.0, "initial_user_usage": 1e7,
+//!     "classes": [
+//!       {"weight": 0.6, "cores_lo": 1, "cores_hi": 64,
+//!        "runtime_mu": 7.5, "runtime_sigma": 1.0}
+//!     ]
+//!   }
+//! }
+//! ```
+//!
+//! Every field is optional except `name`, `nodes`, `cores_per_node` and at
+//! least one workload class; omitted fields inherit the quiet-profile /
+//! default-scheduler values so partial configs stay valid.
+
+use crate::simulator::slurm::SchedConfig;
+use crate::simulator::trace::{JobClass, WorkloadProfile};
+use crate::simulator::SystemConfig;
+use crate::util::json::Json;
+
+fn f64_of(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+fn i64_of(j: &Json, key: &str, default: i64) -> i64 {
+    j.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+}
+
+/// Parse a [`SystemConfig`] from a JSON document.
+pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
+    let name = doc
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or("missing 'name'")?;
+    let nodes = doc
+        .get("nodes")
+        .and_then(|v| v.as_i64())
+        .ok_or("missing 'nodes'")? as u32;
+    let cores_per_node = doc
+        .get("cores_per_node")
+        .and_then(|v| v.as_i64())
+        .ok_or("missing 'cores_per_node'")? as u32;
+    if nodes == 0 || cores_per_node == 0 {
+        return Err("nodes and cores_per_node must be positive".into());
+    }
+
+    let defaults = SchedConfig::default();
+    let sched = match doc.get("scheduler") {
+        Some(s) => SchedConfig {
+            weight_fairshare: f64_of(s, "weight_fairshare", defaults.weight_fairshare),
+            weight_age: f64_of(s, "weight_age", defaults.weight_age),
+            weight_size: f64_of(s, "weight_size", defaults.weight_size),
+            max_age: i64_of(s, "max_age", defaults.max_age),
+            decay_half_life: i64_of(s, "decay_half_life", defaults.decay_half_life),
+            backfill_depth: i64_of(s, "backfill_depth", defaults.backfill_depth as i64)
+                as usize,
+        },
+        None => defaults,
+    };
+
+    let quiet = WorkloadProfile::quiet();
+    let workload = match doc.get("workload") {
+        Some(w) => {
+            let classes = match w.get("classes").and_then(|v| v.as_arr()) {
+                Some(arr) if !arr.is_empty() => arr
+                    .iter()
+                    .map(|c| {
+                        Ok(JobClass {
+                            weight: f64_of(c, "weight", 1.0),
+                            cores_lo: i64_of(c, "cores_lo", 1).max(1) as u32,
+                            cores_hi: i64_of(c, "cores_hi", 1).max(1) as u32,
+                            runtime_mu: f64_of(c, "runtime_mu", 7.0),
+                            runtime_sigma: f64_of(c, "runtime_sigma", 0.8),
+                        })
+                    })
+                    .collect::<Result<Vec<_>, String>>()?,
+                _ => return Err("workload.classes must be a non-empty array".into()),
+            };
+            for c in &classes {
+                if c.cores_hi < c.cores_lo {
+                    return Err(format!(
+                        "class cores_hi {} < cores_lo {}",
+                        c.cores_hi, c.cores_lo
+                    ));
+                }
+                if c.cores_hi > nodes * cores_per_node {
+                    return Err(format!(
+                        "class cores_hi {} exceeds machine capacity {}",
+                        c.cores_hi,
+                        nodes * cores_per_node
+                    ));
+                }
+            }
+            WorkloadProfile {
+                classes,
+                target_load: f64_of(w, "target_load", quiet.target_load),
+                burstiness: f64_of(w, "burstiness", quiet.burstiness),
+                regime_period: i64_of(w, "regime_period", quiet.regime_period),
+                regime_lo: f64_of(w, "regime_lo", quiet.regime_lo),
+                regime_hi: f64_of(w, "regime_hi", quiet.regime_hi),
+                user_pool: i64_of(w, "user_pool", quiet.user_pool as i64) as u32,
+                backlog_factor: f64_of(w, "backlog_factor", quiet.backlog_factor),
+                initial_user_usage: f64_of(w, "initial_user_usage", quiet.initial_user_usage),
+            }
+        }
+        None => quiet,
+    };
+
+    // SystemConfig.name is &'static str for the presets; leak the custom
+    // name (configs are loaded once per process).
+    let name: &'static str = Box::leak(name.to_string().into_boxed_str());
+    Ok(SystemConfig {
+        name,
+        nodes,
+        cores_per_node,
+        sched,
+        workload,
+    })
+}
+
+/// Load a [`SystemConfig`] from a JSON file.
+pub fn system_from_file(path: &std::path::Path) -> Result<SystemConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    system_from_json(&doc)
+}
+
+/// Resolve a system by preset name or config-file path.
+pub fn resolve_system(spec: &str) -> Result<SystemConfig, String> {
+    if let Some(cfg) = SystemConfig::by_name(spec) {
+        return Ok(cfg);
+    }
+    let path = std::path::Path::new(spec);
+    if path.exists() {
+        return system_from_file(path);
+    }
+    Err(format!(
+        "unknown system {spec:?} (presets: hpc2n, uppmax; or a JSON config path)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> Json {
+        Json::parse(
+            r#"{"name":"t","nodes":4,"cores_per_node":8,
+                "workload":{"classes":[{"weight":1,"cores_lo":1,"cores_hi":8,
+                                        "runtime_mu":6,"runtime_sigma":0.5}],
+                            "target_load":0.8}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn minimal_config_parses() {
+        let cfg = system_from_json(&minimal()).unwrap();
+        assert_eq!(cfg.total_cores(), 32);
+        assert_eq!(cfg.workload.classes.len(), 1);
+        assert!((cfg.workload.target_load - 0.8).abs() < 1e-12);
+        // Scheduler defaults inherited.
+        assert_eq!(cfg.sched.backfill_depth, 1000);
+    }
+
+    #[test]
+    fn scheduler_overrides_apply() {
+        let mut doc = minimal();
+        doc.set(
+            "scheduler",
+            Json::obj().with("backfill_depth", 7i64).with("weight_age", 5.0),
+        );
+        let cfg = system_from_json(&doc).unwrap();
+        assert_eq!(cfg.sched.backfill_depth, 7);
+        assert_eq!(cfg.sched.weight_age, 5.0);
+        assert_eq!(cfg.sched.weight_fairshare, 10_000.0);
+    }
+
+    #[test]
+    fn rejects_missing_fields_and_bad_classes() {
+        assert!(system_from_json(&Json::parse(r#"{"nodes":1}"#).unwrap()).is_err());
+        let mut doc = minimal();
+        doc.set(
+            "workload",
+            Json::obj().with("classes", Json::Arr(vec![])),
+        );
+        assert!(system_from_json(&doc).is_err());
+        // Class wider than the machine.
+        let doc = Json::parse(
+            r#"{"name":"t","nodes":1,"cores_per_node":4,
+                "workload":{"classes":[{"weight":1,"cores_lo":1,"cores_hi":99,
+                                        "runtime_mu":6,"runtime_sigma":0.5}]}}"#,
+        )
+        .unwrap();
+        assert!(system_from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn resolve_prefers_presets() {
+        assert_eq!(resolve_system("uppmax").unwrap().nodes, 486);
+        assert!(resolve_system("does-not-exist").is_err());
+    }
+
+    #[test]
+    fn config_file_round_trip_runs_a_simulation() {
+        let path = std::env::temp_dir().join(format!("asa-sys-{}.json", std::process::id()));
+        std::fs::write(&path, minimal().pretty()).unwrap();
+        let cfg = system_from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut sim = crate::simulator::Simulator::new(cfg, 3);
+        sim.run_until(3600);
+        assert!(sim.now() >= 3600);
+    }
+}

@@ -1,0 +1,125 @@
+//! Time-ordered event heap for the discrete-event engine.
+//!
+//! Ties are broken by insertion sequence so simulation replay is
+//! deterministic regardless of heap internals.
+
+use crate::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Internal engine events.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A job (already registered) enters the queue.
+    Submit(super::job::JobId),
+    /// A running job completes.
+    Finish(super::job::JobId),
+    /// Next background-trace arrival should be generated.
+    TraceArrival,
+    /// Periodic utilization sampling.
+    Sample,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    time: Time,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap of timed events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Time, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, EventKind)> {
+        self.heap.pop().map(|e| (e.time, e.kind))
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::job::JobId;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, EventKind::Finish(JobId(1)));
+        q.push(10, EventKind::Submit(JobId(2)));
+        q.push(20, EventKind::TraceArrival);
+        assert_eq!(q.pop().unwrap().0, 10);
+        assert_eq!(q.pop().unwrap().0, 20);
+        assert_eq!(q.pop().unwrap().0, 30);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::Submit(JobId(1)));
+        q.push(5, EventKind::Submit(JobId(2)));
+        q.push(5, EventKind::Submit(JobId(3)));
+        let ids: Vec<_> = (0..3)
+            .map(|_| match q.pop().unwrap().1 {
+                EventKind::Submit(id) => id.0,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn peek_does_not_pop() {
+        let mut q = EventQueue::new();
+        q.push(7, EventKind::Sample);
+        assert_eq!(q.peek_time(), Some(7));
+        assert_eq!(q.len(), 1);
+    }
+}

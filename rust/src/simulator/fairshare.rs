@@ -1,0 +1,203 @@
+//! Fair-share accounting à la Slurm's multifactor plugin.
+//!
+//! Each user accrues decayed usage (core-seconds with an exponential
+//! half-life). The fair-share factor is `2^(-U/S)` where `U` is the user's
+//! share of total decayed usage and `S` the user's share of allocated
+//! shares — Slurm's classic formula. Both evaluated systems ran "Slurm with
+//! its default fair-share scheduling policy" (paper §4.2), and fair-share is
+//! what makes waits *depend on one's own recent usage*, a dynamic ASA must
+//! track.
+//!
+//! Implementation: usage is stored in *inflated units* — a charge at time
+//! `t` is recorded as `core_seconds · 2^(t/half_life)`. Exponential decay
+//! then never needs to be applied explicitly: every user's stored value
+//! carries the same implicit scale factor at any query time, which cancels
+//! in the usage *fraction* the factor formula uses. This makes both
+//! `charge` and `factor` O(1) — important because the scheduler evaluates
+//! factors for every queued candidate on every pass. A periodic rebase
+//! guards against overflow on very long simulations.
+
+use crate::Time;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+struct UserAccount {
+    shares: f64,
+    /// Usage in inflated units (see module docs).
+    usage_scaled: f64,
+}
+
+/// Fair-share ledger for all users.
+#[derive(Debug)]
+pub struct FairShare {
+    accounts: HashMap<u32, UserAccount>,
+    half_life: Time,
+    total_shares: f64,
+    total_usage_scaled: f64,
+    /// Exponent base subtracted from `t/half_life` to keep scales bounded.
+    epoch: f64,
+}
+
+impl FairShare {
+    /// `half_life` is the usage decay half-life in seconds (Slurm default
+    /// `PriorityDecayHalfLife=7-0`, i.e. one week).
+    pub fn new(half_life: Time) -> Self {
+        assert!(half_life > 0);
+        FairShare {
+            accounts: HashMap::new(),
+            half_life,
+            total_shares: 0.0,
+            total_usage_scaled: 0.0,
+            epoch: 0.0,
+        }
+    }
+
+    /// Register a user with a share weight (idempotent).
+    pub fn ensure_user(&mut self, user: u32, shares: f64) {
+        let total_shares = &mut self.total_shares;
+        self.accounts.entry(user).or_insert_with(|| {
+            *total_shares += shares;
+            UserAccount {
+                shares,
+                usage_scaled: 0.0,
+            }
+        });
+    }
+
+    fn scale(&mut self, now: Time) -> f64 {
+        let exp = now as f64 / self.half_life as f64 - self.epoch;
+        if exp > 512.0 {
+            // Rebase so the exponent stays well inside f64 range.
+            let shift = 2f64.powf(-exp);
+            for acct in self.accounts.values_mut() {
+                acct.usage_scaled *= shift;
+            }
+            self.total_usage_scaled *= shift;
+            self.epoch = now as f64 / self.half_life as f64;
+            return 1.0;
+        }
+        2f64.powf(exp)
+    }
+
+    /// Charge `core_seconds` of usage to a user at time `now`.
+    pub fn charge(&mut self, user: u32, core_seconds: f64, now: Time) {
+        self.ensure_user(user, 1.0);
+        let scaled = core_seconds * self.scale(now);
+        self.accounts.get_mut(&user).unwrap().usage_scaled += scaled;
+        self.total_usage_scaled += scaled;
+    }
+
+    /// Fair-share factor in (0, 1]: 1 = under-served, →0 = heavy user.
+    pub fn factor(&mut self, user: u32, _now: Time) -> f64 {
+        self.ensure_user(user, 1.0);
+        let acct = &self.accounts[&user];
+        if self.total_usage_scaled <= 0.0 || self.total_shares <= 0.0 {
+            return 1.0;
+        }
+        let usage_frac = acct.usage_scaled / self.total_usage_scaled;
+        let share_frac = acct.shares / self.total_shares;
+        if share_frac <= 0.0 {
+            return 0.0;
+        }
+        2f64.powf(-usage_frac / share_frac)
+    }
+
+    /// Absolute decayed usage (core-seconds as of `now`).
+    pub fn usage(&mut self, user: u32, now: Time) -> f64 {
+        let s = self.scale(now);
+        self.accounts
+            .get(&user)
+            .map(|a| a.usage_scaled / s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn user_count(&self) -> usize {
+        self.accounts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_user_has_full_factor() {
+        let mut fs = FairShare::new(604_800);
+        fs.ensure_user(1, 1.0);
+        assert!((fs.factor(1, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heavy_user_gets_lower_factor() {
+        let mut fs = FairShare::new(604_800);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        fs.charge(1, 1e6, 100);
+        let f1 = fs.factor(1, 100);
+        let f2 = fs.factor(2, 100);
+        assert!(f1 < f2, "f1={f1} f2={f2}");
+        // User 1 holds 100% of usage but 50% of shares → 2^-2 = 0.25.
+        assert!((f1 - 0.25).abs() < 1e-9);
+        assert!((f2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn usage_decays_with_half_life() {
+        let mut fs = FairShare::new(1000);
+        fs.charge(1, 800.0, 0);
+        assert!((fs.usage(1, 1000) - 400.0).abs() < 1e-9);
+        assert!((fs.usage(1, 2000) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn older_usage_counts_less_than_recent() {
+        let mut fs = FairShare::new(1000);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        fs.charge(1, 500.0, 0); // old usage
+        fs.charge(2, 500.0, 5000); // recent usage
+        // Same raw core-seconds, but user 2's are more recent ⇒ user 2 is
+        // the heavier user now.
+        assert!(fs.factor(2, 5000) < fs.factor(1, 5000));
+    }
+
+    #[test]
+    fn balanced_users_converge_to_equal_factors() {
+        let mut fs = FairShare::new(3600);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        fs.charge(1, 500.0, 0);
+        fs.charge(2, 500.0, 0);
+        let f1 = fs.factor(1, 10);
+        let f2 = fs.factor(2, 10);
+        assert!((f1 - f2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ensure_user_is_idempotent() {
+        let mut fs = FairShare::new(100);
+        fs.ensure_user(7, 2.0);
+        fs.ensure_user(7, 5.0); // ignored
+        assert_eq!(fs.user_count(), 1);
+        assert!((fs.factor(7, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn long_horizon_rebase_keeps_factors_finite() {
+        let mut fs = FairShare::new(3600);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        // Charge across ~10 years of simulated time (≫ 512 half-lives).
+        let mut t = 0;
+        for _ in 0..2000 {
+            fs.charge(1, 100.0, t);
+            fs.charge(2, 50.0, t);
+            t += 36 * 3600;
+        }
+        let f1 = fs.factor(1, t);
+        let f2 = fs.factor(2, t);
+        assert!(f1.is_finite() && f2.is_finite());
+        assert!(f1 < f2);
+        assert!(fs.usage(1, t).is_finite());
+    }
+}

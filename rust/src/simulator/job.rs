@@ -1,0 +1,164 @@
+//! Jobs: specifications, lifecycle states, dependencies and geometries.
+//!
+//! A *geometry* (paper §4.8) is the (system, cores) pair a submission is
+//! keyed by — ASA maintains one learning state per geometry, shared across
+//! workflows and runs.
+
+use crate::{Cores, Time};
+
+/// Opaque job identifier (index into the simulator's job arena).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// Slurm-style dependency: the job may not *start* (nor be charged) before
+/// the condition holds. `AfterOk` is what ASA's non-naïve mode uses to make
+/// over-predictions loss-free (paper §2.3, §4.5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Dependency {
+    /// Start only after all listed jobs completed successfully.
+    AfterOk(Vec<JobId>),
+    /// Start only at/after the given absolute time (`--begin`).
+    BeginAt(Time),
+}
+
+/// Lifecycle of a simulated job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// In queue, waiting for priority/resources (or for dependencies).
+    Pending,
+    /// Allocated and executing.
+    Running,
+    /// Ran to completion.
+    Completed,
+    /// Cancelled while pending or running.
+    Cancelled,
+    /// Killed at its time limit before completing its work.
+    TimedOut,
+}
+
+/// What the submitting entity asks for.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Owning user (fair-share accounting key).
+    pub user: u32,
+    /// Human-readable tag (workflow stage name or "bg").
+    pub name: String,
+    /// Cores requested (whole allocation, paper-style).
+    pub cores: Cores,
+    /// Wall-clock limit used for scheduling/backfill reservations.
+    pub time_limit: Time,
+    /// True service demand; the simulator ends the job after this long
+    /// (capped by `time_limit`). The scheduler never sees this.
+    pub runtime: Time,
+    /// Optional start constraint.
+    pub dependency: Option<Dependency>,
+}
+
+impl JobSpec {
+    pub fn new(user: u32, name: impl Into<String>, cores: Cores, runtime: Time) -> Self {
+        JobSpec {
+            user,
+            name: name.into(),
+            cores,
+            // Users pad their limits; 1.5x + 10 min is a common habit and
+            // what makes backfill estimates conservative.
+            time_limit: runtime + runtime / 2 + 600,
+            runtime,
+            dependency: None,
+        }
+    }
+
+    pub fn with_limit(mut self, limit: Time) -> Self {
+        self.time_limit = limit;
+        self
+    }
+
+    pub fn with_dependency(mut self, dep: Dependency) -> Self {
+        self.dependency = Some(dep);
+        self
+    }
+}
+
+/// A job instance in the simulator arena.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submit_time: Time,
+    pub start_time: Option<Time>,
+    pub end_time: Option<Time>,
+}
+
+impl Job {
+    pub fn new(id: JobId, spec: JobSpec, submit_time: Time) -> Self {
+        Job {
+            id,
+            spec,
+            state: JobState::Pending,
+            submit_time,
+            start_time: None,
+            end_time: None,
+        }
+    }
+
+    /// Queue waiting time (defined once started).
+    pub fn wait_time(&self) -> Option<Time> {
+        self.start_time.map(|s| s - self.submit_time)
+    }
+
+    /// Core-seconds actually charged (start..end × cores).
+    pub fn core_seconds(&self) -> i64 {
+        match (self.start_time, self.end_time) {
+            (Some(s), Some(e)) => (e - s) * self.spec.cores as i64,
+            _ => 0,
+        }
+    }
+
+    /// Core-hours actually charged.
+    pub fn core_hours(&self) -> f64 {
+        self.core_seconds() as f64 / 3600.0
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.state,
+            JobState::Completed | JobState::Cancelled | JobState::TimedOut
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_pad_time_limit() {
+        let s = JobSpec::new(1, "stage", 28, 1000);
+        assert_eq!(s.time_limit, 1000 + 500 + 600);
+        assert!(s.dependency.is_none());
+    }
+
+    #[test]
+    fn wait_and_charge_accounting() {
+        let mut j = Job::new(JobId(0), JobSpec::new(1, "x", 10, 100), 50);
+        assert_eq!(j.wait_time(), None);
+        assert_eq!(j.core_seconds(), 0);
+        j.start_time = Some(80);
+        j.end_time = Some(180);
+        j.state = JobState::Completed;
+        assert_eq!(j.wait_time(), Some(30));
+        assert_eq!(j.core_seconds(), 1000);
+        assert!((j.core_hours() - 1000.0 / 3600.0).abs() < 1e-12);
+        assert!(j.is_terminal());
+    }
+
+    #[test]
+    fn builder_methods() {
+        let s = JobSpec::new(2, "y", 4, 10)
+            .with_limit(99)
+            .with_dependency(Dependency::AfterOk(vec![JobId(7)]));
+        assert_eq!(s.time_limit, 99);
+        assert_eq!(s.dependency, Some(Dependency::AfterOk(vec![JobId(7)])));
+    }
+}

@@ -1,0 +1,77 @@
+//! Simulation observability: utilization, queue depth and wait statistics.
+
+use crate::util::stats::Summary;
+use crate::Time;
+
+/// Aggregated counters maintained by the simulator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Waits of background jobs (seconds).
+    pub bg_wait: Summary,
+    /// Waits of foreground (workflow/probe) jobs.
+    pub fg_wait: Summary,
+    /// Time-weighted utilization integral (core-seconds used / capacity).
+    util_integral: f64,
+    util_last_t: Time,
+    util_last_value: f64,
+    /// Completed / cancelled / timed-out job counts.
+    pub completed: u64,
+    pub cancelled: u64,
+    pub timed_out: u64,
+    /// Scheduling passes run and jobs started by backfill vs FCFS.
+    pub passes: u64,
+    pub started: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the utilization level holding from `now` onwards.
+    pub fn sample_utilization(&mut self, now: Time, utilization: f64) {
+        if now > self.util_last_t {
+            self.util_integral += self.util_last_value * (now - self.util_last_t) as f64;
+            self.util_last_t = now;
+        }
+        self.util_last_value = utilization;
+    }
+
+    /// Mean utilization over `[0, now]`.
+    pub fn mean_utilization(&self, now: Time) -> f64 {
+        if now <= 0 {
+            return self.util_last_value;
+        }
+        let tail = self.util_last_value * (now - self.util_last_t).max(0) as f64;
+        (self.util_integral + tail) / now as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_is_time_weighted() {
+        let mut m = Metrics::new();
+        m.sample_utilization(0, 1.0); // 100% from t=0
+        m.sample_utilization(10, 0.0); // 0% from t=10
+        assert!((m.mean_utilization(20) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_with_tail_segment() {
+        let mut m = Metrics::new();
+        m.sample_utilization(0, 0.5);
+        assert!((m.mean_utilization(100) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_summaries_accumulate() {
+        let mut m = Metrics::new();
+        m.bg_wait.add(10.0);
+        m.fg_wait.add(20.0);
+        assert_eq!(m.bg_wait.count(), 1);
+        assert_eq!(m.fg_wait.mean(), 20.0);
+    }
+}

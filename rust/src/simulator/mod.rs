@@ -1,0 +1,113 @@
+//! Discrete-event HPC cluster simulator — the substrate standing in for the
+//! paper's two production systems (HPC2n and UPPMAX).
+//!
+//! The paper's evaluation ran against live Slurm installations; ASA only
+//! observes *submit → start* delays, so what this substrate must reproduce is
+//! the queue-wait *process*: a multifactor-priority (fair-share + age + size)
+//! scheduler with EASY backfill, whole-job core allocations, job
+//! dependencies with deferred start, and a non-stationary background
+//! workload from competing users. See `DESIGN.md` §1 for the substitution
+//! ledger.
+//!
+//! Components:
+//! * [`event`] — the time-ordered event heap.
+//! * [`job`] — job specs, states, dependencies, geometries.
+//! * [`cluster`] — node/core inventory and allocation accounting.
+//! * [`fairshare`] — per-user halflife-decayed usage and priority factors.
+//! * [`slurm`] — the scheduling pass: priority ordering + EASY backfill.
+//! * [`trace`] — synthetic background-workload generation (per-system mix).
+//! * [`sim`] — the [`sim::Simulator`] façade driving all of the above.
+//! * [`metrics`] — queue/utilization observability.
+
+pub mod event;
+pub mod job;
+pub mod cluster;
+pub mod fairshare;
+pub mod slurm;
+pub mod trace;
+pub mod sim;
+pub mod metrics;
+pub mod config;
+
+pub use job::{Dependency, Job, JobId, JobSpec, JobState};
+pub use sim::{SimEvent, Simulator};
+pub use trace::BackgroundWorkload;
+
+use crate::Cores;
+
+/// Static description of one simulated computing system (paper §4.2).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub cores_per_node: Cores,
+    /// Scheduler pass parameters.
+    pub sched: slurm::SchedConfig,
+    /// Background workload profile.
+    pub workload: trace::WorkloadProfile,
+}
+
+impl SystemConfig {
+    pub fn total_cores(&self) -> Cores {
+        self.nodes * self.cores_per_node
+    }
+
+    /// HPC2n: 602 nodes × 2×14-core Xeon E5 v4 = 28 cores/node.
+    /// Small-job dominated, bursty, fragmented — short but *highly variable*
+    /// waits for ≤112-core jobs (paper Table 2: 0.4–1.5 h ± up to 0.8 h).
+    pub fn hpc2n() -> Self {
+        SystemConfig {
+            name: "hpc2n",
+            nodes: 602,
+            cores_per_node: 28,
+            sched: slurm::SchedConfig::default(),
+            workload: trace::WorkloadProfile::hpc2n(),
+        }
+    }
+
+    /// UPPMAX: 486 nodes × 2×10-core Xeon E5 v4 = 20 cores/node.
+    /// Heavily loaded by long, large jobs — *long but stable* waits
+    /// (paper Table 2: 11–17 h ± ~1.5 h, zero misses).
+    pub fn uppmax() -> Self {
+        SystemConfig {
+            name: "uppmax",
+            nodes: 486,
+            cores_per_node: 20,
+            sched: slurm::SchedConfig::default(),
+            workload: trace::WorkloadProfile::uppmax(),
+        }
+    }
+
+    /// A small test system for unit/integration tests: fast to simulate,
+    /// non-trivial queueing.
+    pub fn testbed(nodes: u32, cores_per_node: Cores) -> Self {
+        SystemConfig {
+            name: "testbed",
+            nodes,
+            cores_per_node,
+            sched: slurm::SchedConfig::default(),
+            workload: trace::WorkloadProfile::quiet(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "hpc2n" => Some(Self::hpc2n()),
+            "uppmax" => Some(Self::uppmax()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_presets() {
+        assert_eq!(SystemConfig::hpc2n().total_cores(), 602 * 28);
+        assert_eq!(SystemConfig::uppmax().total_cores(), 486 * 20);
+        assert!(SystemConfig::by_name("hpc2n").is_some());
+        assert!(SystemConfig::by_name("lumi").is_none());
+    }
+}

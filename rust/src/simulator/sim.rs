@@ -1,0 +1,736 @@
+//! The [`Simulator`] façade: event loop, job lifecycle, dependency engine
+//! and the scheduling-pass trigger.
+//!
+//! Drivers (the WMS / coordinator strategies) interact in a *pull* style:
+//! they `submit`/`submit_at`/`cancel` jobs and call [`Simulator::step`] to
+//! advance time until the next *observable* event (a state change of a
+//! foreground job). Background-trace jobs churn underneath without
+//! producing observable events, exactly as other users' jobs do on a real
+//! system.
+
+use crate::simulator::cluster::Cluster;
+use crate::simulator::event::{EventKind, EventQueue};
+use crate::simulator::fairshare::FairShare;
+use crate::simulator::job::{Dependency, Job, JobId, JobSpec, JobState};
+use crate::simulator::metrics::Metrics;
+use crate::simulator::slurm::{schedule_pass, Candidate};
+use crate::simulator::trace::BackgroundWorkload;
+use crate::simulator::SystemConfig;
+use crate::util::rng::Rng;
+use crate::Time;
+use std::collections::VecDeque;
+
+/// Observable (foreground) state change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimEvent {
+    Submitted { id: JobId, time: Time },
+    Started { id: JobId, time: Time },
+    Finished { id: JobId, time: Time },
+    Cancelled { id: JobId, time: Time },
+    TimedOut { id: JobId, time: Time },
+}
+
+impl SimEvent {
+    pub fn id(&self) -> JobId {
+        match *self {
+            SimEvent::Submitted { id, .. }
+            | SimEvent::Started { id, .. }
+            | SimEvent::Finished { id, .. }
+            | SimEvent::Cancelled { id, .. }
+            | SimEvent::TimedOut { id, .. } => id,
+        }
+    }
+
+    pub fn time(&self) -> Time {
+        match *self {
+            SimEvent::Submitted { time, .. }
+            | SimEvent::Started { time, .. }
+            | SimEvent::Finished { time, .. }
+            | SimEvent::Cancelled { time, .. }
+            | SimEvent::TimedOut { time, .. } => time,
+        }
+    }
+}
+
+struct JobMeta {
+    foreground: bool,
+    /// Expected finish event time; guards against stale Finish events after
+    /// a cancel + garbage-heap entry.
+    finish_at: Option<Time>,
+}
+
+/// The discrete-event cluster simulator.
+pub struct Simulator {
+    cfg: SystemConfig,
+    now: Time,
+    events: EventQueue,
+    jobs: Vec<Job>,
+    meta: Vec<JobMeta>,
+    /// Jobs currently queued (Pending), including dependency-held ones.
+    pending: Vec<JobId>,
+    cluster: Cluster,
+    fairshare: FairShare,
+    trace: Option<BackgroundWorkload>,
+    out: VecDeque<SimEvent>,
+    pub metrics: Metrics,
+    need_pass: bool,
+    /// Foreground users already seeded with pre-existing usage.
+    seeded_users: std::collections::HashSet<u32>,
+    usage_rng: Rng,
+}
+
+impl Simulator {
+    /// Create a simulator with the system's background workload running and
+    /// the machine pre-filled to steady state.
+    pub fn new(cfg: SystemConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let trace_rng = rng.fork(0x7ace);
+        let mut sim = Simulator {
+            cluster: Cluster::new(cfg.total_cores()),
+            fairshare: FairShare::new(cfg.sched.decay_half_life),
+            trace: Some(BackgroundWorkload::new(
+                cfg.workload.clone(),
+                cfg.total_cores(),
+                trace_rng,
+            )),
+            cfg,
+            now: 0,
+            events: EventQueue::new(),
+            jobs: Vec::new(),
+            meta: Vec::new(),
+            pending: Vec::new(),
+            out: VecDeque::new(),
+            metrics: Metrics::new(),
+            need_pass: false,
+            seeded_users: std::collections::HashSet::new(),
+            usage_rng: rng.fork(0x05a6e),
+        };
+        sim.prefill();
+        let first_gap = sim.trace.as_mut().unwrap().next_gap(0);
+        sim.events.push(first_gap, EventKind::TraceArrival);
+        sim
+    }
+
+    /// A quiet simulator with no background workload (unit tests).
+    pub fn new_empty(cfg: SystemConfig) -> Self {
+        Simulator {
+            cluster: Cluster::new(cfg.total_cores()),
+            fairshare: FairShare::new(cfg.sched.decay_half_life),
+            trace: None,
+            cfg,
+            now: 0,
+            events: EventQueue::new(),
+            jobs: Vec::new(),
+            meta: Vec::new(),
+            pending: Vec::new(),
+            out: VecDeque::new(),
+            metrics: Metrics::new(),
+            need_pass: false,
+            seeded_users: std::collections::HashSet::new(),
+            usage_rng: Rng::new(0),
+        }
+    }
+
+    fn prefill(&mut self) {
+        // Background users carry pre-existing (decayed) usage so the
+        // fair-share ordering at t=0 is as diverse as a production system's.
+        let profile = self.trace.as_ref().unwrap().profile().clone();
+        if profile.initial_user_usage > 0.0 {
+            for u in 0..profile.user_pool {
+                let usage = self
+                    .usage_rng
+                    .exponential(1.0 / profile.initial_user_usage);
+                self.fairshare.charge(1000 + u, usage, 0);
+            }
+        }
+        let (running, backlog) = self.trace.as_mut().unwrap().prefill();
+        for (spec, residual) in running {
+            let limit_left = residual + (spec.time_limit - spec.runtime).max(0);
+            let id = self.register(spec, false);
+            // Start directly: bypass the queue for the pre-existing load.
+            let job = &mut self.jobs[id.0 as usize];
+            job.state = JobState::Running;
+            job.start_time = Some(0);
+            let cores = job.spec.cores;
+            self.cluster.allocate(id, cores, 0, limit_left);
+            self.meta[id.0 as usize].finish_at = Some(residual);
+            self.events.push(residual, EventKind::Finish(id));
+        }
+        for spec in backlog {
+            let id = self.register(spec, false);
+            self.pending.push(id);
+            self.jobs[id.0 as usize].state = JobState::Pending;
+        }
+        self.need_pass = true;
+        self.metrics.sample_utilization(0, self.cluster.utilization());
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id.0 as usize]
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn register(&mut self, spec: JobSpec, foreground: bool) -> JobId {
+        assert!(
+            spec.cores >= 1 && spec.cores <= self.cluster.total_cores(),
+            "job cores {} outside machine capacity {}",
+            spec.cores,
+            self.cluster.total_cores()
+        );
+        if foreground && !self.seeded_users.contains(&spec.user) {
+            self.seeded_users.insert(spec.user);
+            if let Some(trace) = self.trace.as_ref() {
+                let mean = trace.profile().initial_user_usage;
+                if mean > 0.0 {
+                    self.fairshare.charge(spec.user, mean, self.now);
+                }
+            }
+        }
+        let id = JobId(self.jobs.len() as u64);
+        self.jobs.push(Job::new(id, spec, self.now));
+        self.meta.push(JobMeta {
+            foreground,
+            finish_at: None,
+        });
+        id
+    }
+
+    /// Submit a foreground job now. Returns its id; a `Submitted` event is
+    /// emitted on the observable stream.
+    pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        let id = self.register(spec, true);
+        self.enqueue(id);
+        id
+    }
+
+    /// Schedule a foreground submission at a future time.
+    pub fn submit_at(&mut self, at: Time, spec: JobSpec) -> JobId {
+        assert!(at >= self.now, "submit_at in the past ({at} < {})", self.now);
+        let id = self.register(spec, true);
+        self.jobs[id.0 as usize].submit_time = at;
+        self.events.push(at, EventKind::Submit(id));
+        id
+    }
+
+    fn enqueue(&mut self, id: JobId) {
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Pending);
+        job.submit_time = self.now;
+        self.pending.push(id);
+        self.need_pass = true;
+        if self.meta[id.0 as usize].foreground {
+            self.out.push_back(SimEvent::Submitted {
+                id,
+                time: self.now,
+            });
+        }
+    }
+
+    /// Cancel a pending or running job.
+    pub fn cancel(&mut self, id: JobId) {
+        let state = self.jobs[id.0 as usize].state;
+        match state {
+            JobState::Pending => {
+                self.pending.retain(|&p| p != id);
+            }
+            JobState::Running => {
+                self.cluster.release(id);
+                let job = &self.jobs[id.0 as usize];
+                let used = (self.now - job.start_time.unwrap()) as f64
+                    * job.spec.cores as f64;
+                self.fairshare.charge(job.spec.user, used, self.now);
+                self.meta[id.0 as usize].finish_at = None;
+            }
+            _ => return, // already terminal
+        }
+        let job = &mut self.jobs[id.0 as usize];
+        job.state = JobState::Cancelled;
+        job.end_time = Some(self.now);
+        self.metrics.cancelled += 1;
+        self.need_pass = true;
+        if self.meta[id.0 as usize].foreground {
+            self.out.push_back(SimEvent::Cancelled {
+                id,
+                time: self.now,
+            });
+        }
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+        self.cancel_broken_dependents(id);
+    }
+
+    /// Jobs whose `AfterOk` dependency can no longer be satisfied are
+    /// cancelled (Slurm's `DependencyNeverSatisfied`, with kill_invalid
+    /// semantics so drivers get a signal instead of a zombie).
+    fn cancel_broken_dependents(&mut self, failed: JobId) {
+        let broken: Vec<JobId> = self
+            .pending
+            .iter()
+            .copied()
+            .filter(|&p| {
+                match &self.jobs[p.0 as usize].spec.dependency {
+                    Some(Dependency::AfterOk(deps)) => deps.iter().any(|&d| {
+                        d == failed
+                            && matches!(
+                                self.jobs[d.0 as usize].state,
+                                JobState::Cancelled | JobState::TimedOut
+                            )
+                    }),
+                    _ => false,
+                }
+            })
+            .collect();
+        for id in broken {
+            self.cancel(id);
+        }
+    }
+
+    fn dependency_ready(&self, id: JobId) -> bool {
+        match &self.jobs[id.0 as usize].spec.dependency {
+            None => true,
+            Some(Dependency::BeginAt(t)) => self.now >= *t,
+            Some(Dependency::AfterOk(deps)) => deps
+                .iter()
+                .all(|&d| self.jobs[d.0 as usize].state == JobState::Completed),
+        }
+    }
+
+    /// Earliest future time a `BeginAt` dependency unblocks (to re-trigger
+    /// scheduling without polling).
+    fn next_begin_at(&self) -> Option<Time> {
+        self.pending
+            .iter()
+            .filter_map(|&p| match self.jobs[p.0 as usize].spec.dependency {
+                Some(Dependency::BeginAt(t)) if t > self.now => Some(t),
+                _ => None,
+            })
+            .min()
+    }
+
+    fn run_scheduling_pass(&mut self) {
+        self.need_pass = false;
+        self.metrics.passes += 1;
+        // Fast path: a fully-packed machine cannot start anything, so the
+        // (sort-heavy) pass is pointless. At the evaluated systems' ~98%
+        // utilization this skips the majority of passes. BeginAt wakeups
+        // still get scheduled below via the slow path whenever a start or
+        // completion changes occupancy.
+        if self.cluster.free_cores() == 0 {
+            return;
+        }
+        let candidates: Vec<Candidate> = self
+            .pending
+            .iter()
+            .filter(|&&id| self.dependency_ready(id))
+            .map(|&id| {
+                let j = &self.jobs[id.0 as usize];
+                Candidate {
+                    id,
+                    user: j.spec.user,
+                    cores: j.spec.cores,
+                    time_limit: j.spec.time_limit,
+                    submit_time: j.submit_time,
+                }
+            })
+            .collect();
+        if let Some(t) = self.next_begin_at() {
+            // Wake the scheduler when a --begin job becomes eligible.
+            self.events.push(t, EventKind::Sample);
+        }
+        if candidates.is_empty() {
+            return;
+        }
+        let result = schedule_pass(
+            &self.cfg.sched,
+            &self.cluster,
+            &mut self.fairshare,
+            &candidates,
+            self.now,
+        );
+        for id in result.start {
+            self.start_job(id);
+        }
+    }
+
+    fn start_job(&mut self, id: JobId) {
+        self.pending.retain(|&p| p != id);
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Pending);
+        job.state = JobState::Running;
+        job.start_time = Some(self.now);
+        let wait = (self.now - job.submit_time) as f64;
+        let cores = job.spec.cores;
+        let runs_for = job.spec.runtime.min(job.spec.time_limit);
+        let limit_end = self.now + job.spec.time_limit;
+        self.cluster.allocate(id, cores, self.now, limit_end);
+        let finish = self.now + runs_for;
+        self.meta[id.0 as usize].finish_at = Some(finish);
+        self.events.push(finish, EventKind::Finish(id));
+        self.metrics.started += 1;
+        if self.meta[id.0 as usize].foreground {
+            self.metrics.fg_wait.add(wait);
+            self.out.push_back(SimEvent::Started {
+                id,
+                time: self.now,
+            });
+        } else {
+            self.metrics.bg_wait.add(wait);
+        }
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+    }
+
+    fn finish_job(&mut self, id: JobId) {
+        // Stale event guard (job cancelled/restarted since scheduling).
+        if self.jobs[id.0 as usize].state != JobState::Running
+            || self.meta[id.0 as usize].finish_at != Some(self.now)
+        {
+            return;
+        }
+        self.cluster.release(id);
+        let timed_out;
+        {
+            let job = &mut self.jobs[id.0 as usize];
+            timed_out = job.spec.runtime > job.spec.time_limit;
+            job.state = if timed_out {
+                JobState::TimedOut
+            } else {
+                JobState::Completed
+            };
+            job.end_time = Some(self.now);
+        }
+        let job = &self.jobs[id.0 as usize];
+        self.fairshare
+            .charge(job.spec.user, job.core_seconds() as f64, self.now);
+        if timed_out {
+            self.metrics.timed_out += 1;
+        } else {
+            self.metrics.completed += 1;
+        }
+        self.need_pass = true;
+        if self.meta[id.0 as usize].foreground {
+            let ev = if timed_out {
+                SimEvent::TimedOut { id, time: self.now }
+            } else {
+                SimEvent::Finished { id, time: self.now }
+            };
+            self.out.push_back(ev);
+        }
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+        if timed_out {
+            self.cancel_broken_dependents_after_timeout(id);
+        }
+    }
+
+    fn cancel_broken_dependents_after_timeout(&mut self, failed: JobId) {
+        self.cancel_broken_dependents(failed);
+    }
+
+    /// Process exactly one internal event. Returns false when the event heap
+    /// is exhausted.
+    fn advance_one(&mut self) -> bool {
+        let Some((time, kind)) = self.events.pop() else {
+            return false;
+        };
+        debug_assert!(time >= self.now, "time went backwards");
+        self.now = time;
+        match kind {
+            EventKind::Submit(id) => {
+                self.jobs[id.0 as usize].state = JobState::Pending;
+                self.enqueue(id);
+            }
+            EventKind::Finish(id) => self.finish_job(id),
+            EventKind::TraceArrival => {
+                if let Some(trace) = self.trace.as_mut() {
+                    let spec = trace.next_job();
+                    let gap = trace.next_gap(self.now);
+                    let id = self.register(spec, false);
+                    self.enqueue(id);
+                    self.events.push(self.now + gap, EventKind::TraceArrival);
+                }
+            }
+            EventKind::Sample => {
+                self.need_pass = true;
+            }
+        }
+        if self.need_pass {
+            self.run_scheduling_pass();
+        }
+        true
+    }
+
+    /// Run a deferred scheduling pass if one is pending (submissions and
+    /// cancellations mark the queue dirty; a pass must run before time
+    /// advances or the loop idles).
+    fn flush_pass(&mut self) {
+        if self.need_pass {
+            self.run_scheduling_pass();
+        }
+    }
+
+    /// Advance until the next observable event, or until simulated time
+    /// exceeds `deadline`. Returns `None` on deadline/exhaustion.
+    pub fn step_until(&mut self, deadline: Time) -> Option<SimEvent> {
+        loop {
+            self.flush_pass();
+            if let Some(ev) = self.out.pop_front() {
+                return Some(ev);
+            }
+            match self.events.peek_time() {
+                Some(t) if t <= deadline => {
+                    self.advance_one();
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    /// Advance until the next observable event (no deadline). Returns `None`
+    /// only if the event heap empties (possible without a background trace).
+    pub fn step(&mut self) -> Option<SimEvent> {
+        loop {
+            self.flush_pass();
+            if let Some(ev) = self.out.pop_front() {
+                return Some(ev);
+            }
+            if !self.advance_one() {
+                return None;
+            }
+        }
+    }
+
+    /// Advance simulated time to at least `t`, buffering observable events.
+    pub fn run_until(&mut self, t: Time) {
+        self.flush_pass();
+        while matches!(self.events.peek_time(), Some(et) if et <= t) {
+            self.advance_one();
+        }
+        if self.now < t {
+            self.now = t;
+        }
+    }
+
+    /// Drain any buffered observable events without advancing time.
+    pub fn drain_events(&mut self) -> Vec<SimEvent> {
+        self.out.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SystemConfig;
+
+    fn quiet_sim(cores: u32) -> Simulator {
+        Simulator::new_empty(SystemConfig::testbed(cores, 1))
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let mut sim = quiet_sim(10);
+        let id = sim.submit(JobSpec::new(1, "j", 4, 100));
+        let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
+        assert_eq!(
+            evs,
+            vec![
+                SimEvent::Submitted { id, time: 0 },
+                SimEvent::Started { id, time: 0 },
+                SimEvent::Finished { id, time: 100 },
+            ]
+        );
+        assert_eq!(sim.job(id).wait_time(), Some(0));
+        assert_eq!(sim.job(id).core_seconds(), 400);
+    }
+
+    #[test]
+    fn jobs_queue_when_machine_full() {
+        let mut sim = quiet_sim(10);
+        let a = sim.submit(JobSpec::new(1, "a", 10, 100).with_limit(100));
+        let b = sim.submit(JobSpec::new(2, "b", 10, 50));
+        let mut started_b = None;
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, time } = ev {
+                if id == b {
+                    started_b = Some(time);
+                }
+            }
+        }
+        assert_eq!(started_b, Some(100), "b must wait for a");
+        assert_eq!(sim.job(a).state, JobState::Completed);
+    }
+
+    #[test]
+    fn afterok_dependency_defers_start() {
+        let mut sim = quiet_sim(100);
+        let a = sim.submit(JobSpec::new(1, "a", 5, 200));
+        let b = sim.submit(
+            JobSpec::new(1, "b", 5, 10).with_dependency(Dependency::AfterOk(vec![a])),
+        );
+        let mut b_start = None;
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, time } = ev {
+                if id == b {
+                    b_start = Some(time);
+                }
+            }
+        }
+        // Plenty of free cores, but b may only start when a completes.
+        assert_eq!(b_start, Some(200));
+    }
+
+    #[test]
+    fn begin_at_dependency_defers_start() {
+        let mut sim = quiet_sim(10);
+        let id = sim.submit(JobSpec::new(1, "j", 1, 10).with_dependency(Dependency::BeginAt(500)));
+        let mut start = None;
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { time, .. } = ev {
+                start = Some(time);
+            }
+        }
+        assert_eq!(start, Some(500), "id={id:?}");
+    }
+
+    #[test]
+    fn cancel_pending_job() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 1000).with_limit(1000));
+        let b = sim.submit(JobSpec::new(1, "b", 4, 10));
+        // Drain submission/start events.
+        let _ = sim.drain_events();
+        sim.cancel(b);
+        assert_eq!(sim.job(b).state, JobState::Cancelled);
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(a).state, JobState::Completed);
+    }
+
+    #[test]
+    fn cancel_running_job_frees_cores() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 1000).with_limit(1000));
+        let b = sim.submit(JobSpec::new(1, "b", 4, 10));
+        let _ = sim.drain_events();
+        sim.run_until(100);
+        sim.cancel(a);
+        let mut b_started = None;
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, time } = ev {
+                if id == b {
+                    b_started = Some(time);
+                }
+            }
+        }
+        assert_eq!(b_started, Some(100));
+        // Cancelled jobs are charged for what they used: 100 s × 4 cores.
+        assert_eq!(sim.job(a).core_seconds(), 400);
+        assert_eq!(sim.job(a).state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn dependent_of_cancelled_job_is_cancelled() {
+        let mut sim = quiet_sim(10);
+        let a = sim.submit(JobSpec::new(1, "a", 10, 1000).with_limit(1000));
+        let b = sim.submit(JobSpec::new(1, "b", 10, 1000).with_limit(1000)); // queued behind a
+        let c = sim.submit(
+            JobSpec::new(1, "c", 1, 10).with_dependency(Dependency::AfterOk(vec![b])),
+        );
+        let _ = sim.drain_events();
+        sim.cancel(b);
+        let evs = sim.drain_events();
+        assert!(evs.contains(&SimEvent::Cancelled { id: b, time: 0 }));
+        assert!(evs.contains(&SimEvent::Cancelled { id: c, time: 0 }));
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(a).state, JobState::Completed);
+    }
+
+    #[test]
+    fn timeout_kills_at_limit() {
+        let mut sim = quiet_sim(2);
+        let id = sim.submit(JobSpec::new(1, "t", 1, 500).with_limit(100));
+        let mut out = Vec::new();
+        while let Some(ev) = sim.step() {
+            out.push(ev);
+        }
+        assert!(out.contains(&SimEvent::TimedOut { id, time: 100 }));
+        assert_eq!(sim.job(id).state, JobState::TimedOut);
+    }
+
+    #[test]
+    fn submit_at_future_time() {
+        let mut sim = quiet_sim(2);
+        let id = sim.submit_at(300, JobSpec::new(1, "f", 1, 10));
+        let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
+        assert_eq!(evs[0], SimEvent::Submitted { id, time: 300 });
+        assert_eq!(evs[1], SimEvent::Started { id, time: 300 });
+    }
+
+    #[test]
+    fn background_trace_creates_waits() {
+        let mut cfg = SystemConfig::testbed(8, 4); // 32 cores
+        cfg.workload = crate::simulator::trace::WorkloadProfile {
+            classes: vec![crate::simulator::trace::JobClass {
+                weight: 1.0,
+                cores_lo: 4,
+                cores_hi: 16,
+                runtime_mu: 7.0,
+                runtime_sigma: 0.8,
+            }],
+            target_load: 1.1, // oversubscribed on purpose
+            burstiness: 0.8,
+            regime_period: 0,
+            regime_lo: 1.0,
+            regime_hi: 1.0,
+            user_pool: 8,
+            backlog_factor: 0.5,
+            initial_user_usage: 0.0,
+        };
+        let mut sim = Simulator::new(cfg, 7);
+        sim.run_until(48 * 3600);
+        assert!(sim.metrics.started > 50, "bg jobs should run");
+        assert!(
+            sim.metrics.bg_wait.mean() > 0.0,
+            "oversubscribed machine must queue"
+        );
+        assert!(sim.metrics.mean_utilization(sim.now()) > 0.5);
+    }
+
+    #[test]
+    fn foreground_probe_waits_under_load() {
+        let mut sim = Simulator::new(SystemConfig::testbed(8, 4), 3);
+        // Quiet profile: probe starts almost immediately.
+        let id = sim.submit(JobSpec::new(1, "probe", 8, 60));
+        let mut started = None;
+        while let Some(ev) = sim.step_until(7 * 24 * 3600) {
+            if let SimEvent::Started { id: sid, time } = ev {
+                if sid == id {
+                    started = Some(time);
+                    break;
+                }
+            }
+        }
+        assert!(started.is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside machine capacity")]
+    fn oversized_job_rejected() {
+        let mut sim = quiet_sim(4);
+        sim.submit(JobSpec::new(1, "big", 5, 10));
+    }
+}

@@ -1,0 +1,288 @@
+//! The scheduling pass: Slurm-like multifactor priority + EASY backfill.
+//!
+//! Pending, dependency-eligible jobs are ordered by a weighted sum of
+//! fair-share, age and size factors (Slurm's multifactor plugin with its
+//! default-ish weights). The pass then starts jobs FCFS-by-priority; when
+//! the head job does not fit, it receives the single EASY reservation
+//! ("shadow time") and lower-priority jobs may backfill iff they do not
+//! delay it — the classic EASY-backfill rule both evaluated systems run.
+
+use crate::simulator::cluster::Cluster;
+use crate::simulator::fairshare::FairShare;
+use crate::simulator::job::JobId;
+use crate::{Cores, Time};
+
+/// Multifactor weights and limits.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    pub weight_fairshare: f64,
+    pub weight_age: f64,
+    pub weight_size: f64,
+    /// Age saturates at this many seconds (Slurm `PriorityMaxAge`).
+    pub max_age: Time,
+    /// Usage decay half-life for fair-share (Slurm `PriorityDecayHalfLife`).
+    pub decay_half_life: Time,
+    /// Cap on how many queued jobs one backfill pass examines
+    /// (`bf_max_job_test`): bounds the pass cost on deep queues.
+    pub backfill_depth: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            weight_fairshare: 10_000.0,
+            weight_age: 1_000.0,
+            weight_size: 100.0,
+            max_age: 7 * 24 * 3600,
+            decay_half_life: 7 * 24 * 3600,
+            backfill_depth: 1_000,
+        }
+    }
+}
+
+/// A pending, dependency-eligible job as seen by one scheduling pass.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub id: JobId,
+    pub user: u32,
+    pub cores: Cores,
+    pub time_limit: Time,
+    pub submit_time: Time,
+}
+
+/// Priority of one candidate (higher runs first).
+pub fn priority(cfg: &SchedConfig, fs_factor: f64, cand: &Candidate, now: Time, total_cores: Cores) -> f64 {
+    let age = ((now - cand.submit_time).max(0) as f64 / cfg.max_age as f64).min(1.0);
+    // Slurm's default size factor favours *larger* jobs (they are hardest to
+    // start and would starve otherwise).
+    let size = cand.cores as f64 / total_cores as f64;
+    cfg.weight_fairshare * fs_factor + cfg.weight_age * age + cfg.weight_size * size
+}
+
+/// Result of one pass: jobs to start now, plus the head-of-line reservation
+/// (if any) for observability.
+#[derive(Clone, Debug, Default)]
+pub struct PassResult {
+    pub start: Vec<JobId>,
+    /// `(job, earliest feasible start)` for the blocked head job.
+    pub reservation: Option<(JobId, Time)>,
+}
+
+/// One scheduling pass over the eligible queue.
+///
+/// `candidates` need not be sorted; the pass orders them by priority.
+/// Started jobs are *not* applied to `cluster` by this function — the caller
+/// (the simulator) applies state transitions — except internally the pass
+/// tracks hypothetical free cores so its own decisions are consistent.
+pub fn schedule_pass(
+    cfg: &SchedConfig,
+    cluster: &Cluster,
+    fairshare: &mut FairShare,
+    candidates: &[Candidate],
+    now: Time,
+) -> PassResult {
+    let mut result = PassResult::default();
+    if candidates.is_empty() {
+        return result;
+    }
+    let total = cluster.total_cores();
+
+    // Priority ordering (desc), deterministic tie-break on submit order/id.
+    let mut order: Vec<(f64, Candidate)> = candidates
+        .iter()
+        .map(|c| {
+            let fsf = fairshare.factor(c.user, now);
+            (priority(cfg, fsf, c, now, total), *c)
+        })
+        .collect();
+    order.sort_unstable_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap()
+            .then_with(|| a.1.submit_time.cmp(&b.1.submit_time))
+            .then_with(|| a.1.id.cmp(&b.1.id))
+    });
+
+    let mut free = cluster.free_cores();
+    let mut i = 0;
+
+    // FCFS phase: start head jobs while they fit.
+    while i < order.len() && order[i].1.cores <= free {
+        let cand = order[i].1;
+        result.start.push(cand.id);
+        free -= cand.cores;
+        i += 1;
+    }
+    if i >= order.len() {
+        return result;
+    }
+
+    // Head job blocked: compute its reservation against a hypothetical
+    // cluster where the jobs we just started are also running until
+    // now + their limit.
+    let head = order[i].1;
+    let (shadow, extra) = {
+        // Merge current allocations with the pass's own tentative starts.
+        let mut events: Vec<(Time, Cores)> = cluster
+            .allocations_by_end()
+            .iter()
+            .map(|a| (a.limit_end, a.cores))
+            .collect();
+        for (_, c) in order[..i].iter() {
+            events.push((now + c.time_limit, c.cores));
+        }
+        events.sort_unstable();
+        let mut f = free;
+        let mut found = None;
+        if head.cores <= f {
+            found = Some((now, f - head.cores));
+        } else {
+            for (t, c) in events {
+                f += c;
+                if head.cores <= f {
+                    found = Some((t, f - head.cores));
+                    break;
+                }
+            }
+        }
+        found.unwrap_or((Time::MAX, 0))
+    };
+    result.reservation = Some((head.id, shadow));
+
+    // Backfill phase: lower-priority jobs that cannot delay the reservation.
+    let mut extra = extra;
+    for (_, cand) in order[i + 1..].iter().take(cfg.backfill_depth) {
+        if cand.cores > free {
+            continue;
+        }
+        let ends_before_shadow = shadow == Time::MAX || now + cand.time_limit <= shadow;
+        let fits_in_extra = cand.cores <= extra;
+        if ends_before_shadow || fits_in_extra {
+            result.start.push(cand.id);
+            free -= cand.cores;
+            if !ends_before_shadow {
+                extra -= cand.cores;
+            }
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: u64, cores: Cores, limit: Time, submit: Time) -> Candidate {
+        Candidate {
+            id: JobId(id),
+            user: id as u32,
+            cores,
+            time_limit: limit,
+            submit_time: submit,
+        }
+    }
+
+    #[test]
+    fn starts_everything_that_fits() {
+        let cluster = Cluster::new(100);
+        let mut fs = FairShare::new(1000);
+        let cands = [cand(1, 40, 100, 0), cand(2, 60, 100, 1)];
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
+        assert_eq!(r.start.len(), 2);
+        assert!(r.reservation.is_none());
+    }
+
+    #[test]
+    fn blocked_head_gets_reservation() {
+        let mut cluster = Cluster::new(100);
+        cluster.allocate(JobId(99), 80, 0, 500);
+        let mut fs = FairShare::new(1000);
+        // Head (older ⇒ higher age, same everything else) wants 50 > 20 free.
+        let cands = [cand(1, 50, 100, 0)];
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
+        assert!(r.start.is_empty());
+        assert_eq!(r.reservation, Some((JobId(1), 500)));
+    }
+
+    #[test]
+    fn backfill_short_job_ahead_of_blocked_head() {
+        let mut cluster = Cluster::new(100);
+        cluster.allocate(JobId(99), 80, 0, 1000);
+        let mut fs = FairShare::new(1000);
+        // Give the head a clear priority edge via age.
+        let head = cand(1, 50, 400, 0); // blocked until t=1000
+        let small_ok = cand(2, 10, 900, 500); // 10+900*? ends 10+900 ≤ 1000? now=10 ⇒ 910 ≤ 1000 ✓
+        let small_too_long = cand(3, 25, 5000, 600); // would overlap shadow and exceed extra
+        let r = schedule_pass(
+            &SchedConfig::default(),
+            &cluster,
+            &mut fs,
+            &[head, small_ok, small_too_long],
+            10,
+        );
+        assert_eq!(r.start, vec![JobId(2)]);
+        assert_eq!(r.reservation.unwrap().0, JobId(1));
+    }
+
+    #[test]
+    fn backfill_into_extra_cores_may_run_long() {
+        let mut cluster = Cluster::new(100);
+        cluster.allocate(JobId(99), 70, 0, 1000);
+        let mut fs = FairShare::new(1000);
+        let head = cand(1, 80, 400, 0); // needs 80: shadow at t=1000, extra = 100-80=20
+        let long_small = cand(2, 20, 100_000, 500); // fits in extra forever
+        let long_big = cand(3, 25, 100_000, 600); // exceeds extra and overlaps shadow
+        let r = schedule_pass(
+            &SchedConfig::default(),
+            &cluster,
+            &mut fs,
+            &[head, long_small, long_big],
+            10,
+        );
+        assert_eq!(r.start, vec![JobId(2)]);
+    }
+
+    #[test]
+    fn priority_orders_by_fairshare() {
+        let cluster = Cluster::new(10);
+        let mut fs = FairShare::new(1_000_000);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        fs.charge(1, 1e9, 0); // user 1 is a hog
+        // Only room for one of the two identical jobs.
+        let a = cand(1, 10, 100, 0);
+        let mut b = cand(2, 10, 100, 0);
+        b.user = 2;
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 1);
+        assert_eq!(r.start, vec![JobId(2)], "light user should win");
+    }
+
+    #[test]
+    fn age_saturates() {
+        let cfg = SchedConfig::default();
+        let c_old = cand(1, 1, 10, 0);
+        let p1 = priority(&cfg, 1.0, &c_old, cfg.max_age, 100);
+        let p2 = priority(&cfg, 1.0, &c_old, cfg.max_age * 10, 100);
+        assert!((p1 - p2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shadow_accounts_for_tentative_starts() {
+        // Machine 100, free 100. Jobs: A(60, limit 100), B(60, limit 500).
+        // A starts; B must wait for A's limit end (now+100).
+        let cluster = Cluster::new(100);
+        let mut fs = FairShare::new(1000);
+        let a = cand(1, 60, 100, 0);
+        let b = cand(2, 60, 500, 1);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 0);
+        assert_eq!(r.start, vec![JobId(1)]);
+        assert_eq!(r.reservation, Some((JobId(2), 100)));
+    }
+
+    #[test]
+    fn empty_queue_is_noop() {
+        let cluster = Cluster::new(10);
+        let mut fs = FairShare::new(1000);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[], 0);
+        assert!(r.start.is_empty() && r.reservation.is_none());
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that calls
+//! [`Bench::new`] and times closures with warmup, repeated samples and
+//! mean/std/min reporting. Output is plain text plus an optional JSON file
+//! so EXPERIMENTS.md numbers are regenerable.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark group (usually one per bench binary).
+pub struct Bench {
+    name: String,
+    results: Vec<(String, Summary)>,
+    /// Minimum samples per case.
+    pub samples: usize,
+    /// Target wall budget per case, seconds.
+    pub budget_secs: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("== bench group: {name} ==");
+        Bench {
+            name: name.to_string(),
+            results: Vec::new(),
+            samples: 10,
+            budget_secs: 2.0,
+        }
+    }
+
+    /// Time `f`, which should perform one complete unit of work and return a
+    /// value that is consumed via `std::hint::black_box` to defeat DCE.
+    pub fn case<T>(&mut self, label: &str, mut f: impl FnMut() -> T) {
+        // Warmup run (also primes caches / lazy statics).
+        std::hint::black_box(f());
+        let mut s = Summary::new();
+        let started = Instant::now();
+        while s.count() < self.samples as u64
+            || (started.elapsed().as_secs_f64() < self.budget_secs
+                && s.count() < 10 * self.samples as u64)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.add(t0.elapsed().as_secs_f64() * 1e3); // ms
+        }
+        println!(
+            "  {label:<44} {:>10.3} ms/iter  (±{:.3}, min {:.3}, n={})",
+            s.mean(),
+            s.std(),
+            s.min(),
+            s.count()
+        );
+        self.results.push((label.to_string(), s));
+    }
+
+    /// Throughput helper: report both ms/iter and items/sec.
+    pub fn case_throughput<T>(&mut self, label: &str, items: u64, mut f: impl FnMut() -> T) {
+        std::hint::black_box(f());
+        let mut s = Summary::new();
+        let started = Instant::now();
+        while s.count() < self.samples as u64
+            || (started.elapsed().as_secs_f64() < self.budget_secs
+                && s.count() < 10 * self.samples as u64)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.add(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let per_sec = items as f64 / (s.mean() / 1e3);
+        println!(
+            "  {label:<44} {:>10.3} ms/iter  ({:.0} items/s, n={})",
+            s.mean(),
+            per_sec,
+            s.count()
+        );
+        self.results.push((label.to_string(), s));
+    }
+
+    /// Mean of a recorded case in ms, if present (for assertions in tests).
+    pub fn mean_ms(&self, label: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, s)| s.mean())
+    }
+
+    /// Write results as JSON under `target/bench-results/<group>.json`.
+    pub fn finish(self) {
+        let mut arr = Vec::new();
+        for (label, s) in &self.results {
+            arr.push(
+                Json::obj()
+                    .with("label", label.as_str())
+                    .with("mean_ms", s.mean())
+                    .with("std_ms", s.std())
+                    .with("min_ms", s.min())
+                    .with("samples", s.count() as i64),
+            );
+        }
+        let doc = Json::obj()
+            .with("group", self.name.as_str())
+            .with("results", Json::Arr(arr));
+        let dir = std::path::Path::new("target/bench-results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.name.replace(' ', "_")));
+            let _ = std::fs::write(&path, doc.pretty());
+            println!("  -> wrote {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_case_timing() {
+        let mut b = Bench::new("unit-test-group");
+        b.samples = 3;
+        b.budget_secs = 0.01;
+        b.case("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(b.mean_ms("noop-ish").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_case_runs() {
+        let mut b = Bench::new("unit-test-group2");
+        b.samples = 2;
+        b.budget_secs = 0.01;
+        b.case_throughput("tp", 100, || 42u32);
+        assert!(b.mean_ms("tp").is_some());
+    }
+}

@@ -1,0 +1,238 @@
+//! A small declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands, with generated `--help` text. Used by the `asa` binary and
+//! the example programs.
+
+use std::collections::HashMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name}: expected a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name}: expected an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+}
+
+/// A command-line interface: global options plus subcommands.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub options: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            options: Vec::new(),
+        }
+    }
+
+    /// Register a `--key value` option.
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Register a `--key value` option with a default shown in help.
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.options.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nOPTIONS:\n", self.name, self.about);
+        for o in &self.options {
+            let lhs = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  {lhs:<28} {}{default}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse a token stream. Unknown options are an error; `--help` returns
+    /// `Err(help_text)` so callers can print-and-exit.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.options {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .options
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    args.values.insert(name, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("seed", "rng seed")
+            .opt_default("iters", "1000", "iteration count")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = cli()
+            .parse(argv(&["--seed", "7", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(argv(&["--seed=42"])).unwrap();
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(argv(&[])).unwrap();
+        assert_eq!(a.get_u64("iters", 0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(argv(&["--seed"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().parse(argv(&["--help"])).unwrap_err();
+        assert!(h.contains("--seed"));
+        assert!(h.contains("default: 1000"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = cli().parse(argv(&["--seed", "zzz"])).unwrap();
+        assert!(a.get_u64("seed", 0).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! In-tree infrastructure: deterministic RNG, statistics, JSON, CLI parsing,
+//! a small property-testing harness and a bench harness.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency tree available, so the usual ecosystem crates (`rand`,
+//! `serde`/`serde_json`, `clap`, `proptest`, `criterion`) are replaced by the
+//! minimal implementations in this module. Each is deliberately small,
+//! deterministic and well-tested: experiments must be reproducible from a
+//! seed alone.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod propcheck;
+pub mod bench;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,173 @@
+//! A miniature property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it performs a
+//! simple halving/shrinking pass over the generator's size parameter and
+//! reports the seed so the case replays deterministically:
+//!
+//! ```
+//! use asa::util::propcheck::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]; grows over the run so early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        if lo >= hi {
+            return lo;
+        }
+        // Scale the span by the current size so early cases are small.
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as i64;
+        self.rng.range_i64(lo, lo + span.min(hi - lo) + 1)
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.i64(lo as i64, hi as i64) as u32
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.i64(lo, hi)).collect()
+    }
+
+    /// A probability vector of the given length (strictly positive entries).
+    pub fn prob_vec(&mut self, len: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..len).map(|_| self.f64(1e-6, 1.0)).collect();
+        let s: f64 = v.iter().sum();
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics (with the replay seed) on
+/// the first failing case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u32,
+    property: F,
+) {
+    // Base seed can be overridden for replay via PROPCHECK_SEED.
+    let base = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5A5_0000u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let size = ((case + 1) as f64 / cases as f64).min(1.0);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                size,
+            };
+            property(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            // Shrink: retry with progressively smaller sizes, keep the
+            // smallest size that still fails, report that seed/size pair.
+            let mut fail_size = size;
+            let mut probe = size / 2.0;
+            while probe > 0.01 {
+                let still_fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen {
+                        rng: Rng::new(seed),
+                        size: probe,
+                    };
+                    property(&mut g);
+                })
+                .is_err();
+                if still_fails {
+                    fail_size = probe;
+                    probe /= 2.0;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "propcheck '{name}' failed (case {case}, seed {seed}, size {fail_size:.3}; \
+                 replay with PROPCHECK_SEED={seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.i64(-100, 100);
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "propcheck 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |g| {
+            let x = g.i64(0, 100);
+            assert!(x < 0, "x={x} is not negative");
+        });
+    }
+
+    #[test]
+    fn prob_vec_sums_to_one() {
+        check("prob vec normalised", 50, |g| {
+            let n = g.usize(1, 80);
+            let p = g.prob_vec(n);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn sizes_grow_monotonically() {
+        // The size parameter reaches 1.0 on the final case.
+        check("size reaches one eventually", 1, |g| {
+            assert!((g.size - 1.0).abs() < 1e-12);
+        });
+    }
+}

@@ -1,0 +1,246 @@
+//! Plain-text table and sparkline rendering for experiment reports.
+//!
+//! The paper's evaluation is tables (1, 2) and bar/step figures (5–9); the
+//! experiment drivers render them as aligned ASCII tables plus simple
+//! terminal plots, and emit the underlying series as CSV/JSON for external
+//! plotting.
+
+/// An aligned ASCII table with a header row.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// A horizontal separator row.
+    pub fn sep(&mut self) {
+        self.rows.push(vec!["—".to_string(); self.header.len()]);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (cell, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {cell:<w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        let rule = |widths: &[usize]| -> String {
+            let mut line = String::from("+");
+            for w in widths {
+                line.push_str(&"-".repeat(w + 2));
+                line.push('+');
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&rule(&widths));
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&rule(&widths));
+        for row in &self.rows {
+            if row.iter().all(|c| c == "—") {
+                out.push_str(&rule(&widths));
+            } else {
+                out.push_str(&fmt_row(row, &widths));
+            }
+        }
+        out.push_str(&rule(&widths));
+        out
+    }
+
+    /// CSV form (comma-separated, quoted only when needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|c| esc(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            if row.iter().all(|c| c == "—") {
+                continue;
+            }
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render one or more series as an ASCII line chart (rows = value buckets,
+/// cols = down-sampled x positions). Used for Fig. 5's convergence plot.
+pub fn ascii_chart(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return String::from("(empty chart)\n");
+    }
+    let (mut lo, mut hi) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &y| {
+            (l.min(y), h.max(y))
+        });
+    if hi - lo < 1e-12 {
+        hi = lo + 1.0;
+        lo -= 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        let n = ys.len().max(1);
+        for col in 0..width {
+            let idx = col * n / width.max(1);
+            let y = ys.get(idx.min(n - 1)).copied().unwrap_or(f64::NAN);
+            if !y.is_finite() {
+                continue;
+            }
+            let frac = (y - lo) / (hi - lo);
+            let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col] = mark;
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{hi:>10.1} |")
+        } else if r == height - 1 {
+            format!("{lo:>10.1} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// A labelled horizontal bar chart (used for the makespan-breakdown and
+/// resource-usage figures).
+pub fn bar_chart(items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, value) in items {
+        let bar_len = if max > 0.0 {
+            ((value / max) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!(
+            "  {label:<label_w$} |{} {value:.0}\n",
+            "█".repeat(bar_len),
+            label_w = label_w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["name", "value"]);
+        t.row(["short", "1"]);
+        t.row(["a-much-longer-name", "22222"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        // All body lines equal width.
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{r}");
+        assert!(r.contains("a-much-longer-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(["k"]);
+        t.row(["x,y"]);
+        assert_eq!(t.to_csv(), "k\n\"x,y\"\n");
+    }
+
+    #[test]
+    fn chart_contains_marks() {
+        let ys: Vec<f64> = (0..100).map(|i| (i as f64 / 10.0).sin()).collect();
+        let c = ascii_chart(&[("sin", &ys)], 40, 10);
+        assert!(c.contains('*'));
+        assert!(c.contains("sin"));
+    }
+
+    #[test]
+    fn chart_handles_flat_series() {
+        let ys = vec![5.0; 10];
+        let c = ascii_chart(&[("flat", &ys)], 20, 5);
+        assert!(c.contains('*'));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let b = bar_chart(
+            &[("a".to_string(), 10.0), ("b".to_string(), 5.0)],
+            20,
+        );
+        let a_len = b.lines().next().unwrap().matches('█').count();
+        let b_len = b.lines().nth(1).unwrap().matches('█').count();
+        assert_eq!(a_len, 20);
+        assert_eq!(b_len, 10);
+    }
+}

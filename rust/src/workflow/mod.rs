@@ -1,0 +1,17 @@
+//! Workflow substrate: a Tigres-like WMS over the simulator.
+//!
+//! A scientific workflow is an ordered chain of *stages* (paper Fig. 1):
+//! each stage is parallel (scales with the allocation) or sequential
+//! (fixed small width), with an analytic Amdahl-style duration model
+//! calibrated to the execution times the paper reports (Table 1). The WMS
+//! executes a workflow over the simulator under a given submission
+//! strategy; the Big-Job and Per-Stage (E-HPC) baselines live here, while
+//! the proactive ASA strategy lives in [`crate::coordinator::strategy`].
+
+pub mod stage;
+pub mod spec;
+pub mod apps;
+pub mod wms;
+
+pub use spec::{StageRecord, WorkflowRun, WorkflowSpec};
+pub use stage::{Stage, StageKind};

@@ -1,0 +1,177 @@
+//! Workflow specifications and per-run result records.
+
+use crate::workflow::stage::Stage;
+use crate::{Cores, Time};
+
+/// An ordered chain of stages (the paper's workflows are stage-sequential:
+/// edges only between consecutive stages, Fig. 1).
+#[derive(Clone, Debug)]
+pub struct WorkflowSpec {
+    pub name: &'static str,
+    pub stages: Vec<Stage>,
+}
+
+impl WorkflowSpec {
+    /// Total execution time at peak scaling `scale` (no queue waits):
+    /// the Big-Job in-allocation runtime.
+    pub fn total_exec(&self, scale: Cores, node_cores: Cores) -> Time {
+        self.stages
+            .iter()
+            .map(|s| s.duration(s.cores(scale, node_cores)))
+            .sum()
+    }
+
+    /// Peak cores over all stages at scaling `scale` — the Big-Job request.
+    pub fn peak_cores(&self, scale: Cores, node_cores: Cores) -> Cores {
+        self.stages
+            .iter()
+            .map(|s| s.cores(scale, node_cores))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Σ nᵢ·tᵢ in core-hours — the Per-Stage charge (paper eq. 2).
+    pub fn per_stage_core_hours(&self, scale: Cores, node_cores: Cores) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| {
+                let n = s.cores(scale, node_cores);
+                n as f64 * s.duration(n) as f64
+            })
+            .sum::<f64>()
+            / 3600.0
+    }
+
+    /// n·Σtᵢ in core-hours — the Big-Job charge (paper eq. 1).
+    pub fn big_job_core_hours(&self, scale: Cores, node_cores: Cores) -> f64 {
+        let n = self.peak_cores(scale, node_cores);
+        n as f64 * self.total_exec(scale, node_cores) as f64 / 3600.0
+    }
+}
+
+/// What happened to one stage in one run.
+#[derive(Clone, Debug)]
+pub struct StageRecord {
+    pub stage: usize,
+    pub name: &'static str,
+    pub cores: Cores,
+    /// When the stage's job was submitted to the queue.
+    pub submitted: Time,
+    /// When its allocation started.
+    pub started: Time,
+    /// When the stage's work completed.
+    pub finished: Time,
+    /// Perceived waiting time: how long the *workflow* stalled between the
+    /// previous stage's end and this stage's start (paper §4.1 "PWT").
+    /// For proactive submissions this is smaller than `started - submitted`.
+    pub perceived_wait: Time,
+    /// Core-seconds charged for this stage's allocation, including any idle
+    /// head time when resources arrived early (ASA overhead, Table 2 "OH").
+    pub charged_core_secs: i64,
+}
+
+/// Aggregated result of running one workflow once under one strategy.
+#[derive(Clone, Debug)]
+pub struct WorkflowRun {
+    pub workflow: &'static str,
+    pub strategy: String,
+    pub system: &'static str,
+    pub scale: Cores,
+    pub submitted_at: Time,
+    pub finished_at: Time,
+    pub stages: Vec<StageRecord>,
+}
+
+impl WorkflowRun {
+    /// Total makespan: submit → final completion (paper §4.1).
+    pub fn makespan(&self) -> Time {
+        self.finished_at - self.submitted_at
+    }
+
+    /// Total (perceived) queue waiting time across stages.
+    pub fn total_wait(&self) -> Time {
+        self.stages.iter().map(|s| s.perceived_wait).sum()
+    }
+
+    /// Total execution time (in-allocation work).
+    pub fn total_exec(&self) -> Time {
+        self.stages.iter().map(|s| s.finished - s.started).sum()
+    }
+
+    /// Core-hours charged.
+    pub fn core_hours(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.charged_core_secs as f64)
+            .sum::<f64>()
+            / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::stage::Stage;
+
+    fn two_stage() -> WorkflowSpec {
+        WorkflowSpec {
+            name: "toy",
+            stages: vec![
+                Stage::parallel("map", 0.0, 6400.0, 0.0, 4096),
+                Stage::sequential("reduce", 100.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn exec_and_peak() {
+        let wf = two_stage();
+        assert_eq!(wf.total_exec(64, 16), 100 + 100);
+        assert_eq!(wf.peak_cores(64, 16), 64);
+    }
+
+    #[test]
+    fn per_stage_cheaper_than_big_job_when_stages_mix() {
+        let wf = two_stage();
+        // Big job: 64 cores × 200 s; per stage: 64×100 + 16×100.
+        assert!(wf.per_stage_core_hours(64, 16) < wf.big_job_core_hours(64, 16));
+    }
+
+    #[test]
+    fn run_metrics() {
+        let run = WorkflowRun {
+            workflow: "toy",
+            strategy: "test".into(),
+            system: "testbed",
+            scale: 64,
+            submitted_at: 100,
+            finished_at: 500,
+            stages: vec![
+                StageRecord {
+                    stage: 0,
+                    name: "map",
+                    cores: 64,
+                    submitted: 100,
+                    started: 150,
+                    finished: 250,
+                    perceived_wait: 50,
+                    charged_core_secs: 6400,
+                },
+                StageRecord {
+                    stage: 1,
+                    name: "reduce",
+                    cores: 16,
+                    submitted: 250,
+                    started: 400,
+                    finished: 500,
+                    perceived_wait: 150,
+                    charged_core_secs: 1600,
+                },
+            ],
+        };
+        assert_eq!(run.makespan(), 400);
+        assert_eq!(run.total_wait(), 200);
+        assert_eq!(run.total_exec(), 200);
+        assert!((run.core_hours() - 8000.0 / 3600.0).abs() < 1e-12);
+    }
+}

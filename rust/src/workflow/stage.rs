@@ -1,0 +1,126 @@
+//! Stage definitions and the analytic duration model.
+
+use crate::{Cores, Time};
+
+/// Whether a stage scales with the allocation (paper §2: "two or more nodes
+/// mean parallel stages") or is inherently sequential.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    Parallel,
+    Sequential,
+}
+
+/// One workflow stage with an Amdahl-style duration model:
+///
+/// `t(n) = serial_secs + parallel_core_secs / min(n, width_cap)
+///         + comm_coeff · log2(n)`
+///
+/// * `serial_secs` — non-parallelizable fraction.
+/// * `parallel_core_secs` — total parallel work in core-seconds.
+/// * `comm_coeff` — communication/synchronisation overhead per doubling of
+///   the allocation (dominant in the network-intensive Statistics app).
+/// * `width_cap` — beyond this many cores the stage stops scaling
+///   (Montage's "not a scalable application" behaviour, §4.7).
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub name: &'static str,
+    pub kind: StageKind,
+    pub serial_secs: f64,
+    pub parallel_core_secs: f64,
+    pub comm_coeff: f64,
+    pub width_cap: Cores,
+}
+
+impl Stage {
+    pub fn parallel(
+        name: &'static str,
+        serial_secs: f64,
+        parallel_core_secs: f64,
+        comm_coeff: f64,
+        width_cap: Cores,
+    ) -> Self {
+        Stage {
+            name,
+            kind: StageKind::Parallel,
+            serial_secs,
+            parallel_core_secs,
+            comm_coeff,
+            width_cap,
+        }
+    }
+
+    pub fn sequential(name: &'static str, serial_secs: f64) -> Self {
+        Stage {
+            name,
+            kind: StageKind::Sequential,
+            serial_secs,
+            parallel_core_secs: 0.0,
+            comm_coeff: 0.0,
+            width_cap: 1,
+        }
+    }
+
+    /// Cores this stage requests when the workflow's peak scaling is
+    /// `scale` cores and the system's node width is `node_cores`.
+    /// Sequential stages occupy one node (the paper's per-stage allocations
+    /// are whole-node); parallel stages take the full scaling.
+    pub fn cores(&self, scale: Cores, node_cores: Cores) -> Cores {
+        match self.kind {
+            StageKind::Parallel => scale,
+            StageKind::Sequential => node_cores.min(scale),
+        }
+    }
+
+    /// Wall-clock duration when run on `n` cores.
+    pub fn duration(&self, n: Cores) -> Time {
+        let n = n.max(1);
+        let eff = n.min(self.width_cap).max(1) as f64;
+        let t = self.serial_secs
+            + self.parallel_core_secs / eff
+            + self.comm_coeff * (n as f64).log2().max(0.0);
+        t.ceil().max(1.0) as Time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_duration_independent_of_cores() {
+        let s = Stage::sequential("merge", 500.0);
+        assert_eq!(s.duration(1), s.duration(512));
+        assert_eq!(s.duration(64), 500);
+    }
+
+    #[test]
+    fn parallel_stage_scales_until_cap() {
+        let s = Stage::parallel("map", 10.0, 64_000.0, 0.0, 128);
+        assert_eq!(s.duration(64), 10 + 1000);
+        assert_eq!(s.duration(128), 10 + 500);
+        // Past the cap, no further speedup.
+        assert_eq!(s.duration(512), s.duration(128));
+    }
+
+    #[test]
+    fn comm_overhead_grows_with_width() {
+        let s = Stage::parallel("shuffle", 0.0, 1000.0, 50.0, 4096);
+        // Once parallel work is exhausted, widening only adds comm cost.
+        assert!(s.duration(1024) > s.duration(64), "{} !> {}", s.duration(1024), s.duration(64));
+    }
+
+    #[test]
+    fn cores_request_follows_kind() {
+        let p = Stage::parallel("p", 1.0, 1.0, 0.0, 4096);
+        let q = Stage::sequential("q", 1.0);
+        assert_eq!(p.cores(640, 20), 640);
+        assert_eq!(q.cores(640, 20), 20);
+        assert_eq!(q.cores(8, 20), 8); // scale below node width
+    }
+
+    #[test]
+    fn duration_is_at_least_one_second() {
+        let s = Stage::parallel("tiny", 0.0, 1.0, 0.0, 4096);
+        assert!(s.duration(4096) >= 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Failure injection: cancellations, broken dependencies, timeouts and
+//! allocation loss — the fault-tolerance paths of §3.1.
+
+use asa::coordinator::pool::{ResourcePool, TaskState};
+use asa::simulator::{Dependency, JobId, JobSpec, JobState, SimEvent, Simulator, SystemConfig};
+
+fn quiet(cores: u32) -> Simulator {
+    Simulator::new_empty(SystemConfig::testbed(cores, 1))
+}
+
+#[test]
+fn chain_of_dependents_collapses_on_failure() {
+    let mut sim = quiet(10);
+    let a = sim.submit(JobSpec::new(1, "a", 2, 100));
+    let b = sim.submit(JobSpec::new(1, "b", 2, 100).with_dependency(Dependency::AfterOk(vec![a])));
+    let c = sim.submit(JobSpec::new(1, "c", 2, 100).with_dependency(Dependency::AfterOk(vec![b])));
+    let _ = sim.drain_events();
+    sim.cancel(b);
+    while sim.step().is_some() {}
+    assert_eq!(sim.job(a).state, JobState::Completed);
+    assert_eq!(sim.job(b).state, JobState::Cancelled);
+    assert_eq!(sim.job(c).state, JobState::Cancelled, "transitive cancel");
+}
+
+#[test]
+fn timeout_breaks_afterok_dependents() {
+    let mut sim = quiet(10);
+    // Runtime exceeds limit: job times out instead of completing.
+    let a = sim.submit(JobSpec::new(1, "a", 2, 500).with_limit(100));
+    let b = sim.submit(JobSpec::new(1, "b", 2, 50).with_dependency(Dependency::AfterOk(vec![a])));
+    let mut events = Vec::new();
+    while let Some(ev) = sim.step() {
+        events.push(ev);
+    }
+    assert_eq!(sim.job(a).state, JobState::TimedOut);
+    assert_eq!(sim.job(b).state, JobState::Cancelled);
+    assert!(events.iter().any(|e| matches!(e, SimEvent::TimedOut { .. })));
+}
+
+#[test]
+fn cancel_mid_run_releases_and_requeues_capacity() {
+    let mut sim = quiet(4);
+    let hog = sim.submit(JobSpec::new(1, "hog", 4, 10_000).with_limit(10_000));
+    let waiter = sim.submit(JobSpec::new(2, "waiter", 4, 10));
+    let _ = sim.drain_events();
+    sim.run_until(500);
+    sim.cancel(hog);
+    let mut started = None;
+    while let Some(ev) = sim.step() {
+        if let SimEvent::Started { id, time } = ev {
+            if id == waiter {
+                started = Some(time);
+            }
+        }
+    }
+    assert_eq!(started, Some(500));
+    // The hog was charged only for what it used.
+    assert_eq!(sim.job(hog).core_seconds(), 4 * 500);
+}
+
+#[test]
+fn double_cancel_is_idempotent() {
+    let mut sim = quiet(4);
+    let a = sim.submit(JobSpec::new(1, "a", 2, 100));
+    let _ = sim.drain_events();
+    sim.cancel(a);
+    sim.cancel(a); // no-op, must not panic or double-count
+    assert_eq!(sim.job(a).state, JobState::Cancelled);
+    assert_eq!(sim.metrics.cancelled, 1);
+}
+
+#[test]
+fn pool_survives_allocation_loss_storm() {
+    let mut pool = ResourcePool::new();
+    for i in 0..4 {
+        pool.register_allocation(JobId(i), 8);
+    }
+    let tasks: Vec<_> = (0..8).map(|_| pool.launch(4)).collect();
+    assert!(tasks.iter().all(|&t| pool.state(t) == Some(TaskState::Running)));
+    // Lose three of the four allocations.
+    let mut orphaned = Vec::new();
+    for i in 0..3 {
+        orphaned.extend(pool.release_allocation(JobId(i)));
+    }
+    assert_eq!(orphaned.len(), 6);
+    // Remaining capacity 8 is fully held by the two surviving tasks, so all
+    // six orphans queue for migration.
+    assert_eq!(pool.running_tasks(), 2);
+    assert_eq!(pool.queued_tasks(), 6);
+    // As survivors finish, orphans migrate in.
+    let survivors: Vec<_> = tasks
+        .iter()
+        .copied()
+        .filter(|&t| pool.state(t) == Some(TaskState::Running))
+        .collect();
+    for t in survivors {
+        pool.complete(t);
+    }
+    assert!(pool.running_tasks() > 0, "orphans must migrate");
+}
+
+#[test]
+fn cancelled_dependent_does_not_zombie_the_queue() {
+    let mut sim = quiet(2);
+    let a = sim.submit(JobSpec::new(1, "a", 2, 50));
+    let b = sim.submit(JobSpec::new(1, "b", 2, 50).with_dependency(Dependency::AfterOk(vec![a])));
+    let _ = sim.drain_events();
+    sim.cancel(b);
+    while sim.step().is_some() {}
+    assert_eq!(sim.queue_depth(), 0, "queue must drain completely");
+    assert_eq!(sim.job(a).state, JobState::Completed);
+}

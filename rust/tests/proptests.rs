@@ -1,0 +1,221 @@
+//! Property-based tests (in-tree `propcheck` harness) over coordinator and
+//! simulator invariants.
+
+use asa::coordinator::actions::ActionGrid;
+use asa::coordinator::asa::{AsaConfig, AsaEstimator};
+use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use asa::coordinator::loss::{loss_vector, LossKind};
+use asa::coordinator::policy::Policy;
+use asa::coordinator::pool::ResourcePool;
+use asa::simulator::{JobId, JobSpec, SimEvent, Simulator, SystemConfig};
+use asa::util::propcheck::check;
+
+#[test]
+fn prop_update_preserves_distribution() {
+    check("update preserves simplex", 300, |g| {
+        let m = g.usize(2, 80);
+        let mut p = g.prob_vec(m);
+        let loss: Vec<f64> = (0..m).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+        let gamma = g.f64(0.0, 5.0);
+        PureRustKernel.update(&mut p, &loss, gamma);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+        assert!(p.iter().all(|&x| x > 0.0 && x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_update_monotone_in_loss() {
+    check("lower loss never loses mass share", 200, |g| {
+        let m = g.usize(3, 60);
+        let mut p = g.prob_vec(m);
+        let before = p.clone();
+        let mut loss = vec![1.0; m];
+        let lucky = g.usize(0, m - 1);
+        loss[lucky] = 0.0;
+        let gamma = g.f64(0.01, 3.0);
+        PureRustKernel.update(&mut p, &loss, gamma);
+        assert!(
+            p[lucky] >= before[lucky] - 1e-12,
+            "zero-loss action lost mass: {} -> {}",
+            before[lucky],
+            p[lucky]
+        );
+    });
+}
+
+#[test]
+fn prop_closest_action_minimises_log_distance() {
+    check("closest() is the argmin", 300, |g| {
+        let grid = ActionGrid::paper();
+        let wait = g.i64(0, 200_000);
+        let best = grid.closest(wait);
+        let d = |idx: usize| {
+            ((grid.value(idx) as f64 + 1.0).ln() - (wait as f64 + 1.0).ln()).abs()
+        };
+        for i in 0..grid.len() {
+            assert!(d(best) <= d(i) + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_loss_vector_zero_exactly_at_closest() {
+    check("0/1 loss structure", 200, |g| {
+        let grid = ActionGrid::paper();
+        let wait = g.i64(0, 150_000);
+        let v = loss_vector(LossKind::ZeroOne, &grid, wait);
+        let zeros: Vec<usize> = v
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x == 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(zeros, vec![grid.closest(wait)]);
+    });
+}
+
+#[test]
+fn prop_estimator_never_emits_invalid_state() {
+    check("estimator state stays valid", 60, |g| {
+        let policy = match g.usize(0, 2) {
+            0 => Policy::Default,
+            1 => Policy::Greedy,
+            _ => Policy::Tuned { rep: g.u32(1, 80) },
+        };
+        let mut est = AsaEstimator::new(AsaConfig {
+            policy,
+            ..AsaConfig::default()
+        });
+        let mut k = PureRustKernel;
+        let n = g.usize(1, 200);
+        let rng = g.rng();
+        for _ in 0..n {
+            let (a, _) = est.sample_wait(rng);
+            let wait = rng.range_i64(0, 120_000);
+            est.observe(a, wait, &mut k, rng);
+            let sum: f64 = est.probabilities().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(est.probabilities().iter().all(|&p| p > 0.0));
+            assert!(est.expected_wait() >= 0.0);
+        }
+        assert_eq!(est.observations(), n as u64);
+        assert!(est.rounds() <= est.observations());
+    });
+}
+
+#[test]
+fn prop_simulator_conservation() {
+    // Jobs submitted to a quiet machine all reach a terminal state; cores
+    // are conserved; waits are non-negative.
+    check("simulator conservation", 40, |g| {
+        let nodes = g.u32(2, 16);
+        let cpn = g.u32(1, 8);
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(nodes, cpn));
+        let total = nodes * cpn;
+        let njobs = g.usize(1, 30);
+        let mut ids = Vec::new();
+        {
+            let rng = g.rng();
+            for i in 0..njobs {
+                let cores = rng.range_u64(1, total as u64 + 1) as u32;
+                let runtime = rng.range_i64(1, 2000);
+                ids.push(sim.submit(JobSpec::new(
+                    1 + (i % 3) as u32,
+                    format!("j{i}"),
+                    cores,
+                    runtime,
+                )));
+            }
+        }
+        while sim.step().is_some() {}
+        for id in ids {
+            let job = sim.job(id);
+            assert!(job.is_terminal(), "job {id:?} not terminal");
+            let wait = job.wait_time().unwrap_or(0);
+            assert!(wait >= 0);
+            assert!(job.core_seconds() >= 0);
+        }
+        assert_eq!(sim.cluster().free_cores(), total, "cores leaked");
+    });
+}
+
+#[test]
+fn prop_pool_core_conservation() {
+    check("pool conserves cores", 100, |g| {
+        let mut pool = ResourcePool::new();
+        let nallocs = g.usize(1, 5);
+        let mut total = 0;
+        for i in 0..nallocs {
+            let cores = g.u32(1, 32);
+            total += cores;
+            pool.register_allocation(JobId(i as u64), cores);
+        }
+        let ntasks = g.usize(1, 20);
+        let mut tasks = Vec::new();
+        for _ in 0..ntasks {
+            tasks.push(pool.launch(g.u32(1, 16)));
+        }
+        assert!(pool.free_cores() <= total);
+        // Completing running tasks migrates queued ones in; drain until no
+        // task can run any more (tasks wider than every allocation stay
+        // queued forever — that is correct behaviour).
+        loop {
+            let runnable: Vec<_> = tasks
+                .iter()
+                .copied()
+                .filter(|&t| pool.state(t) == Some(asa::coordinator::pool::TaskState::Running))
+                .collect();
+            if runnable.is_empty() {
+                break;
+            }
+            for t in runnable {
+                pool.complete(t);
+            }
+        }
+        assert_eq!(pool.running_tasks(), 0);
+        assert_eq!(pool.free_cores(), total, "cores leaked");
+    });
+}
+
+#[test]
+fn prop_foreground_events_are_causal() {
+    check("observable event stream is causally ordered per job", 20, |g| {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 4));
+        let n = g.usize(1, 12);
+        {
+            let rng = g.rng();
+            for i in 0..n {
+                let cores = rng.range_u64(1, 33) as u32;
+                let runtime = rng.range_i64(1, 500);
+                sim.submit(JobSpec::new(1, format!("j{i}"), cores, runtime));
+            }
+        }
+        let mut seen: std::collections::HashMap<JobId, u8> = Default::default();
+        let mut last_time = 0;
+        while let Some(ev) = sim.step() {
+            assert!(ev.time() >= last_time, "time went backwards");
+            last_time = ev.time();
+            let phase = seen.entry(ev.id()).or_insert(0);
+            match ev {
+                SimEvent::Submitted { .. } => {
+                    assert_eq!(*phase, 0);
+                    *phase = 1;
+                }
+                SimEvent::Started { .. } => {
+                    assert_eq!(*phase, 1);
+                    *phase = 2;
+                }
+                SimEvent::Finished { .. } | SimEvent::TimedOut { .. } => {
+                    assert_eq!(*phase, 2);
+                    *phase = 3;
+                }
+                SimEvent::Cancelled { .. } => {
+                    assert!(*phase <= 2);
+                    *phase = 3;
+                }
+            }
+        }
+        assert!(seen.values().all(|&p| p == 3), "jobs left unterminated");
+    });
+}

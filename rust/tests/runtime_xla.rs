@@ -1,0 +1,128 @@
+//! Cross-checks: the AOT-compiled JAX/Pallas artifact against the
+//! pure-rust reference kernel. Requires `make artifacts` to have run
+//! (the Makefile's `test` target guarantees it).
+
+use asa::coordinator::actions::ActionGrid;
+use asa::coordinator::asa::{AsaConfig, AsaEstimator};
+use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use asa::coordinator::policy::Policy;
+use asa::runtime::{AsaRuntime, XlaKernel};
+use asa::util::rng::Rng;
+
+fn runtime() -> AsaRuntime {
+    AsaRuntime::load_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn artifact_manifest_matches_paper_grid() {
+    let rt = runtime();
+    assert_eq!(rt.m(), ActionGrid::paper().len());
+    assert_eq!(rt.batches(), vec![1, 8, 64]);
+}
+
+#[test]
+fn xla_step_preserves_normalisation() {
+    let rt = runtime();
+    let m = rt.m();
+    let p = vec![1.0 / m as f32; m];
+    let mut loss = vec![1.0f32; m];
+    loss[7] = 0.0;
+    let values: Vec<f32> = (0..m).map(|i| i as f32).collect();
+    let out = rt.step(&p, &loss, &[0.5], &values).unwrap();
+    let sum: f32 = out.p.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+    assert!(out.p[7] > out.p[8]);
+    // Stats row: expected wait within grid range, entropy positive.
+    assert!(out.stats[0][0] >= 0.0 && out.stats[0][0] <= m as f32);
+    assert!(out.stats[0][1] > 0.0);
+}
+
+#[test]
+fn xla_matches_pure_rust_reference() {
+    let rt = runtime();
+    let grid = ActionGrid::paper();
+    let m = grid.len();
+    let mut xla = XlaKernel::new(rt, grid.values());
+    let mut pure = PureRustKernel;
+    let mut rng = Rng::new(42);
+
+    for trial in 0..20 {
+        let mut p: Vec<f64> = (0..m).map(|_| rng.uniform(1e-4, 1.0)).collect();
+        let s: f64 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        let loss: Vec<f64> = (0..m).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+        let gamma = rng.uniform(0.01, 3.0);
+
+        let mut p_xla = p.clone();
+        let mut p_ref = p;
+        xla.update(&mut p_xla, &loss, gamma);
+        pure.update(&mut p_ref, &loss, gamma);
+        for (i, (a, b)) in p_xla.iter().zip(&p_ref).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "trial {trial} idx {i}: xla={a} ref={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_batched_update_matches_per_row() {
+    let rt = runtime();
+    let grid = ActionGrid::paper();
+    let m = grid.len();
+    let mut xla = XlaKernel::new(rt, grid.values());
+    let mut rng = Rng::new(7);
+
+    let rows = 13; // deliberately not a clean variant size
+    let mut batch_p: Vec<f64> = Vec::new();
+    let mut batch_loss: Vec<f64> = Vec::new();
+    let mut gammas: Vec<f64> = Vec::new();
+    for _ in 0..rows {
+        let mut p: Vec<f64> = (0..m).map(|_| rng.uniform(1e-4, 1.0)).collect();
+        let s: f64 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        batch_p.extend_from_slice(&p);
+        batch_loss.extend((0..m).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }));
+        gammas.push(rng.uniform(0.05, 2.0));
+    }
+    let mut rowwise = batch_p.clone();
+    for r in 0..rows {
+        let (p_slice, l_slice) = (
+            &mut rowwise[r * m..(r + 1) * m],
+            &batch_loss[r * m..(r + 1) * m],
+        );
+        xla.update(p_slice, l_slice, gammas[r]);
+    }
+    let mut batched = batch_p;
+    xla.update_batch(m, &mut batched, &batch_loss, &gammas);
+    for (i, (a, b)) in batched.iter().zip(&rowwise).enumerate() {
+        assert!((a - b).abs() < 1e-5, "idx {i}: batched={a} rowwise={b}");
+    }
+}
+
+#[test]
+fn estimator_converges_identically_under_both_backends() {
+    let rt = runtime();
+    let grid = ActionGrid::paper();
+    let mut xla = XlaKernel::new(rt, grid.values());
+    let mut pure = PureRustKernel;
+    let cfg = AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    };
+    let mut e_xla = AsaEstimator::new(cfg.clone());
+    let mut e_pure = AsaEstimator::new(cfg);
+    let mut rng_a = Rng::new(9);
+    let mut rng_b = Rng::new(9);
+    let truth = 2000;
+    for _ in 0..60 {
+        let (a, _) = e_xla.sample_wait(&mut rng_a);
+        e_xla.observe(a, truth, &mut xla, &mut rng_a);
+        let (b, _) = e_pure.sample_wait(&mut rng_b);
+        e_pure.observe(b, truth, &mut pure, &mut rng_b);
+    }
+    assert_eq!(e_xla.best_wait(), 2000);
+    assert_eq!(e_pure.best_wait(), 2000);
+    assert!((e_xla.expected_wait() - e_pure.expected_wait()).abs() < 50.0);
+}
