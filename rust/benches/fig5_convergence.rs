@@ -14,7 +14,7 @@ fn main() {
         asa::coordinator::actions::ActionGrid::paper().values(),
     ) {
         b.samples = 3;
-        b.case("fig5 1000 iters x 3 policies (xla-pjrt)", || {
+        b.case("fig5 1000 iters x 3 policies (aot-f32)", || {
             convergence::run(1000, 5, &mut xla)
         });
     }

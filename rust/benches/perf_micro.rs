@@ -62,14 +62,14 @@ fn main() {
 
     if let Ok(mut xla) = asa::runtime::XlaKernel::load_default(grid.values()) {
         b.samples = 3;
-        b.case_throughput("kernel xla-pjrt: 100 single updates", 100, || {
+        b.case_throughput("kernel aot-f32: 100 single updates", 100, || {
             let mut p = row.clone();
             for _ in 0..100 {
                 xla.update(&mut p, &loss, 0.3);
             }
             p[0]
         });
-        b.case_throughput("kernel xla-pjrt: 64-row batch x100", 6_400, || {
+        b.case_throughput("kernel aot-f32: 64-row batch x100", 6_400, || {
             let mut p = batch.clone();
             for _ in 0..100 {
                 xla.update_batch(m, &mut p, &losses, &gammas);

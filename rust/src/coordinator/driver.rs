@@ -1,0 +1,541 @@
+//! Event-driven strategy drivers and the [`Orchestrator`] that multiplexes
+//! one simulator across many of them.
+//!
+//! The original strategy implementations *owned* the simulator: each ran a
+//! blocking `sim.step()` loop until its own workflow finished, so only one
+//! workflow could ever be in flight per [`Simulator`]. This module inverts
+//! that control flow. A strategy is now a [`StrategyDriver`] — a state
+//! machine that reacts to the observable events of the jobs it owns — and
+//! the [`Orchestrator`] pumps the single event stream, routing each event
+//! to the driver that owns its job (by [`JobId`]) and timed wakeups (the
+//! [`SimEvent::Wake`] hook) to whichever driver requested them. N drivers
+//! from N tenants can therefore share one simulated queue session, which is
+//! what the `campaign --concurrent` contention experiment measures.
+//!
+//! The old blocking entry points survive as thin wrappers (a single-driver
+//! orchestrator run to completion): `workflow::wms::run_big_job`,
+//! `workflow::wms::run_per_stage` and `coordinator::strategy::run_asa` are
+//! source-compatible — a driver performs the same simulator,
+//! estimator-store and RNG operations in the same order the blocking loop
+//! did, so same-seed runs reproduce the pre-refactor results on the
+//! evaluated systems (whose accounts are pre-seeded; see the fair-share
+//! registration note in `simulator::slurm::schedule_pass`).
+
+use crate::coordinator::asa::AsaConfig;
+use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
+use crate::coordinator::state::AsaStore;
+use crate::coordinator::strategy::AsaRunStats;
+use crate::simulator::{JobId, SimEvent, Simulator};
+use crate::util::rng::Rng;
+use crate::workflow::spec::WorkflowRun;
+use crate::Time;
+use std::collections::HashMap;
+
+/// What a driver reports back after handling a callback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverStatus {
+    /// Still in flight; keep routing events.
+    Running,
+    /// The workflow completed; the driver's outcome is ready.
+    Done,
+}
+
+/// Shared mutable services every driver callback receives.
+///
+/// The estimator store, update kernel and RNG are deliberately *shared*
+/// across all drivers of one orchestrator run: the store is the paper's
+/// cross-run per-geometry learning state (§4.3), and a single RNG keeps a
+/// whole multi-driver session replayable from one seed.
+pub struct DriverCtx<'a> {
+    pub store: &'a mut AsaStore,
+    pub kernel: &'a mut dyn UpdateKernel,
+    pub rng: &'a mut Rng,
+}
+
+/// The completed result of one driver.
+#[derive(Clone, Debug)]
+pub struct DriverOutcome {
+    pub run: WorkflowRun,
+    /// Present for ASA-family drivers only.
+    pub asa_stats: Option<AsaRunStats>,
+}
+
+/// An event-driven submission strategy: a state machine over the
+/// observable events of the jobs it owns.
+///
+/// Protocol, enforced by the [`Orchestrator`]:
+/// 1. `begin` is called once, at the driver's (possibly deferred) start
+///    time, to make the initial submissions.
+/// 2. After every callback the orchestrator drains [`StrategyDriver::claims`]
+///    to learn which newly submitted jobs belong to this driver, and
+///    [`StrategyDriver::wake_request`] to schedule a timed wakeup
+///    (delivered through [`StrategyDriver::on_wake`]).
+/// 3. Events for owned jobs arrive via `on_event` until the driver returns
+///    [`DriverStatus::Done`], after which [`StrategyDriver::take_outcome`]
+///    yields the completed run.
+pub trait StrategyDriver {
+    /// Strategy label (also used as the `WorkflowRun::strategy` tag).
+    fn name(&self) -> &'static str;
+
+    /// Make the initial submissions at the current simulator time.
+    fn begin(&mut self, sim: &mut Simulator, ctx: &mut DriverCtx) -> DriverStatus;
+
+    /// Handle one observable event concerning a job this driver claimed.
+    fn on_event(
+        &mut self,
+        sim: &mut Simulator,
+        ctx: &mut DriverCtx,
+        ev: SimEvent,
+    ) -> DriverStatus;
+
+    /// Handle a timed wakeup previously requested via
+    /// [`StrategyDriver::wake_request`].
+    fn on_wake(
+        &mut self,
+        _sim: &mut Simulator,
+        _ctx: &mut DriverCtx,
+        _now: Time,
+    ) -> DriverStatus {
+        DriverStatus::Running
+    }
+
+    /// Drain the jobs submitted since the last callback; the orchestrator
+    /// records them as owned by this driver.
+    fn claims(&mut self) -> Vec<JobId>;
+
+    /// One-shot timed-wakeup request, drained after every callback.
+    fn wake_request(&mut self) -> Option<Time> {
+        None
+    }
+
+    /// The completed run; `Some` exactly once, after `Done`.
+    fn take_outcome(&mut self) -> Option<DriverOutcome>;
+}
+
+/// Handle to a spawned driver within an [`Orchestrator`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DriverId(pub usize);
+
+struct Slot {
+    driver: Box<dyn StrategyDriver>,
+    begun: bool,
+    done: bool,
+}
+
+/// Multiplexes one simulator's observable event stream across N
+/// concurrently running drivers, keyed by job ownership.
+#[derive(Default)]
+pub struct Orchestrator {
+    slots: Vec<Slot>,
+    /// JobId → owning driver index.
+    owner: HashMap<JobId, usize>,
+    /// Wake tag → driver index awaiting it.
+    wake_owner: HashMap<u64, usize>,
+    next_tag: u64,
+    /// Drivers spawned but not yet `Done` (including deferred ones).
+    active: usize,
+}
+
+impl Orchestrator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Spawn a driver immediately: `begin` runs before this returns.
+    pub fn spawn(
+        &mut self,
+        sim: &mut Simulator,
+        ctx: &mut DriverCtx,
+        driver: Box<dyn StrategyDriver>,
+    ) -> DriverId {
+        let idx = self.push_slot(driver);
+        self.deliver(sim, ctx, idx, None);
+        DriverId(idx)
+    }
+
+    /// Spawn a driver at a future simulated time: `begin` runs when the
+    /// scheduled wakeup fires during [`Orchestrator::run`].
+    pub fn spawn_at(
+        &mut self,
+        sim: &mut Simulator,
+        at: Time,
+        driver: Box<dyn StrategyDriver>,
+    ) -> DriverId {
+        let idx = self.push_slot(driver);
+        let tag = self.fresh_tag();
+        sim.wake_at(at, tag);
+        self.wake_owner.insert(tag, idx);
+        DriverId(idx)
+    }
+
+    fn push_slot(&mut self, driver: Box<dyn StrategyDriver>) -> usize {
+        let idx = self.slots.len();
+        self.slots.push(Slot {
+            driver,
+            begun: false,
+            done: false,
+        });
+        self.active += 1;
+        idx
+    }
+
+    fn fresh_tag(&mut self) -> u64 {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        tag
+    }
+
+    /// Pump the event stream until every spawned driver is done.
+    ///
+    /// Panics if the simulator's event heap empties first — that means a
+    /// driver is waiting on a job that can never change state.
+    pub fn run(&mut self, sim: &mut Simulator, ctx: &mut DriverCtx) {
+        while self.active > 0 {
+            let ev = sim
+                .step()
+                .expect("simulation ended with active drivers");
+            self.dispatch(sim, ctx, ev);
+        }
+    }
+
+    /// Route one observable event to its owning driver (events for jobs no
+    /// driver claimed are dropped, exactly like the blocking loops ignored
+    /// foreign events).
+    pub fn dispatch(&mut self, sim: &mut Simulator, ctx: &mut DriverCtx, ev: SimEvent) {
+        match ev {
+            SimEvent::Wake { tag, .. } => {
+                if let Some(idx) = self.wake_owner.remove(&tag) {
+                    self.deliver(sim, ctx, idx, None);
+                }
+            }
+            ev => {
+                if let Some(idx) = ev.id().and_then(|id| self.owner.get(&id).copied()) {
+                    self.deliver(sim, ctx, idx, Some(ev));
+                }
+            }
+        }
+    }
+
+    /// Invoke one driver callback and absorb its side-channel outputs
+    /// (job claims, wake requests, completion).
+    fn deliver(
+        &mut self,
+        sim: &mut Simulator,
+        ctx: &mut DriverCtx,
+        idx: usize,
+        ev: Option<SimEvent>,
+    ) {
+        if self.slots[idx].done {
+            return;
+        }
+        let status = {
+            let slot = &mut self.slots[idx];
+            match ev {
+                Some(ev) => slot.driver.on_event(sim, ctx, ev),
+                None if !slot.begun => {
+                    slot.begun = true;
+                    slot.driver.begin(sim, ctx)
+                }
+                None => {
+                    let now = sim.now();
+                    slot.driver.on_wake(sim, ctx, now)
+                }
+            }
+        };
+        for job in self.slots[idx].driver.claims() {
+            self.owner.insert(job, idx);
+        }
+        if let Some(at) = self.slots[idx].driver.wake_request() {
+            let tag = self.fresh_tag();
+            sim.wake_at(at, tag);
+            self.wake_owner.insert(tag, idx);
+        }
+        if status == DriverStatus::Done {
+            self.slots[idx].done = true;
+            self.active -= 1;
+        }
+    }
+
+    /// Number of drivers spawned into this orchestrator.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Drivers currently in flight (begun, not yet done).
+    pub fn running(&self) -> usize {
+        self.slots.iter().filter(|s| s.begun && !s.done).count()
+    }
+
+    /// Drivers not yet done (including deferred, un-begun ones).
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Take the completed outcome of one driver (once).
+    pub fn outcome(&mut self, id: DriverId) -> Option<DriverOutcome> {
+        self.slots[id.0].driver.take_outcome()
+    }
+
+    /// Take every remaining completed outcome, in spawn order.
+    pub fn outcomes(&mut self) -> Vec<DriverOutcome> {
+        self.slots
+            .iter_mut()
+            .filter_map(|s| s.driver.take_outcome())
+            .collect()
+    }
+}
+
+/// Run a single driver to completion on `sim` with a throwaway context —
+/// the blocking-wrapper path for strategies that do not touch the shared
+/// ASA state (Big-Job, Per-Stage).
+pub fn run_single(sim: &mut Simulator, driver: Box<dyn StrategyDriver>) -> DriverOutcome {
+    let mut store = AsaStore::new(AsaConfig::default());
+    let mut kernel = PureRustKernel;
+    let mut rng = Rng::new(0);
+    let mut ctx = DriverCtx {
+        store: &mut store,
+        kernel: &mut kernel,
+        rng: &mut rng,
+    };
+    let mut orch = Orchestrator::new();
+    let id = orch.spawn(sim, &mut ctx, driver);
+    orch.run(sim, &mut ctx);
+    orch.outcome(id).expect("driver finished without an outcome")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{JobSpec, SystemConfig};
+    use crate::workflow::spec::StageRecord;
+
+    fn test_ctx_parts() -> (AsaStore, PureRustKernel, Rng) {
+        (AsaStore::new(AsaConfig::default()), PureRustKernel, Rng::new(1))
+    }
+
+    /// Minimal driver: one job, one stage record, wake-hook counters.
+    struct ToyDriver {
+        user: u32,
+        runtime: Time,
+        job: Option<JobId>,
+        started: Option<Time>,
+        new_jobs: Vec<JobId>,
+        outcome: Option<DriverOutcome>,
+        wake_at: Option<Time>,
+        wakes_seen: std::rc::Rc<std::cell::Cell<u32>>,
+    }
+
+    impl ToyDriver {
+        fn new(user: u32, runtime: Time) -> Self {
+            ToyDriver {
+                user,
+                runtime,
+                job: None,
+                started: None,
+                new_jobs: Vec::new(),
+                outcome: None,
+                wake_at: None,
+                wakes_seen: Default::default(),
+            }
+        }
+
+        fn with_wake(mut self, at: Time) -> Self {
+            self.wake_at = Some(at);
+            self
+        }
+    }
+
+    impl StrategyDriver for ToyDriver {
+        fn name(&self) -> &'static str {
+            "toy"
+        }
+
+        fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
+            let id = sim.submit(JobSpec::new(self.user, "toy", 1, self.runtime));
+            self.new_jobs.push(id);
+            self.job = Some(id);
+            DriverStatus::Running
+        }
+
+        fn on_event(
+            &mut self,
+            sim: &mut Simulator,
+            _ctx: &mut DriverCtx,
+            ev: SimEvent,
+        ) -> DriverStatus {
+            match ev {
+                SimEvent::Started { id, time } if Some(id) == self.job => {
+                    self.started = Some(time);
+                    DriverStatus::Running
+                }
+                SimEvent::Finished { id, time } if Some(id) == self.job => {
+                    let started = self.started.expect("started before finished");
+                    let submitted = sim.job(id).submit_time;
+                    self.outcome = Some(DriverOutcome {
+                        run: WorkflowRun {
+                            workflow: "toy",
+                            strategy: "toy".into(),
+                            system: sim.config().name,
+                            scale: 1,
+                            submitted_at: submitted,
+                            finished_at: time,
+                            stages: vec![StageRecord {
+                                stage: 0,
+                                name: "toy",
+                                cores: 1,
+                                submitted,
+                                started,
+                                finished: time,
+                                perceived_wait: started - submitted,
+                                charged_core_secs: time - started,
+                            }],
+                        },
+                        asa_stats: None,
+                    });
+                    DriverStatus::Done
+                }
+                _ => DriverStatus::Running,
+            }
+        }
+
+        fn on_wake(
+            &mut self,
+            _sim: &mut Simulator,
+            _ctx: &mut DriverCtx,
+            _now: Time,
+        ) -> DriverStatus {
+            self.wakes_seen.set(self.wakes_seen.get() + 1);
+            DriverStatus::Running
+        }
+
+        fn claims(&mut self) -> Vec<JobId> {
+            std::mem::take(&mut self.new_jobs)
+        }
+
+        fn wake_request(&mut self) -> Option<Time> {
+            self.wake_at.take()
+        }
+
+        fn take_outcome(&mut self) -> Option<DriverOutcome> {
+            self.outcome.take()
+        }
+    }
+
+    #[test]
+    fn single_driver_runs_to_completion() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(4, 4));
+        let out = run_single(&mut sim, Box::new(ToyDriver::new(1, 100)));
+        assert_eq!(out.run.makespan(), 100);
+        assert_eq!(out.run.total_wait(), 0);
+    }
+
+    #[test]
+    fn orchestrator_multiplexes_event_stream_by_ownership() {
+        // Two drivers contending for a 1-core machine: the second's job
+        // queues behind the first's, and each driver only ever sees its
+        // own events.
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(1, 1));
+        let (mut store, mut kernel, mut rng) = test_ctx_parts();
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        let a = orch.spawn(&mut sim, &mut ctx, Box::new(ToyDriver::new(1, 100)));
+        let b = orch.spawn(&mut sim, &mut ctx, Box::new(ToyDriver::new(2, 50)));
+        assert_eq!(orch.running(), 2);
+        orch.run(&mut sim, &mut ctx);
+        let ra = orch.outcome(a).unwrap().run;
+        let rb = orch.outcome(b).unwrap().run;
+        assert_eq!(ra.total_wait(), 0);
+        assert_eq!(ra.makespan(), 100);
+        // b queued behind a's full-machine allocation.
+        assert_eq!(rb.stages[0].started, 100);
+        assert_eq!(rb.finished_at, 150);
+        assert_eq!(orch.running(), 0);
+        // Outcomes are one-shot.
+        assert!(orch.outcome(a).is_none());
+    }
+
+    #[test]
+    fn spawn_at_defers_begin_until_wakeup() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(4, 4));
+        let (mut store, mut kernel, mut rng) = test_ctx_parts();
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        let id = orch.spawn_at(&mut sim, 500, Box::new(ToyDriver::new(1, 100)));
+        assert_eq!(orch.running(), 0);
+        assert_eq!(orch.active(), 1);
+        orch.run(&mut sim, &mut ctx);
+        let run = orch.outcome(id).unwrap().run;
+        assert_eq!(run.submitted_at, 500, "begin deferred to the wakeup");
+        assert_eq!(run.finished_at, 600);
+    }
+
+    #[test]
+    fn wake_request_is_delivered_once() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(4, 4));
+        let (mut store, mut kernel, mut rng) = test_ctx_parts();
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        // The driver requests a wake at t=30 (drained right after begin).
+        let driver = ToyDriver::new(1, 100).with_wake(30);
+        let wakes = driver.wakes_seen.clone();
+        orch.spawn(&mut sim, &mut ctx, Box::new(driver));
+        orch.run(&mut sim, &mut ctx);
+        assert_eq!(wakes.get(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "simulation ended with active drivers")]
+    fn stalled_driver_is_detected() {
+        // A driver whose job never terminates (empty sim, no events after
+        // completion) — here simulated by never returning Done.
+        struct Stuck;
+        impl StrategyDriver for Stuck {
+            fn name(&self) -> &'static str {
+                "stuck"
+            }
+            fn begin(&mut self, _s: &mut Simulator, _c: &mut DriverCtx) -> DriverStatus {
+                DriverStatus::Running
+            }
+            fn on_event(
+                &mut self,
+                _s: &mut Simulator,
+                _c: &mut DriverCtx,
+                _e: SimEvent,
+            ) -> DriverStatus {
+                DriverStatus::Running
+            }
+            fn claims(&mut self) -> Vec<JobId> {
+                Vec::new()
+            }
+            fn take_outcome(&mut self) -> Option<DriverOutcome> {
+                None
+            }
+        }
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(1, 1));
+        let (mut store, mut kernel, mut rng) = test_ctx_parts();
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        orch.spawn(&mut sim, &mut ctx, Box::new(Stuck));
+        orch.run(&mut sim, &mut ctx);
+    }
+}

@@ -13,8 +13,12 @@
 //! * [`state`] — per-job-geometry estimator store, shared across runs and
 //!   persistable to JSON (paper §4.3: "Algorithm 1's state is kept across
 //!   different runs").
+//! * [`driver`] — the event-driven strategy layer: the [`StrategyDriver`]
+//!   state-machine trait and the [`Orchestrator`] multiplexing one
+//!   simulator's event stream across N concurrent drivers (multi-tenant
+//!   campaigns).
 //! * [`strategy`] — the proactive ASA submission strategy (and its Naïve
-//!   variant) driving workflows over the simulator.
+//!   variant) as a driver state machine, plus the blocking wrapper.
 //! * [`pool`] — the Mesos-like unified resource pool (paper §3.1).
 //! * [`contextual`] — the paper's §6 future-work extension: queue-state-
 //!   conditioned estimation (a bank of Algorithm-1 instances per context).
@@ -25,12 +29,16 @@ pub mod asa;
 pub mod policy;
 pub mod kernel;
 pub mod state;
+pub mod driver;
 pub mod strategy;
 pub mod pool;
 pub mod contextual;
 
 pub use actions::ActionGrid;
 pub use asa::{AsaConfig, AsaEstimator};
+pub use driver::{
+    DriverCtx, DriverId, DriverOutcome, DriverStatus, Orchestrator, StrategyDriver,
+};
 pub use kernel::{PureRustKernel, UpdateKernel};
 pub use policy::Policy;
 pub use state::{AsaStore, GeometryKey};

@@ -6,17 +6,26 @@
 //! strategy, with identical background-workload seeds across strategies so
 //! the comparison is paired. ASA's estimator store is shared across all
 //! submissions within a session.
+//!
+//! Every strategy is an event-driven [`StrategyDriver`]
+//! ([`Strategy::driver`] builds one), so the same four implementations
+//! also power the multi-tenant contention scenario in
+//! [`crate::experiments::concurrent`] (`campaign --concurrent`), where
+//! many workflows overlap on one simulator instead of running one at a
+//! time.
 
 use crate::coordinator::asa::AsaConfig;
+use crate::coordinator::driver::StrategyDriver;
 use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use crate::coordinator::policy::Policy;
 use crate::coordinator::state::AsaStore;
-use crate::coordinator::strategy::{run_asa, AsaRunOpts, AsaRunStats};
+use crate::coordinator::strategy::{run_asa, AsaDriver, AsaRunOpts, AsaRunStats};
 use crate::simulator::{Simulator, SystemConfig};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
-use crate::workflow::spec::WorkflowRun;
+use crate::workflow::spec::{WorkflowRun, WorkflowSpec};
+use crate::workflow::wms::{BigJobDriver, PerStageDriver};
 use crate::workflow::{apps, wms};
 use crate::{Cores, Time};
 
@@ -56,6 +65,27 @@ impl Strategy {
             "asa" => Some(Strategy::Asa),
             "asa-naive" | "naive" => Some(Strategy::AsaNaive),
             _ => None,
+        }
+    }
+
+    /// Build the event-driven driver for this strategy, ready to spawn on
+    /// an [`crate::coordinator::driver::Orchestrator`].
+    pub fn driver(self, user: u32, wf: WorkflowSpec, scale: Cores) -> Box<dyn StrategyDriver> {
+        match self {
+            Strategy::BigJob => Box::new(BigJobDriver::new(user, wf, scale)),
+            Strategy::PerStage => Box::new(PerStageDriver::new(user, wf, scale)),
+            Strategy::Asa => Box::new(AsaDriver::new(
+                user,
+                wf,
+                scale,
+                AsaRunOpts { naive: false },
+            )),
+            Strategy::AsaNaive => Box::new(AsaDriver::new(
+                user,
+                wf,
+                scale,
+                AsaRunOpts { naive: true },
+            )),
         }
     }
 }

@@ -1,0 +1,469 @@
+//! The multi-tenant contention campaign (`asa campaign --concurrent`).
+//!
+//! The paper evaluates ASA one workflow at a time; its real setting is a
+//! shared batch system where many users' adaptive workflows contend
+//! simultaneously. This experiment launches overlapping workflows from
+//! several tenants — Poisson inter-arrivals per tenant — through the
+//! [`Orchestrator`] onto *one* simulated queue session, and reports the
+//! per-workflow cost of contention against a solo (uncontended) baseline
+//! run under the identical background seed. The blocking strategy API
+//! could not measure this scenario at all: it serialised every workflow on
+//! its private simulator.
+
+use crate::coordinator::asa::AsaConfig;
+use crate::coordinator::driver::{DriverCtx, DriverId, Orchestrator};
+use crate::coordinator::kernel::PureRustKernel;
+use crate::coordinator::policy::Policy;
+use crate::coordinator::state::AsaStore;
+use crate::coordinator::strategy::AsaRunStats;
+use crate::experiments::campaign::Strategy;
+use crate::simulator::{Simulator, SystemConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workflow::apps;
+use crate::workflow::spec::WorkflowRun;
+use crate::{Cores, Time};
+use std::collections::BTreeMap;
+
+/// Workflows are assigned round-robin from this rotation, offset per
+/// tenant so concurrent tenants run a diverse mix.
+pub const WF_ROTATION: [&str; 3] = ["montage", "blast", "statistics"];
+
+/// Which strategy each tenant drives its workflows with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantStrategy {
+    /// Every tenant uses the same strategy.
+    Uniform(Strategy),
+    /// Tenants rotate through ASA / Per-Stage / Big-Job / ASA-Naïve.
+    Mixed,
+}
+
+impl TenantStrategy {
+    pub fn parse(s: &str) -> Option<TenantStrategy> {
+        match s {
+            "mix" | "mixed" => Some(TenantStrategy::Mixed),
+            other => Strategy::parse(other).map(TenantStrategy::Uniform),
+        }
+    }
+
+    pub fn for_tenant(self, tenant: u32) -> Strategy {
+        match self {
+            TenantStrategy::Uniform(s) => s,
+            TenantStrategy::Mixed => [
+                Strategy::Asa,
+                Strategy::PerStage,
+                Strategy::BigJob,
+                Strategy::AsaNaive,
+            ][tenant as usize % 4],
+        }
+    }
+}
+
+/// Scenario knobs.
+#[derive(Clone, Debug)]
+pub struct ConcurrentOpts {
+    /// Number of tenants (distinct accounts) submitting workflows.
+    pub tenants: u32,
+    /// Workflows per tenant.
+    pub per_tenant: u32,
+    /// Mean Poisson inter-arrival gap between one tenant's submissions (s).
+    pub mean_gap: Time,
+    /// Per-workflow scaling (cores).
+    pub scale: Cores,
+    pub strategy: TenantStrategy,
+    pub seed: u64,
+    /// Settling time before the first arrival (steady-state machine).
+    pub settle: Time,
+    /// Also run each (workflow, strategy) solo under the identical seed to
+    /// report the contention slowdown.
+    pub baseline: bool,
+}
+
+impl Default for ConcurrentOpts {
+    fn default() -> Self {
+        ConcurrentOpts {
+            tenants: 4,
+            per_tenant: 3,
+            mean_gap: 600,
+            scale: 112,
+            strategy: TenantStrategy::Uniform(Strategy::Asa),
+            seed: 42,
+            settle: 6 * 3600,
+            baseline: true,
+        }
+    }
+}
+
+/// One workflow's outcome within the contention scenario.
+#[derive(Clone, Debug)]
+pub struct ConcurrentCell {
+    pub tenant: u32,
+    pub user: u32,
+    pub strategy: Strategy,
+    /// When the tenant's driver was started (its workflow submission time).
+    pub arrival: Time,
+    pub run: WorkflowRun,
+    pub asa_stats: Option<AsaRunStats>,
+    /// Solo makespan under the identical seed (when baselining).
+    pub solo_makespan: Option<Time>,
+}
+
+/// The full scenario outcome.
+#[derive(Clone, Debug)]
+pub struct ConcurrentReport {
+    pub cells: Vec<ConcurrentCell>,
+    /// Peak number of workflows simultaneously in flight.
+    pub max_in_flight: usize,
+    pub tenants: u32,
+}
+
+/// Peak overlap of `[arrival, finished_at)` intervals. Finishes are
+/// processed before arrivals at equal times, so touching intervals do not
+/// count as simultaneous.
+pub fn max_in_flight(cells: &[ConcurrentCell]) -> usize {
+    let mut events: Vec<(Time, i32)> = Vec::with_capacity(cells.len() * 2);
+    for c in cells {
+        events.push((c.arrival, 1));
+        events.push((c.run.finished_at, -1));
+    }
+    events.sort_unstable();
+    let mut current = 0i32;
+    let mut peak = 0i32;
+    for (_, delta) in events {
+        current += delta;
+        peak = peak.max(current);
+    }
+    peak.max(0) as usize
+}
+
+/// Run one workflow alone on a fresh, identically-seeded session — the
+/// uncontended reference point for the slowdown column.
+fn solo_run(
+    system: &SystemConfig,
+    scale: Cores,
+    strategy: Strategy,
+    wf_name: &str,
+    seed: u64,
+    settle: Time,
+) -> WorkflowRun {
+    let mut sim = Simulator::new(system.clone(), seed);
+    sim.run_until(settle);
+    let mut store = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    let mut kernel = PureRustKernel;
+    let mut rng = Rng::new(seed ^ 0xba5e);
+    let mut ctx = DriverCtx {
+        store: &mut store,
+        kernel: &mut kernel,
+        rng: &mut rng,
+    };
+    let mut orch = Orchestrator::new();
+    let wf = apps::by_name(wf_name).expect("unknown workflow");
+    let id = orch.spawn(&mut sim, &mut ctx, strategy.driver(7, wf, scale));
+    orch.run(&mut sim, &mut ctx);
+    orch.outcome(id).expect("solo driver completed").run
+}
+
+/// Run the contention scenario: `tenants × per_tenant` workflows with
+/// Poisson inter-arrivals, all multiplexed over one simulator by the
+/// orchestrator. ASA estimator state is shared across all tenants'
+/// submissions within the session (the paper's per-geometry sharing, §4.3,
+/// taken to its multi-user setting).
+pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> ConcurrentReport {
+    assert!(opts.tenants >= 1 && opts.per_tenant >= 1);
+    let mut sim = Simulator::new(system.clone(), opts.seed);
+    sim.run_until(opts.settle);
+
+    let mut store = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    let mut kernel = PureRustKernel;
+    let mut rng = Rng::new(opts.seed ^ 0x00c0_c0de);
+    let mut arrivals = Rng::new(opts.seed ^ 0xa771);
+
+    let mut orch = Orchestrator::new();
+    let mut plan: Vec<(DriverId, u32, u32, Time, Strategy, &'static str)> = Vec::new();
+    for tenant in 0..opts.tenants {
+        let user = 100 + tenant;
+        let strategy = opts.strategy.for_tenant(tenant);
+        let mut at = sim.now();
+        for k in 0..opts.per_tenant {
+            let gap = arrivals.exponential(1.0 / opts.mean_gap.max(1) as f64);
+            at += gap.ceil() as Time;
+            let wf_name = WF_ROTATION[(tenant + k) as usize % WF_ROTATION.len()];
+            let wf = apps::by_name(wf_name).expect("rotation workflow exists");
+            let id = orch.spawn_at(&mut sim, at, strategy.driver(user, wf, opts.scale));
+            plan.push((id, tenant, user, at, strategy, wf_name));
+        }
+    }
+
+    {
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        orch.run(&mut sim, &mut ctx);
+    }
+
+    // Solo baselines, memoised per (workflow, strategy).
+    let mut solo: BTreeMap<(&'static str, &'static str), Time> = BTreeMap::new();
+    let mut cells = Vec::with_capacity(plan.len());
+    for (id, tenant, user, arrival, strategy, wf_name) in plan {
+        let out = orch.outcome(id).expect("concurrent driver completed");
+        let solo_makespan = if opts.baseline {
+            Some(*solo.entry((wf_name, strategy.name())).or_insert_with(|| {
+                solo_run(system, opts.scale, strategy, wf_name, opts.seed, opts.settle)
+                    .makespan()
+            }))
+        } else {
+            None
+        };
+        cells.push(ConcurrentCell {
+            tenant,
+            user,
+            strategy,
+            arrival,
+            run: out.run,
+            asa_stats: out.asa_stats,
+            solo_makespan,
+        });
+    }
+    let max_in_flight = max_in_flight(&cells);
+    ConcurrentReport {
+        cells,
+        max_in_flight,
+        tenants: opts.tenants,
+    }
+}
+
+/// Per-workflow result rows.
+pub fn table(report: &ConcurrentReport) -> Table {
+    let mut t = Table::new([
+        "tenant", "workflow", "strategy", "arrival (s)", "TWT (s)", "makespan (s)",
+        "slowdown", "CH (h)",
+    ]);
+    for c in &report.cells {
+        let slowdown = match c.solo_makespan {
+            Some(solo) if solo > 0 => format!("{:.2}x", c.run.makespan() as f64 / solo as f64),
+            _ => "-".into(),
+        };
+        t.row([
+            format!("{}", c.tenant),
+            c.run.workflow.to_string(),
+            c.run.strategy.clone(),
+            format!("{}", c.arrival),
+            format!("{}", c.run.total_wait()),
+            format!("{}", c.run.makespan()),
+            slowdown,
+            format!("{:.1}", c.run.core_hours()),
+        ]);
+    }
+    t
+}
+
+/// Aggregate contention effects per strategy.
+pub fn summary(report: &ConcurrentReport) -> Table {
+    let mut t = Table::new([
+        "strategy", "workflows", "mean TWT (s)", "mean makespan (s)", "mean slowdown",
+    ]);
+    let mut by_strategy: BTreeMap<&'static str, Vec<&ConcurrentCell>> = BTreeMap::new();
+    for c in &report.cells {
+        by_strategy.entry(c.strategy.name()).or_default().push(c);
+    }
+    for (name, cells) in by_strategy {
+        let n = cells.len() as f64;
+        let twt = cells.iter().map(|c| c.run.total_wait() as f64).sum::<f64>() / n;
+        let mk = cells.iter().map(|c| c.run.makespan() as f64).sum::<f64>() / n;
+        let slowdowns: Vec<f64> = cells
+            .iter()
+            .filter_map(|c| {
+                c.solo_makespan
+                    .filter(|&s| s > 0)
+                    .map(|s| c.run.makespan() as f64 / s as f64)
+            })
+            .collect();
+        let slow = if slowdowns.is_empty() {
+            "-".into()
+        } else {
+            format!(
+                "{:.2}x",
+                slowdowns.iter().sum::<f64>() / slowdowns.len() as f64
+            )
+        };
+        t.row([
+            name.to_string(),
+            format!("{}", cells.len()),
+            format!("{twt:.0}"),
+            format!("{mk:.0}"),
+            slow,
+        ]);
+    }
+    t
+}
+
+/// JSON dump (for external plotting).
+pub fn to_json(report: &ConcurrentReport) -> Json {
+    let mut arr = Vec::new();
+    for c in &report.cells {
+        let mut obj = Json::obj()
+            .with("tenant", c.tenant)
+            .with("user", c.user)
+            .with("workflow", c.run.workflow)
+            .with("strategy", c.run.strategy.as_str())
+            .with("arrival", c.arrival)
+            .with("makespan", c.run.makespan())
+            .with("total_wait", c.run.total_wait())
+            .with("core_hours", c.run.core_hours());
+        if let Some(solo) = c.solo_makespan {
+            obj.set("solo_makespan", solo);
+        }
+        if let Some(stats) = &c.asa_stats {
+            obj.set("resubmissions", stats.resubmissions);
+            obj.set("overhead_core_secs", stats.overhead_core_secs);
+        }
+        arr.push(obj);
+    }
+    Json::obj()
+        .with("tenants", report.tenants)
+        .with("max_in_flight", report.max_in_flight)
+        .with("cells", Json::Arr(arr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_system() -> SystemConfig {
+        SystemConfig::testbed(64, 28)
+    }
+
+    /// The headline property: ≥ 8 workflows from ≥ 4 tenants simultaneously
+    /// in flight on ONE simulator.
+    #[test]
+    fn eight_workflows_from_four_tenants_overlap() {
+        let opts = ConcurrentOpts {
+            tenants: 4,
+            per_tenant: 3,
+            mean_gap: 60,
+            scale: 56,
+            strategy: TenantStrategy::Uniform(Strategy::Asa),
+            seed: 5,
+            settle: 0,
+            baseline: false,
+        };
+        let report = run_concurrent(&quiet_system(), &opts);
+        assert_eq!(report.cells.len(), 12);
+        let tenants: std::collections::BTreeSet<u32> =
+            report.cells.iter().map(|c| c.tenant).collect();
+        assert_eq!(tenants.len(), 4);
+        assert!(
+            report.max_in_flight >= 8,
+            "max_in_flight = {}",
+            report.max_in_flight
+        );
+        for c in &report.cells {
+            assert!(!c.run.stages.is_empty());
+            for w in c.run.stages.windows(2) {
+                assert!(w[1].started >= w[0].finished, "stage order violated");
+            }
+            assert!(c.run.submitted_at >= c.arrival);
+        }
+    }
+
+    #[test]
+    fn mixed_tenants_run_all_four_strategies() {
+        let opts = ConcurrentOpts {
+            tenants: 4,
+            per_tenant: 1,
+            mean_gap: 30,
+            scale: 56,
+            strategy: TenantStrategy::Mixed,
+            seed: 9,
+            settle: 0,
+            baseline: false,
+        };
+        let report = run_concurrent(&quiet_system(), &opts);
+        let strategies: std::collections::BTreeSet<&str> = report
+            .cells
+            .iter()
+            .map(|c| c.run.strategy.as_str())
+            .collect();
+        assert_eq!(
+            strategies,
+            ["asa", "asa-naive", "big-job", "per-stage"]
+                .into_iter()
+                .collect()
+        );
+    }
+
+    #[test]
+    fn identical_seeds_replay_identically() {
+        let opts = ConcurrentOpts {
+            tenants: 3,
+            per_tenant: 2,
+            mean_gap: 120,
+            scale: 56,
+            strategy: TenantStrategy::Uniform(Strategy::Asa),
+            seed: 31,
+            settle: 0,
+            baseline: false,
+        };
+        let fingerprint = |r: &ConcurrentReport| -> Vec<(Time, Time, u64)> {
+            r.cells
+                .iter()
+                .map(|c| {
+                    (
+                        c.run.makespan(),
+                        c.run.total_wait(),
+                        c.run.core_hours().to_bits(),
+                    )
+                })
+                .collect()
+        };
+        let a = run_concurrent(&quiet_system(), &opts);
+        let b = run_concurrent(&quiet_system(), &opts);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(a.max_in_flight, b.max_in_flight);
+    }
+
+    #[test]
+    fn baseline_reports_solo_makespans() {
+        let opts = ConcurrentOpts {
+            tenants: 2,
+            per_tenant: 1,
+            mean_gap: 60,
+            scale: 56,
+            strategy: TenantStrategy::Uniform(Strategy::PerStage),
+            seed: 3,
+            settle: 0,
+            baseline: true,
+        };
+        let report = run_concurrent(&quiet_system(), &opts);
+        for c in &report.cells {
+            let solo = c.solo_makespan.expect("baseline requested");
+            assert!(solo > 0);
+            // Quiet machine: contention is negligible, so the concurrent
+            // makespan cannot be wildly off the solo one.
+            assert!(c.run.makespan() >= solo / 2);
+        }
+        let rendered = table(&report).render();
+        assert!(rendered.contains("slowdown"));
+        assert!(summary(&report).render().contains("per-stage"));
+        assert!(to_json(&report).to_string().contains("max_in_flight"));
+    }
+
+    #[test]
+    fn tenant_strategy_parsing() {
+        assert_eq!(
+            TenantStrategy::parse("asa"),
+            Some(TenantStrategy::Uniform(Strategy::Asa))
+        );
+        assert_eq!(TenantStrategy::parse("mix"), Some(TenantStrategy::Mixed));
+        assert_eq!(TenantStrategy::parse("bogus"), None);
+    }
+}

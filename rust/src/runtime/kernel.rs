@@ -1,12 +1,14 @@
 //! [`XlaKernel`]: the coordinator's `UpdateKernel` backed by the AOT
-//! artifact. Converts between the coordinator's f64 state and the
+//! artifact runtime. Converts between the coordinator's f64 state and the
 //! artifact's f32 computation; the probability floor baked into the
-//! artifact matches `coordinator::kernel::P_FLOOR`.
+//! artifact matches `coordinator::kernel::P_FLOOR`. The type name is kept
+//! from the PJRT-backed original so downstream callers are unaffected by
+//! the offline evaluator substitution (see `runtime/executable.rs`).
 
 use crate::coordinator::kernel::UpdateKernel;
-use crate::runtime::executable::AsaRuntime;
+use crate::runtime::executable::{AsaRuntime, Result};
 
-/// PJRT-backed exponential-weights kernel.
+/// Artifact-backed exponential-weights kernel (f32).
 pub struct XlaKernel {
     rt: AsaRuntime,
     /// The action grid in seconds (f32) fed as the `values` operand.
@@ -32,7 +34,7 @@ impl XlaKernel {
     }
 
     /// Load artifacts from the conventional location for the given grid.
-    pub fn load_default(grid_values: &[i64]) -> anyhow::Result<Self> {
+    pub fn load_default(grid_values: &[i64]) -> Result<Self> {
         let rt = AsaRuntime::load_default()?;
         Ok(Self::new(rt, grid_values))
     }
@@ -52,7 +54,7 @@ impl UpdateKernel for XlaKernel {
         let out = self
             .rt
             .step(&pf, &lf, &[gamma as f32], &self.values)
-            .expect("XLA step failed");
+            .expect("artifact step failed");
         self.steps += 1;
         for (dst, &src) in p.iter_mut().zip(&out.p) {
             *dst = src as f64;
@@ -68,7 +70,7 @@ impl UpdateKernel for XlaKernel {
         let out = self
             .rt
             .step(&pf, &lf, &gf, &self.values)
-            .expect("XLA batched step failed");
+            .expect("artifact batched step failed");
         self.steps += 1;
         for (dst, &src) in p.iter_mut().zip(&out.p) {
             *dst = src as f64;
@@ -76,6 +78,6 @@ impl UpdateKernel for XlaKernel {
     }
 
     fn name(&self) -> &'static str {
-        "xla-pjrt"
+        "aot-f32"
     }
 }

@@ -1,18 +1,21 @@
-//! The PJRT runtime: loads the AOT-compiled JAX/Pallas policy-step
-//! artifacts (`artifacts/asa_step_b{1,8,64}.hlo.txt`) and executes them
-//! from the rust hot path. Python never runs at request time — `make
-//! artifacts` is the only python invocation, at build time.
+//! The artifact runtime: loads the AOT-compiled JAX/Pallas policy-step
+//! artifacts (`artifacts/asa_step_b{1,8,64}.hlo.txt`) and executes the
+//! exported computation from the rust hot path. Python never runs at
+//! request time — `make artifacts` is the only python invocation, at
+//! build time. The offline build carries no PJRT linkage; the exported
+//! step is executed by a faithful in-tree f32 evaluator instead (see
+//! [`executable`]).
 //!
 //! [`XlaKernel`] adapts the artifact to the coordinator's
 //! [`crate::coordinator::kernel::UpdateKernel`] interface so the whole ASA
-//! stack can run its multiplicative updates through XLA;
-//! `rust/tests/runtime_xla.rs` cross-checks it against
+//! stack can run its multiplicative updates through the exported f32
+//! computation; `rust/tests/runtime_xla.rs` cross-checks it against
 //! [`crate::coordinator::kernel::PureRustKernel`].
 
 pub mod executable;
 pub mod kernel;
 
-pub use executable::AsaRuntime;
+pub use executable::{AsaRuntime, Result, RuntimeError};
 pub use kernel::XlaKernel;
 
 /// Default artifact directory, relative to the repo root.

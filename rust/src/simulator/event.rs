@@ -18,6 +18,9 @@ pub enum EventKind {
     TraceArrival,
     /// Periodic utilization sampling.
     Sample,
+    /// Driver-requested timed wakeup: surfaces on the observable stream as
+    /// [`crate::simulator::SimEvent::Wake`] with the same tag.
+    Wake(u64),
 }
 
 #[derive(Clone, Debug)]

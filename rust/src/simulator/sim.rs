@@ -1,12 +1,15 @@
 //! The [`Simulator`] façade: event loop, job lifecycle, dependency engine
 //! and the scheduling-pass trigger.
 //!
-//! Drivers (the WMS / coordinator strategies) interact in a *pull* style:
-//! they `submit`/`submit_at`/`cancel` jobs and call [`Simulator::step`] to
-//! advance time until the next *observable* event (a state change of a
-//! foreground job). Background-trace jobs churn underneath without
-//! producing observable events, exactly as other users' jobs do on a real
-//! system.
+//! Drivers (the WMS / coordinator strategies) interact through the
+//! observable event stream: they `submit`/`submit_at`/`cancel` jobs and
+//! advance time with [`Simulator::step`] until the next *observable* event
+//! (a state change of a foreground job, or a [`SimEvent::Wake`] previously
+//! requested via [`Simulator::wake_at`]). Blocking callers loop on `step`
+//! directly; the event-driven [`crate::coordinator::driver::Orchestrator`]
+//! multiplexes one stream across many concurrent drivers. Background-trace
+//! jobs churn underneath without producing observable events, exactly as
+//! other users' jobs do on a real system.
 
 use crate::simulator::cluster::Cluster;
 use crate::simulator::event::{EventKind, EventQueue};
@@ -28,16 +31,21 @@ pub enum SimEvent {
     Finished { id: JobId, time: Time },
     Cancelled { id: JobId, time: Time },
     TimedOut { id: JobId, time: Time },
+    /// A timed wakeup previously requested with [`Simulator::wake_at`].
+    /// Carries no job: the tag routes it back to whoever asked.
+    Wake { tag: u64, time: Time },
 }
 
 impl SimEvent {
-    pub fn id(&self) -> JobId {
+    /// The job this event concerns; `None` for [`SimEvent::Wake`].
+    pub fn id(&self) -> Option<JobId> {
         match *self {
             SimEvent::Submitted { id, .. }
             | SimEvent::Started { id, .. }
             | SimEvent::Finished { id, .. }
             | SimEvent::Cancelled { id, .. }
-            | SimEvent::TimedOut { id, .. } => id,
+            | SimEvent::TimedOut { id, .. } => Some(id),
+            SimEvent::Wake { .. } => None,
         }
     }
 
@@ -47,7 +55,8 @@ impl SimEvent {
             | SimEvent::Started { time, .. }
             | SimEvent::Finished { time, .. }
             | SimEvent::Cancelled { time, .. }
-            | SimEvent::TimedOut { time, .. } => time,
+            | SimEvent::TimedOut { time, .. }
+            | SimEvent::Wake { time, .. } => time,
         }
     }
 }
@@ -57,6 +66,9 @@ struct JobMeta {
     /// Expected finish event time; guards against stale Finish events after
     /// a cancel + garbage-heap entry.
     finish_at: Option<Time>,
+    /// Index of this job in `pending` while queued: O(1) swap-removal
+    /// instead of an O(n) scan per start/cancel.
+    queue_pos: Option<u32>,
 }
 
 /// The discrete-event cluster simulator.
@@ -158,7 +170,7 @@ impl Simulator {
         }
         for spec in backlog {
             let id = self.register(spec, false);
-            self.pending.push(id);
+            self.queue_push(id);
             self.jobs[id.0 as usize].state = JobState::Pending;
         }
         self.need_pass = true;
@@ -206,8 +218,31 @@ impl Simulator {
         self.meta.push(JobMeta {
             foreground,
             finish_at: None,
+            queue_pos: None,
         });
         id
+    }
+
+    /// Append `id` to the pending queue, recording its position.
+    fn queue_push(&mut self, id: JobId) {
+        debug_assert!(self.meta[id.0 as usize].queue_pos.is_none());
+        self.meta[id.0 as usize].queue_pos = Some(self.pending.len() as u32);
+        self.pending.push(id);
+    }
+
+    /// Remove `id` from the pending queue in O(1) via its recorded
+    /// position (no-op when the job is not queued). The queue is unordered
+    /// storage — the scheduling pass imposes its own total order — so a
+    /// swap-remove is safe.
+    fn queue_remove(&mut self, id: JobId) {
+        let Some(pos) = self.meta[id.0 as usize].queue_pos.take() else {
+            return;
+        };
+        let pos = pos as usize;
+        self.pending.swap_remove(pos);
+        if let Some(&moved) = self.pending.get(pos) {
+            self.meta[moved.0 as usize].queue_pos = Some(pos as u32);
+        }
     }
 
     /// Submit a foreground job now. Returns its id; a `Submitted` event is
@@ -231,7 +266,7 @@ impl Simulator {
         let job = &mut self.jobs[id.0 as usize];
         debug_assert_eq!(job.state, JobState::Pending);
         job.submit_time = self.now;
-        self.pending.push(id);
+        self.queue_push(id);
         self.need_pass = true;
         if self.meta[id.0 as usize].foreground {
             self.out.push_back(SimEvent::Submitted {
@@ -241,12 +276,23 @@ impl Simulator {
         }
     }
 
+    /// Request an observable [`SimEvent::Wake`] at time `at` (which may be
+    /// "now": the event is then delivered on the next step without
+    /// advancing time). The caller-chosen `tag` routes the wakeup back to
+    /// the requesting driver; the simulator does not interpret it. This is
+    /// the timed-wakeup hook the event-driven strategy drivers use instead
+    /// of blocking sleeps.
+    pub fn wake_at(&mut self, at: Time, tag: u64) {
+        assert!(at >= self.now, "wake_at in the past ({at} < {})", self.now);
+        self.events.push(at, EventKind::Wake(tag));
+    }
+
     /// Cancel a pending or running job.
     pub fn cancel(&mut self, id: JobId) {
         let state = self.jobs[id.0 as usize].state;
         match state {
             JobState::Pending => {
-                self.pending.retain(|&p| p != id);
+                self.queue_remove(id);
             }
             JobState::Running => {
                 self.cluster.release(id);
@@ -278,7 +324,7 @@ impl Simulator {
     /// cancelled (Slurm's `DependencyNeverSatisfied`, with kill_invalid
     /// semantics so drivers get a signal instead of a zombie).
     fn cancel_broken_dependents(&mut self, failed: JobId) {
-        let broken: Vec<JobId> = self
+        let mut broken: Vec<JobId> = self
             .pending
             .iter()
             .copied()
@@ -295,6 +341,9 @@ impl Simulator {
                 }
             })
             .collect();
+        // The pending queue is unordered storage (swap-removal); cancel in
+        // submission order so the emitted event sequence is deterministic.
+        broken.sort_unstable();
         for id in broken {
             self.cancel(id);
         }
@@ -368,7 +417,7 @@ impl Simulator {
     }
 
     fn start_job(&mut self, id: JobId) {
-        self.pending.retain(|&p| p != id);
+        self.queue_remove(id);
         let job = &mut self.jobs[id.0 as usize];
         debug_assert_eq!(job.state, JobState::Pending);
         job.state = JobState::Running;
@@ -434,12 +483,8 @@ impl Simulator {
         self.metrics
             .sample_utilization(self.now, self.cluster.utilization());
         if timed_out {
-            self.cancel_broken_dependents_after_timeout(id);
+            self.cancel_broken_dependents(id);
         }
-    }
-
-    fn cancel_broken_dependents_after_timeout(&mut self, failed: JobId) {
-        self.cancel_broken_dependents(failed);
     }
 
     /// Process exactly one internal event. Returns false when the event heap
@@ -467,6 +512,12 @@ impl Simulator {
             }
             EventKind::Sample => {
                 self.need_pass = true;
+            }
+            EventKind::Wake(tag) => {
+                self.out.push_back(SimEvent::Wake {
+                    tag,
+                    time: self.now,
+                });
             }
         }
         if self.need_pass {
@@ -732,5 +783,72 @@ mod tests {
     fn oversized_job_rejected() {
         let mut sim = quiet_sim(4);
         sim.submit(JobSpec::new(1, "big", 5, 10));
+    }
+
+    #[test]
+    fn wake_surfaces_on_observable_stream() {
+        let mut sim = quiet_sim(4);
+        sim.wake_at(250, 7);
+        sim.wake_at(100, 3);
+        assert_eq!(sim.step(), Some(SimEvent::Wake { tag: 3, time: 100 }));
+        assert_eq!(sim.step(), Some(SimEvent::Wake { tag: 7, time: 250 }));
+        assert_eq!(sim.now(), 250);
+        assert_eq!(sim.step(), None);
+    }
+
+    #[test]
+    fn wake_interleaves_with_job_events() {
+        let mut sim = quiet_sim(4);
+        let id = sim.submit(JobSpec::new(1, "j", 1, 100));
+        sim.wake_at(50, 1);
+        let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
+        assert_eq!(
+            evs,
+            vec![
+                SimEvent::Submitted { id, time: 0 },
+                SimEvent::Started { id, time: 0 },
+                SimEvent::Wake { tag: 1, time: 50 },
+                SimEvent::Finished { id, time: 100 },
+            ]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "wake_at in the past")]
+    fn wake_in_the_past_rejected() {
+        let mut sim = quiet_sim(4);
+        sim.run_until(100);
+        sim.wake_at(50, 0);
+    }
+
+    #[test]
+    fn queue_index_survives_interleaved_cancels() {
+        // Exercise the swap-remove bookkeeping: cancel from the middle,
+        // head and tail of a deep queue and verify every remaining job
+        // still starts exactly once.
+        let mut sim = quiet_sim(2);
+        let hog = sim.submit(JobSpec::new(1, "hog", 2, 50).with_limit(50));
+        let queued: Vec<JobId> =
+            (0..10).map(|i| sim.submit(JobSpec::new(2, format!("q{i}"), 2, 10))).collect();
+        let _ = sim.drain_events();
+        for &idx in &[4usize, 0, 9, 5] {
+            sim.cancel(queued[idx]);
+        }
+        let mut started = std::collections::HashSet::new();
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, .. } = ev {
+                assert!(started.insert(id), "double start of {id:?}");
+            }
+        }
+        assert_eq!(sim.job(hog).state, JobState::Completed);
+        for (i, &id) in queued.iter().enumerate() {
+            let expect = if [4usize, 0, 9, 5].contains(&i) {
+                JobState::Cancelled
+            } else {
+                JobState::Completed
+            };
+            assert_eq!(sim.job(id).state, expect, "job q{i}");
+        }
+        assert_eq!(sim.queue_depth(), 0);
     }
 }

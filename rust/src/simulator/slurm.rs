@@ -87,6 +87,17 @@ pub fn schedule_pass(
     }
     let total = cluster.total_cores();
 
+    // Register every candidate's account before computing any factor:
+    // `factor` lazily creates accounts, so registration order must not
+    // leak into the priorities (the pending queue is unordered storage).
+    // On the evaluated systems all accounts are pre-seeded at prefill /
+    // first submission, so this only matters for synthetic quiet-profile
+    // setups where a brand-new account can join a busy pass; there it
+    // trades the old order-dependent factors for order-independent ones.
+    for c in candidates {
+        fairshare.ensure_user(c.user, 1.0);
+    }
+
     // Priority ordering (desc), deterministic tie-break on submit order/id.
     let mut order: Vec<(f64, Candidate)> = candidates
         .iter()

@@ -6,9 +6,18 @@
 //! * **Per-Stage** — one right-sized allocation per stage, submitted when
 //!   the previous stage completes (eq. 2; E-HPC's elasticity model).
 //!
-//! The proactive ASA strategy builds on the same primitives from
+//! Both are implemented as event-driven [`StrategyDriver`] state machines
+//! ([`BigJobDriver`], [`PerStageDriver`]) so they can run concurrently with
+//! other tenants' workflows under one
+//! [`crate::coordinator::driver::Orchestrator`]. The original blocking
+//! entry points ([`run_big_job`], [`run_per_stage`]) remain as thin
+//! single-driver wrappers with identical results. The proactive ASA
+//! strategy builds on the same primitives from
 //! [`crate::coordinator::strategy`].
 
+use crate::coordinator::driver::{
+    run_single, DriverCtx, DriverOutcome, DriverStatus, StrategyDriver,
+};
 use crate::simulator::{JobId, JobSpec, SimEvent, Simulator};
 use crate::workflow::spec::{StageRecord, WorkflowRun, WorkflowSpec};
 use crate::{Cores, Time};
@@ -23,6 +32,10 @@ pub fn stage_limit(d: crate::Time) -> crate::Time {
 
 /// Block until `id` starts; returns the start time.
 /// Panics if the job terminates without starting (cancelled).
+///
+/// Retained as a public blocking primitive for downstream callers and
+/// ad-hoc probing even though the in-tree strategies are now event-driven
+/// [`StrategyDriver`]s and no longer use it.
 pub fn await_started(sim: &mut Simulator, id: JobId) -> Time {
     loop {
         match sim.step() {
@@ -37,6 +50,10 @@ pub fn await_started(sim: &mut Simulator, id: JobId) -> Time {
 }
 
 /// Block until `id` reaches a terminal state; returns `(end_time, ok)`.
+///
+/// Retained alongside [`await_started`] as API-compatible blocking
+/// primitives; the in-tree strategies consume events through the
+/// orchestrator instead.
 pub fn await_terminal(sim: &mut Simulator, id: JobId) -> (Time, bool) {
     loop {
         match sim.step() {
@@ -49,102 +66,339 @@ pub fn await_terminal(sim: &mut Simulator, id: JobId) -> (Time, bool) {
     }
 }
 
-/// Run a workflow as one monolithic allocation (Big Job).
+// ---------------------------------------------------------------------------
+// Big Job
+// ---------------------------------------------------------------------------
+
+enum BigJobState {
+    Idle,
+    /// Submitted, awaiting the allocation.
+    Queued { job: JobId, submitted_at: Time },
+    /// Allocation running, awaiting completion.
+    Running {
+        job: JobId,
+        submitted_at: Time,
+        started: Time,
+    },
+    Finished,
+}
+
+/// One monolithic allocation for the whole workflow (eq. 1).
+pub struct BigJobDriver {
+    user: u32,
+    wf: WorkflowSpec,
+    scale: Cores,
+    state: BigJobState,
+    new_jobs: Vec<JobId>,
+    outcome: Option<DriverOutcome>,
+}
+
+impl BigJobDriver {
+    pub fn new(user: u32, wf: WorkflowSpec, scale: Cores) -> Self {
+        BigJobDriver {
+            user,
+            wf,
+            scale,
+            state: BigJobState::Idle,
+            new_jobs: Vec::new(),
+            outcome: None,
+        }
+    }
+}
+
+impl StrategyDriver for BigJobDriver {
+    fn name(&self) -> &'static str {
+        "big-job"
+    }
+
+    fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
+        let node_cores = sim.config().cores_per_node;
+        let peak = self.wf.peak_cores(self.scale, node_cores);
+        let total = self.wf.total_exec(self.scale, node_cores);
+        let submitted_at = sim.now();
+        // Big jobs are padded additively (users size the monolithic request
+        // to the known pipeline length plus slack), unlike per-stage jobs
+        // which get the WMS's coarse hour-granularity padding.
+        let job = sim.submit(
+            JobSpec::new(self.user, format!("{}-bigjob", self.wf.name), peak, total)
+                .with_limit(total + 3600),
+        );
+        self.new_jobs.push(job);
+        self.state = BigJobState::Queued { job, submitted_at };
+        DriverStatus::Running
+    }
+
+    fn on_event(
+        &mut self,
+        sim: &mut Simulator,
+        _ctx: &mut DriverCtx,
+        ev: SimEvent,
+    ) -> DriverStatus {
+        match self.state {
+            BigJobState::Queued { job, submitted_at } => match ev {
+                SimEvent::Started { id, time } if id == job => {
+                    self.state = BigJobState::Running {
+                        job,
+                        submitted_at,
+                        started: time,
+                    };
+                    DriverStatus::Running
+                }
+                SimEvent::Cancelled { id, .. } if id == job => {
+                    panic!("job {id:?} cancelled while awaiting start")
+                }
+                _ => DriverStatus::Running,
+            },
+            BigJobState::Running {
+                job,
+                submitted_at,
+                started,
+            } => match ev {
+                SimEvent::Finished { id, time } if id == job => {
+                    let node_cores = sim.config().cores_per_node;
+                    let peak = self.wf.peak_cores(self.scale, node_cores);
+                    // Reconstruct per-stage boundaries inside the single
+                    // allocation; every stage is charged at the peak width
+                    // (that is the Big-Job waste).
+                    let mut stages = Vec::with_capacity(self.wf.stages.len());
+                    let mut cursor = started;
+                    for (i, stage) in self.wf.stages.iter().enumerate() {
+                        let d = stage.duration(stage.cores(self.scale, node_cores));
+                        stages.push(StageRecord {
+                            stage: i,
+                            name: stage.name,
+                            cores: peak,
+                            submitted: if i == 0 { submitted_at } else { cursor },
+                            started: cursor,
+                            finished: cursor + d,
+                            perceived_wait: if i == 0 { started - submitted_at } else { 0 },
+                            charged_core_secs: peak as i64 * d,
+                        });
+                        cursor += d;
+                    }
+                    debug_assert_eq!(cursor, time);
+                    self.outcome = Some(DriverOutcome {
+                        run: WorkflowRun {
+                            workflow: self.wf.name,
+                            strategy: "big-job".into(),
+                            system: sim.config().name,
+                            scale: self.scale,
+                            submitted_at,
+                            finished_at: time,
+                            stages,
+                        },
+                        asa_stats: None,
+                    });
+                    self.state = BigJobState::Finished;
+                    DriverStatus::Done
+                }
+                SimEvent::TimedOut { id, .. } | SimEvent::Cancelled { id, .. }
+                    if id == job =>
+                {
+                    panic!("big job should not time out")
+                }
+                _ => DriverStatus::Running,
+            },
+            _ => DriverStatus::Running,
+        }
+    }
+
+    fn claims(&mut self) -> Vec<JobId> {
+        std::mem::take(&mut self.new_jobs)
+    }
+
+    fn take_outcome(&mut self) -> Option<DriverOutcome> {
+        self.outcome.take()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-Stage
+// ---------------------------------------------------------------------------
+
+enum PerStageState {
+    Idle,
+    Queued { stage: usize, job: JobId, sub: Time },
+    Running {
+        stage: usize,
+        job: JobId,
+        sub: Time,
+        start: Time,
+    },
+    Finished,
+}
+
+/// One right-sized allocation per stage, submitted at the previous stage's
+/// completion (eq. 2; E-HPC).
+pub struct PerStageDriver {
+    user: u32,
+    wf: WorkflowSpec,
+    scale: Cores,
+    submitted_at: Time,
+    /// End of the previous stage (== `submitted_at` before stage 0).
+    prev_end: Time,
+    records: Vec<StageRecord>,
+    state: PerStageState,
+    new_jobs: Vec<JobId>,
+    outcome: Option<DriverOutcome>,
+}
+
+impl PerStageDriver {
+    pub fn new(user: u32, wf: WorkflowSpec, scale: Cores) -> Self {
+        PerStageDriver {
+            user,
+            wf,
+            scale,
+            submitted_at: 0,
+            prev_end: 0,
+            records: Vec::new(),
+            state: PerStageState::Idle,
+            new_jobs: Vec::new(),
+            outcome: None,
+        }
+    }
+
+    fn submit_stage(&mut self, sim: &mut Simulator, i: usize) {
+        let node_cores = sim.config().cores_per_node;
+        let stage = &self.wf.stages[i];
+        let cores = stage.cores(self.scale, node_cores);
+        let d = stage.duration(cores);
+        let sub = sim.now();
+        let job = sim.submit(
+            JobSpec::new(
+                self.user,
+                format!("{}-s{i}-{}", self.wf.name, stage.name),
+                cores,
+                d,
+            )
+            .with_limit(stage_limit(d)),
+        );
+        self.new_jobs.push(job);
+        self.state = PerStageState::Queued { stage: i, job, sub };
+    }
+}
+
+impl StrategyDriver for PerStageDriver {
+    fn name(&self) -> &'static str {
+        "per-stage"
+    }
+
+    fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
+        self.submitted_at = sim.now();
+        self.prev_end = self.submitted_at;
+        self.submit_stage(sim, 0);
+        DriverStatus::Running
+    }
+
+    fn on_event(
+        &mut self,
+        sim: &mut Simulator,
+        _ctx: &mut DriverCtx,
+        ev: SimEvent,
+    ) -> DriverStatus {
+        match self.state {
+            PerStageState::Queued { stage, job, sub } => match ev {
+                SimEvent::Started { id, time } if id == job => {
+                    self.state = PerStageState::Running {
+                        stage,
+                        job,
+                        sub,
+                        start: time,
+                    };
+                    DriverStatus::Running
+                }
+                SimEvent::Cancelled { id, .. } if id == job => {
+                    panic!("job {id:?} cancelled while awaiting start")
+                }
+                _ => DriverStatus::Running,
+            },
+            PerStageState::Running {
+                stage,
+                job,
+                sub,
+                start,
+            } => match ev {
+                SimEvent::Finished { id, time } if id == job => {
+                    let node_cores = sim.config().cores_per_node;
+                    let cores = self.wf.stages[stage].cores(self.scale, node_cores);
+                    self.records.push(StageRecord {
+                        stage,
+                        name: self.wf.stages[stage].name,
+                        cores,
+                        submitted: sub,
+                        started: start,
+                        finished: time,
+                        // The workflow stalls from the previous stage's end
+                        // until this stage starts — entirely queue wait
+                        // under Per-Stage.
+                        perceived_wait: start - self.prev_end,
+                        charged_core_secs: cores as i64 * (time - start),
+                    });
+                    self.prev_end = time;
+                    if stage + 1 < self.wf.stages.len() {
+                        self.submit_stage(sim, stage + 1);
+                        DriverStatus::Running
+                    } else {
+                        self.outcome = Some(DriverOutcome {
+                            run: WorkflowRun {
+                                workflow: self.wf.name,
+                                strategy: "per-stage".into(),
+                                system: sim.config().name,
+                                scale: self.scale,
+                                submitted_at: self.submitted_at,
+                                finished_at: time,
+                                stages: std::mem::take(&mut self.records),
+                            },
+                            asa_stats: None,
+                        });
+                        self.state = PerStageState::Finished;
+                        DriverStatus::Done
+                    }
+                }
+                SimEvent::TimedOut { id, .. } | SimEvent::Cancelled { id, .. }
+                    if id == job =>
+                {
+                    panic!("stage job should not time out")
+                }
+                _ => DriverStatus::Running,
+            },
+            _ => DriverStatus::Running,
+        }
+    }
+
+    fn claims(&mut self) -> Vec<JobId> {
+        std::mem::take(&mut self.new_jobs)
+    }
+
+    fn take_outcome(&mut self) -> Option<DriverOutcome> {
+        self.outcome.take()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking wrappers
+// ---------------------------------------------------------------------------
+
+/// Run a workflow as one monolithic allocation (Big Job), blocking until
+/// completion. Thin wrapper over [`BigJobDriver`].
 pub fn run_big_job(
     sim: &mut Simulator,
     user: u32,
     wf: &WorkflowSpec,
     scale: Cores,
 ) -> WorkflowRun {
-    let node_cores = sim.config().cores_per_node;
-    let peak = wf.peak_cores(scale, node_cores);
-    let total = wf.total_exec(scale, node_cores);
-    let submitted_at = sim.now();
-    // Big jobs are padded additively (users size the monolithic request to
-    // the known pipeline length plus slack), unlike per-stage jobs which get
-    // the WMS's coarse hour-granularity padding.
-    let id = sim.submit(
-        JobSpec::new(user, format!("{}-bigjob", wf.name), peak, total)
-            .with_limit(total + 3600),
-    );
-    let start = await_started(sim, id);
-    let (end, ok) = await_terminal(sim, id);
-    assert!(ok, "big job should not time out");
-    // Reconstruct per-stage boundaries inside the single allocation; every
-    // stage is charged at the peak width (that is the Big-Job waste).
-    let mut stages = Vec::with_capacity(wf.stages.len());
-    let mut cursor = start;
-    for (i, stage) in wf.stages.iter().enumerate() {
-        let d = stage.duration(stage.cores(scale, node_cores));
-        stages.push(StageRecord {
-            stage: i,
-            name: stage.name,
-            cores: peak,
-            submitted: if i == 0 { submitted_at } else { cursor },
-            started: cursor,
-            finished: cursor + d,
-            perceived_wait: if i == 0 { start - submitted_at } else { 0 },
-            charged_core_secs: peak as i64 * d,
-        });
-        cursor += d;
-    }
-    debug_assert_eq!(cursor, end);
-    WorkflowRun {
-        workflow: wf.name,
-        strategy: "big-job".into(),
-        system: sim.config().name,
-        scale,
-        submitted_at,
-        finished_at: end,
-        stages,
-    }
+    run_single(sim, Box::new(BigJobDriver::new(user, wf.clone(), scale))).run
 }
 
-/// Run a workflow as per-stage allocations (E-HPC / Per-Stage).
+/// Run a workflow as per-stage allocations (E-HPC / Per-Stage), blocking
+/// until completion. Thin wrapper over [`PerStageDriver`].
 pub fn run_per_stage(
     sim: &mut Simulator,
     user: u32,
     wf: &WorkflowSpec,
     scale: Cores,
 ) -> WorkflowRun {
-    let node_cores = sim.config().cores_per_node;
-    let submitted_at = sim.now();
-    let mut stages = Vec::with_capacity(wf.stages.len());
-    let mut prev_end = submitted_at;
-    for (i, stage) in wf.stages.iter().enumerate() {
-        let cores = stage.cores(scale, node_cores);
-        let d = stage.duration(cores);
-        let sub = sim.now();
-        let id = sim.submit(
-            JobSpec::new(user, format!("{}-s{i}-{}", wf.name, stage.name), cores, d)
-                .with_limit(stage_limit(d)),
-        );
-        let start = await_started(sim, id);
-        let (end, ok) = await_terminal(sim, id);
-        assert!(ok, "stage job should not time out");
-        stages.push(StageRecord {
-            stage: i,
-            name: stage.name,
-            cores,
-            submitted: sub,
-            started: start,
-            finished: end,
-            // The workflow stalls from the previous stage's end until this
-            // stage starts — entirely queue wait under Per-Stage.
-            perceived_wait: start - prev_end,
-            charged_core_secs: cores as i64 * (end - start),
-        });
-        prev_end = end;
-    }
-    WorkflowRun {
-        workflow: wf.name,
-        strategy: "per-stage".into(),
-        system: sim.config().name,
-        scale,
-        submitted_at,
-        finished_at: prev_end,
-        stages,
-    }
+    run_single(sim, Box::new(PerStageDriver::new(user, wf.clone(), scale))).run
 }
 
 #[cfg(test)]
@@ -201,5 +455,46 @@ mod tests {
             assert!(w[1].started >= w[1].submitted);
         }
         assert_eq!(run.finished_at, run.stages.last().unwrap().finished);
+    }
+
+    #[test]
+    fn two_baseline_drivers_share_one_simulator() {
+        // The inverted control flow at work: a Big-Job and a Per-Stage
+        // workflow from different tenants progress through one event
+        // stream instead of serialising the simulator.
+        use crate::coordinator::asa::AsaConfig;
+        use crate::coordinator::driver::{DriverCtx, Orchestrator};
+        use crate::coordinator::kernel::PureRustKernel;
+        use crate::coordinator::state::AsaStore;
+        use crate::util::rng::Rng;
+
+        let mut s = sim();
+        let mut store = AsaStore::new(AsaConfig::default());
+        let mut kernel = PureRustKernel;
+        let mut rng = Rng::new(3);
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        let a = orch.spawn(
+            &mut s,
+            &mut ctx,
+            Box::new(BigJobDriver::new(1, apps::montage(), 112)),
+        );
+        let b = orch.spawn(
+            &mut s,
+            &mut ctx,
+            Box::new(PerStageDriver::new(2, apps::blast(), 56)),
+        );
+        orch.run(&mut s, &mut ctx);
+        let big = orch.outcome(a).unwrap().run;
+        let per = orch.outcome(b).unwrap().run;
+        // Idle 1792-core machine: both run unimpeded and overlap in time.
+        assert_eq!(big.makespan(), apps::montage().total_exec(112, 28));
+        assert_eq!(per.makespan(), apps::blast().total_exec(56, 28));
+        assert!(big.submitted_at == 0 && per.submitted_at == 0);
+        assert!(per.finished_at > big.submitted_at && big.finished_at > per.submitted_at);
     }
 }

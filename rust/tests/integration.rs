@@ -153,6 +153,41 @@ fn naive_mode_completes_with_overheads() {
     }
 }
 
+/// The contention scenario on a live (seeded) cluster: every tenant's
+/// workflow completes with consistent accounting while overlapping with
+/// the others on one simulator.
+#[test]
+fn concurrent_campaign_on_live_cluster() {
+    use asa::experiments::concurrent::{
+        run_concurrent, ConcurrentOpts, TenantStrategy,
+    };
+    let opts = ConcurrentOpts {
+        tenants: 4,
+        per_tenant: 2,
+        mean_gap: 900,
+        scale: 56,
+        strategy: TenantStrategy::Uniform(Strategy::Asa),
+        seed: 13,
+        settle: 4 * 3600,
+        baseline: false,
+    };
+    let report = run_concurrent(&SystemConfig::hpc2n(), &opts);
+    assert_eq!(report.cells.len(), 8);
+    assert!(report.max_in_flight >= 2, "no overlap under contention?");
+    let users: std::collections::BTreeSet<u32> =
+        report.cells.iter().map(|c| c.user).collect();
+    assert_eq!(users.len(), 4, "one account per tenant");
+    for c in &report.cells {
+        assert!(c.asa_stats.is_some());
+        assert_eq!(c.run.submitted_at, c.arrival);
+        for w in c.run.stages.windows(2) {
+            assert!(w[1].started >= w[0].finished, "stage order violated");
+        }
+        assert!(c.run.makespan() >= c.run.total_exec());
+        assert!(c.run.total_wait() >= 0);
+    }
+}
+
 /// Determinism: identical seeds give identical campaign outcomes.
 #[test]
 fn campaign_is_deterministic() {

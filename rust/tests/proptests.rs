@@ -7,6 +7,8 @@ use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use asa::coordinator::loss::{loss_vector, LossKind};
 use asa::coordinator::policy::Policy;
 use asa::coordinator::pool::ResourcePool;
+use asa::experiments::campaign::Strategy;
+use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
 use asa::simulator::{JobId, JobSpec, SimEvent, Simulator, SystemConfig};
 use asa::util::propcheck::check;
 
@@ -141,6 +143,49 @@ fn prop_simulator_conservation() {
 }
 
 #[test]
+fn prop_orchestrator_interleaving_is_deterministic() {
+    // With the same seed, interleaving N drivers through the orchestrator
+    // is deterministic: two runs of an identical multi-tenant scenario
+    // produce identical per-workflow makespans (and waits and charges).
+    check("orchestrator interleaving deterministic", 8, |g| {
+        let opts = ConcurrentOpts {
+            tenants: g.u32(2, 5),
+            per_tenant: g.u32(1, 3),
+            mean_gap: g.i64(30, 600),
+            scale: 28 * g.i64(1, 3) as u32,
+            strategy: match g.usize(0, 2) {
+                0 => TenantStrategy::Uniform(Strategy::Asa),
+                1 => TenantStrategy::Uniform(Strategy::PerStage),
+                _ => TenantStrategy::Mixed,
+            },
+            seed: g.rng().next_u64(),
+            settle: 0,
+            baseline: false,
+        };
+        let system = SystemConfig::testbed(64, 28);
+        let fingerprint = |r: &asa::experiments::concurrent::ConcurrentReport| {
+            r.cells
+                .iter()
+                .map(|c| {
+                    (
+                        c.tenant,
+                        c.run.workflow,
+                        c.run.makespan(),
+                        c.run.total_wait(),
+                        c.run.core_hours().to_bits(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = run_concurrent(&system, &opts);
+        let b = run_concurrent(&system, &opts);
+        assert_eq!(fingerprint(&a), fingerprint(&b), "opts: {opts:?}");
+        assert_eq!(a.max_in_flight, b.max_in_flight);
+        assert_eq!(a.cells.len(), (opts.tenants * opts.per_tenant) as usize);
+    });
+}
+
+#[test]
 fn prop_pool_core_conservation() {
     check("pool conserves cores", 100, |g| {
         let mut pool = ResourcePool::new();
@@ -196,7 +241,10 @@ fn prop_foreground_events_are_causal() {
         while let Some(ev) = sim.step() {
             assert!(ev.time() >= last_time, "time went backwards");
             last_time = ev.time();
-            let phase = seen.entry(ev.id()).or_insert(0);
+            let Some(id) = ev.id() else {
+                continue; // wake events carry no job
+            };
+            let phase = seen.entry(id).or_insert(0);
             match ev {
                 SimEvent::Submitted { .. } => {
                     assert_eq!(*phase, 0);
@@ -214,6 +262,7 @@ fn prop_foreground_events_are_causal() {
                     assert!(*phase <= 2);
                     *phase = 3;
                 }
+                SimEvent::Wake { .. } => unreachable!("filtered above"),
             }
         }
         assert!(seen.values().all(|&p| p == 3), "jobs left unterminated");
