@@ -18,9 +18,10 @@ fn main() {
             convergence::run(1000, 5, &mut xla)
         });
     }
-    // Regenerate and print the actual figure once.
+    // Regenerate and print the actual figure once (parallel path: one
+    // worker per policy, bit-identical to the serial run above).
     let mut k = PureRustKernel;
-    let r = convergence::run(1000, 5, &mut k);
+    let r = convergence::run_par(1000, 5);
     println!("{}", r.summary().render());
 
     // Ablation (paper §4.5): the tuned policy's repetition parameter trades

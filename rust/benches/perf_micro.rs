@@ -1,29 +1,97 @@
 //! Micro-benchmarks for the hot paths (the §Perf iteration log targets):
 //! the scheduling pass, the simulator event loop under background load,
-//! and the ASA update under both kernel backends.
+//! deep/dependency-heavy queues, and the ASA update under both kernel
+//! backends. Writes `BENCH_perf_micro.json` at the repo root so successive
+//! PRs can diff the perf trajectory.
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
-use asa::simulator::{Simulator, SystemConfig};
+use asa::simulator::{Dependency, JobSpec, Simulator, SystemConfig};
 use asa::util::bench::Bench;
 use asa::util::rng::Rng;
 
+/// Deep-queue regression: `held` jobs sit parked behind a long-running
+/// dependency gate while a churn stream of short jobs forces a scheduling
+/// pass per event. With the incremental engine the per-pass cost tracks
+/// the *eligible* set (the churn), not the parked total, so the 10k case
+/// should cost about the same as the 1k case.
+fn deep_queue(held: usize) -> u64 {
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(64, 28));
+    let gate = sim.submit(JobSpec::new(1, "gate", 1, 1_000_000).with_limit(1_000_000));
+    for i in 0..held {
+        sim.submit(
+            JobSpec::new(2 + (i % 50) as u32, format!("h{i}"), 4, 60)
+                .with_dependency(Dependency::AfterOk(vec![gate])),
+        );
+    }
+    for k in 0..2000u32 {
+        sim.submit_at(
+            k as i64 * 30,
+            JobSpec::new(60 + k % 20, format!("c{k}"), 8, 25),
+        );
+    }
+    sim.run_until(2000 * 30);
+    sim.metrics.passes
+}
+
+/// Dependency-heavy chain + fan-out: a 300-deep `AfterOk` chain and a
+/// 500-wide fan-out behind one root, exercising the reverse-dependency
+/// wakeup path on every completion.
+fn dep_web() -> u64 {
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(64, 28));
+    let mut prev = sim.submit(JobSpec::new(1, "c0", 2, 20));
+    for i in 1..300u32 {
+        prev = sim.submit(
+            JobSpec::new(1, format!("c{i}"), 2, 20)
+                .with_dependency(Dependency::AfterOk(vec![prev])),
+        );
+    }
+    let root = sim.submit(JobSpec::new(2, "root", 2, 30));
+    for i in 0..500u32 {
+        sim.submit(
+            JobSpec::new(3 + i % 40, format!("f{i}"), 2, 15)
+                .with_dependency(Dependency::AfterOk(vec![root])),
+        );
+    }
+    while sim.step().is_some() {}
+    sim.metrics.completed
+}
+
+fn background_churn(system: SystemConfig, horizon_secs: i64) -> u64 {
+    let mut sim = Simulator::new(system, 42);
+    sim.run_until(horizon_secs);
+    sim.metrics.started
+}
+
 fn main() {
     let mut b = Bench::new("perf_micro");
+    b.root_json = true;
 
-    // 1) Simulator throughput: 24 h of HPC2n background churn.
+    // 1) Simulator throughput: 24 h of HPC2n background churn (items =
+    // jobs started, taken from the warmup run — the sims are seeded, so
+    // every iteration starts the same count).
     b.samples = 5;
-    b.case("sim: 24h hpc2n background", || {
-        let mut sim = Simulator::new(SystemConfig::hpc2n(), 42);
-        sim.run_until(24 * 3600);
-        sim.metrics.started
+    b.case_throughput_of("sim: 24h hpc2n background", || {
+        background_churn(SystemConfig::hpc2n(), 24 * 3600)
     });
-    b.case("sim: 24h uppmax background", || {
-        let mut sim = Simulator::new(SystemConfig::uppmax(), 42);
-        sim.run_until(24 * 3600);
-        sim.metrics.started
+    b.case_throughput_of("sim: 24h uppmax background", || {
+        background_churn(SystemConfig::uppmax(), 24 * 3600)
+    });
+
+    // 1b) Deep queues: pass cost must not scale with dependency-parked
+    // jobs (items = scheduling passes run).
+    b.samples = 3;
+    b.case_throughput_of("sim: deep queue 1k dep-held, 2k churn", || deep_queue(1_000));
+    b.case_throughput_of("sim: deep queue 10k dep-held, 2k churn", || deep_queue(10_000));
+    b.case_throughput_of("sim: dep chain 300 + fanout 500", dep_web);
+
+    // 1c) Long-horizon churn: one week of HPC2n background load.
+    b.samples = 1;
+    b.case_throughput_of("sim: 7d hpc2n background", || {
+        background_churn(SystemConfig::hpc2n(), 7 * 24 * 3600)
     });
 
     // 2) ASA update kernel: single rows and batches.
+    b.samples = 5;
     let grid = ActionGrid::paper();
     let m = grid.len();
     let mut rng = Rng::new(1);

@@ -12,8 +12,12 @@ fn main() {
         let mut k = PureRustKernel;
         accuracy::run_table2(20, 42, &mut k)
     });
-    let mut k = PureRustKernel;
-    let rows = accuracy::run_table2(60, 42, &mut k);
+    b.case("table2: 20 probes x 18 geometries (par)", || {
+        accuracy::run_table2_par(20, 42)
+    });
+    // Full-size regeneration over the parallel sweep (bit-identical to the
+    // serial pure-rust path, one worker per (system, workflow) unit).
+    let rows = accuracy::run_table2_par(60, 42);
     println!("{}", accuracy::table2(&rows).render());
     b.finish();
 }

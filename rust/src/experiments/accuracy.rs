@@ -13,10 +13,11 @@
 //! with perceived wait `real − predicted ≥ 0` and zero overhead.
 
 use crate::coordinator::asa::AsaConfig;
-use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use crate::coordinator::state::{AsaStore, GeometryKey};
 use crate::simulator::{JobSpec, SimEvent, Simulator, SystemConfig};
 use crate::util::json::Json;
+use crate::util::par::par_map;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
@@ -153,43 +154,84 @@ pub fn probe_geometry(
     acc
 }
 
+/// The geometry sweep for one (system, workflow): each scaling probed in
+/// turn with the estimator store persisting across scales (the paper keeps
+/// Algorithm 1's state across runs). Units are independent of each other —
+/// [`run_table2_par`] exploits exactly that.
+pub fn table2_unit(
+    system: &SystemConfig,
+    workflow: &'static str,
+    scales: &[Cores],
+    probes: usize,
+    seed: u64,
+    kernel: &mut dyn UpdateKernel,
+) -> Vec<GeometryAccuracy> {
+    let wf = crate::workflow::apps::by_name(workflow).unwrap();
+    let mut store = AsaStore::new(AsaConfig::default());
+    let mut out = Vec::new();
+    for &cores in scales {
+        let mut sim = Simulator::new(system.clone(), seed ^ cores as u64);
+        sim.run_until(6 * 3600);
+        let mut rng = Rng::new(seed ^ 0xacc ^ cores as u64);
+        // The probed geometry is the workflow's peak job shape: its
+        // scaling in cores and its full execution time (these are
+        // the "job geometries related to each workflow", §4.8).
+        let probe_runtime = wf.total_exec(cores, system.cores_per_node);
+        // Warm-up (unrecorded): the paper's estimator state is kept
+        // across runs, so probes never start from a cold uniform.
+        probe_geometry(
+            &mut sim, &mut store, kernel, &mut rng, workflow, cores, probe_runtime, 10, 60,
+        );
+        out.push(probe_geometry(
+            &mut sim,
+            &mut store,
+            kernel,
+            &mut rng,
+            workflow,
+            cores,
+            probe_runtime,
+            probes,
+            60,
+        ));
+    }
+    out
+}
+
+/// The (system, workflow) unit list of the full Table-2 sweep.
+const TABLE2_UNITS: [(&str, [Cores; 3]); 2] =
+    [("hpc2n", [28, 56, 112]), ("uppmax", [160, 320, 640])];
+
 /// The full Table-2 experiment across all workflows and scalings.
 pub fn run_table2(probes: usize, seed: u64, kernel: &mut dyn UpdateKernel) -> Vec<GeometryAccuracy> {
     let mut out = Vec::new();
-    for (sys_name, scales) in [("hpc2n", [28u32, 56, 112]), ("uppmax", [160, 320, 640])] {
+    for (sys_name, scales) in TABLE2_UNITS {
         let system = SystemConfig::by_name(sys_name).unwrap();
         for workflow in ["montage", "blast", "statistics"] {
-            let wf = crate::workflow::apps::by_name(workflow).unwrap();
-            let mut store = AsaStore::new(AsaConfig::default());
-            for &cores in &scales {
-                let mut sim = Simulator::new(system.clone(), seed ^ cores as u64);
-                sim.run_until(6 * 3600);
-                let mut rng = Rng::new(seed ^ 0xacc ^ cores as u64);
-                // The probed geometry is the workflow's peak job shape: its
-                // scaling in cores and its full execution time (these are
-                // the "job geometries related to each workflow", §4.8).
-                let probe_runtime = wf.total_exec(cores, system.cores_per_node);
-                // Warm-up (unrecorded): the paper's estimator state is kept
-                // across runs, so probes never start from a cold uniform.
-                probe_geometry(
-                    &mut sim, &mut store, kernel, &mut rng, workflow, cores,
-                    probe_runtime, 10, 60,
-                );
-                out.push(probe_geometry(
-                    &mut sim,
-                    &mut store,
-                    kernel,
-                    &mut rng,
-                    workflow,
-                    cores,
-                    probe_runtime,
-                    probes,
-                    60,
-                ));
-            }
+            out.extend(table2_unit(&system, workflow, &scales, probes, seed, kernel));
         }
     }
     out
+}
+
+/// Parallel Table-2 sweep: one worker per (system, workflow) unit, each
+/// with its own pure-Rust kernel. Every unit's simulators and RNGs are
+/// seeded from `(seed, cores)` alone, so the output is bit-identical to
+/// [`run_table2`] with [`PureRustKernel`] — in the same row order.
+pub fn run_table2_par(probes: usize, seed: u64) -> Vec<GeometryAccuracy> {
+    let mut units: Vec<(&'static str, [Cores; 3], &'static str)> = Vec::new();
+    for (sys_name, scales) in TABLE2_UNITS {
+        for workflow in ["montage", "blast", "statistics"] {
+            units.push((sys_name, scales, workflow));
+        }
+    }
+    par_map(units, |(sys_name, scales, workflow)| {
+        let system = SystemConfig::by_name(sys_name).unwrap();
+        let mut kernel = PureRustKernel;
+        table2_unit(&system, workflow, &scales, probes, seed, &mut kernel)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Render Table 2.
@@ -285,6 +327,39 @@ mod tests {
             "expected_wait={}",
             store.get(&key).unwrap().expected_wait()
         );
+    }
+
+    #[test]
+    fn parallel_units_match_serial_units() {
+        // The par_map fan-out over (system, workflow) units must reproduce
+        // the serial sweep bit-for-bit (each unit owns its kernel + RNGs).
+        let mut system = SystemConfig::testbed(32, 28);
+        system.workload = crate::simulator::trace::WorkloadProfile::quiet();
+        let workflows: [&'static str; 2] = ["blast", "montage"];
+        let scales: [Cores; 2] = [14, 28];
+        let serial: Vec<GeometryAccuracy> = workflows
+            .iter()
+            .flat_map(|&wf| {
+                let mut k = PureRustKernel;
+                table2_unit(&system, wf, &scales, 5, 7, &mut k)
+            })
+            .collect();
+        let par: Vec<GeometryAccuracy> = crate::util::par::par_map(workflows.to_vec(), |wf| {
+            let mut k = PureRustKernel;
+            table2_unit(&system, wf, &scales, 5, 7, &mut k)
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.workflow, p.workflow);
+            assert_eq!(s.cores, p.cores);
+            assert_eq!(s.hits, p.hits);
+            assert_eq!(s.misses, p.misses);
+            assert_eq!(s.real_wt.mean().to_bits(), p.real_wt.mean().to_bits());
+            assert_eq!(s.asa_wt.mean().to_bits(), p.asa_wt.mean().to_bits());
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::coordinator::state::AsaStore;
 use crate::coordinator::strategy::{run_asa, AsaDriver, AsaRunOpts, AsaRunStats};
 use crate::simulator::{Simulator, SystemConfig};
 use crate::util::json::Json;
+use crate::util::par::par_map;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::workflow::spec::{WorkflowRun, WorkflowSpec};
@@ -148,63 +149,69 @@ pub fn run_session(
     cells
 }
 
+/// One (system, scale) campaign cell: all strategies over one set of
+/// identically-seeded sessions, with ASA's store persisting across the
+/// scaling's submissions. Units are independent of each other, which is
+/// what lets [`run_campaign`] fan them out over [`par_map`].
+fn campaign_unit(
+    sys_name: &str,
+    scale: Cores,
+    workflows: &[&str],
+    include_naive: bool,
+    seed: u64,
+) -> Vec<Cell> {
+    let system = SystemConfig::by_name(sys_name).expect("unknown system");
+    let cell_seed = seed ^ (scale as u64) << 8 ^ sys_name.len() as u64;
+    let mut cells = Vec::new();
+    // ASA's store persists across the session's submissions.
+    let mut store = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    let mut kernel = PureRustKernel;
+    let mut strategies = vec![Strategy::BigJob, Strategy::PerStage, Strategy::Asa];
+    if include_naive {
+        strategies.push(Strategy::AsaNaive);
+    }
+    for strategy in strategies {
+        if matches!(strategy, Strategy::Asa | Strategy::AsaNaive) {
+            // Warm-up session (unrecorded): the paper keeps Algorithm 1's
+            // state across runs and scales (§4.3, §5), so ASA never enters
+            // an evaluated session cold.
+            run_session(
+                &system,
+                scale,
+                Strategy::Asa,
+                workflows,
+                cell_seed ^ 0xdead,
+                &mut store,
+                &mut kernel,
+            );
+        }
+        cells.extend(run_session(
+            &system, scale, strategy, workflows, cell_seed, &mut store, &mut kernel,
+        ));
+    }
+    cells
+}
+
 /// The full campaign: every scaling × the three strategies (plus naïve when
 /// requested), three workflows per session. Returns all 54(+) cells.
+/// Scalings run concurrently via [`par_map`]; the result is bit-identical
+/// to running the units serially in `scalings` order (each unit is seeded
+/// from `(seed, system, scale)` alone).
 pub fn run_campaign(
     workflows: &[&str],
     scalings: &[(&str, Cores)],
     include_naive: bool,
     seed: u64,
 ) -> Vec<Cell> {
-    let mut all = Vec::new();
-    let handles: Vec<std::thread::JoinHandle<Vec<Cell>>> = scalings
-        .iter()
-        .map(|&(sys_name, scale)| {
-            let workflows: Vec<String> = workflows.iter().map(|s| s.to_string()).collect();
-            let sys_name = sys_name.to_string();
-            std::thread::spawn(move || {
-                let system = SystemConfig::by_name(&sys_name).expect("unknown system");
-                let wf_refs: Vec<&str> = workflows.iter().map(|s| s.as_str()).collect();
-                let cell_seed = seed ^ (scale as u64) << 8 ^ sys_name.len() as u64;
-                let mut cells = Vec::new();
-                // ASA's store persists across the session's submissions.
-                let mut store = AsaStore::new(AsaConfig {
-                    policy: Policy::Tuned { rep: 50 },
-                    ..AsaConfig::default()
-                });
-                let mut kernel = PureRustKernel;
-                let mut strategies = vec![Strategy::BigJob, Strategy::PerStage, Strategy::Asa];
-                if include_naive {
-                    strategies.push(Strategy::AsaNaive);
-                }
-                for strategy in strategies {
-                    if matches!(strategy, Strategy::Asa | Strategy::AsaNaive) {
-                        // Warm-up session (unrecorded): the paper keeps
-                        // Algorithm 1's state across runs and scales
-                        // (§4.3, §5), so ASA never enters an evaluated
-                        // session cold.
-                        run_session(
-                            &system,
-                            scale,
-                            Strategy::Asa,
-                            &wf_refs,
-                            cell_seed ^ 0xdead,
-                            &mut store,
-                            &mut kernel,
-                        );
-                    }
-                    cells.extend(run_session(
-                        &system, scale, strategy, &wf_refs, cell_seed, &mut store, &mut kernel,
-                    ));
-                }
-                cells
-            })
-        })
-        .collect();
-    for h in handles {
-        all.extend(h.join().expect("campaign thread panicked"));
-    }
-    all
+    par_map(scalings.to_vec(), |(sys_name, scale)| {
+        campaign_unit(sys_name, scale, workflows, include_naive, seed)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Table 1: TWT / makespan / core-hours per workflow × scaling × strategy,
@@ -394,6 +401,35 @@ mod tests {
         assert_eq!(Strategy::parse("asa"), Some(Strategy::Asa));
         assert_eq!(Strategy::parse("big-job"), Some(Strategy::BigJob));
         assert_eq!(Strategy::parse("x"), None);
+    }
+
+    #[test]
+    fn parallel_campaign_matches_serial_units() {
+        // The par_map fan-out must be bit-identical to folding the same
+        // units serially: identical cells, in scalings order.
+        let scalings: [(&str, Cores); 2] = [("testbed", 28), ("testbed", 56)];
+        let fingerprint = |cells: &[Cell]| -> Vec<(String, Cores, String, Time, Time, u64)> {
+            cells
+                .iter()
+                .map(|c| {
+                    (
+                        c.run.workflow.to_string(),
+                        c.run.scale,
+                        c.run.strategy.clone(),
+                        c.run.makespan(),
+                        c.run.total_wait(),
+                        c.run.core_hours().to_bits(),
+                    )
+                })
+                .collect()
+        };
+        let par = run_campaign(&["blast"], &scalings, false, 11);
+        let serial: Vec<Cell> = scalings
+            .iter()
+            .flat_map(|&(sys, scale)| campaign_unit(sys, scale, &["blast"], false, 11))
+            .collect();
+        assert_eq!(fingerprint(&par), fingerprint(&serial));
+        assert_eq!(par.len(), 2 * 3); // 2 scalings × 3 strategies × 1 workflow
     }
 
     #[test]

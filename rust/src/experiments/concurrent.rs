@@ -19,6 +19,7 @@ use crate::coordinator::strategy::AsaRunStats;
 use crate::experiments::campaign::Strategy;
 use crate::simulator::{Simulator, SystemConfig};
 use crate::util::json::Json;
+use crate::util::par::par_map;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::workflow::apps;
@@ -210,16 +211,34 @@ pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> Concurren
         orch.run(&mut sim, &mut ctx);
     }
 
-    // Solo baselines, memoised per (workflow, strategy).
+    // Solo baselines, one per distinct (workflow, strategy), computed in
+    // parallel — each solo session is an independent, identically-seeded
+    // simulator, so the fan-out is deterministic.
     let mut solo: BTreeMap<(&'static str, &'static str), Time> = BTreeMap::new();
+    if opts.baseline {
+        let mut seen: std::collections::BTreeSet<(&'static str, &'static str)> =
+            std::collections::BTreeSet::new();
+        let mut keys: Vec<(&'static str, Strategy)> = Vec::new();
+        for p in &plan {
+            let (strategy, wf_name) = (p.4, p.5);
+            if seen.insert((wf_name, strategy.name())) {
+                keys.push((wf_name, strategy));
+            }
+        }
+        let makespans = par_map(keys.clone(), |(wf_name, strategy)| {
+            solo_run(system, opts.scale, strategy, wf_name, opts.seed, opts.settle).makespan()
+        });
+        solo = keys
+            .into_iter()
+            .zip(makespans)
+            .map(|((wf_name, strategy), mk)| ((wf_name, strategy.name()), mk))
+            .collect();
+    }
     let mut cells = Vec::with_capacity(plan.len());
     for (id, tenant, user, arrival, strategy, wf_name) in plan {
         let out = orch.outcome(id).expect("concurrent driver completed");
         let solo_makespan = if opts.baseline {
-            Some(*solo.entry((wf_name, strategy.name())).or_insert_with(|| {
-                solo_run(system, opts.scale, strategy, wf_name, opts.seed, opts.settle)
-                    .makespan()
-            }))
+            solo.get(&(wf_name, strategy.name())).copied()
         } else {
             None
         };

@@ -32,53 +32,81 @@ pub struct ConvergenceResult {
     pub trajectories: Vec<Trajectory>,
 }
 
-/// Run the simulation. The truth sequence is drawn from the grid's range at
-/// the five shift points (seeded), observations are noiseless waits equal to
-/// the current truth (the paper's hypothetical scenario).
-pub fn run(iterations: usize, seed: u64, kernel: &mut dyn UpdateKernel) -> ConvergenceResult {
+/// The three policies Fig. 5 compares.
+const POLICIES: [Policy; 3] = [Policy::Greedy, Policy::Default, Policy::Tuned { rep: 50 }];
+
+/// The stepped truth sequence: five regime levels at 0,200,400,600,800
+/// (scaled for other lengths), log-uniform over [30 s, 60 000 s].
+fn truth_series(iterations: usize, seed: u64) -> Vec<Time> {
     let mut truth_rng = Rng::new(seed);
-    // Five regime levels at 0,200,400,600,800 (scaled for other lengths).
     let shift_every = (iterations / 5).max(1);
     let levels: Vec<Time> = (0..5)
         .map(|_| {
-            // Log-uniform over [30 s, 60 000 s]: spans the grid decades.
             let lo = (30f64).ln();
             let hi = (60_000f64).ln();
             truth_rng.uniform(lo, hi).exp() as Time
         })
         .collect();
-    let truth: Vec<Time> = (0..iterations)
+    (0..iterations)
         .map(|i| levels[(i / shift_every).min(4)])
-        .collect();
+        .collect()
+}
 
-    let policies = [
-        Policy::Greedy,
-        Policy::Default,
-        Policy::Tuned { rep: 50 },
-    ];
-    let mut trajectories = Vec::new();
-    for policy in policies {
-        let mut rng = Rng::new(seed ^ 0xbeef);
-        let mut est = AsaEstimator::new(AsaConfig {
-            policy,
-            ..AsaConfig::default()
-        });
-        let mut estimates = Vec::with_capacity(iterations);
-        let mut modes = Vec::with_capacity(iterations);
-        let mut total_loss = 0.0;
-        for &w in &truth {
-            let (a, secs) = est.sample_wait(&mut rng);
-            estimates.push(secs);
-            total_loss += est.observe(a, w, kernel, &mut rng);
-            modes.push(est.best_wait());
-        }
-        trajectories.push(Trajectory {
-            policy,
-            estimates,
-            modes,
-            total_loss,
-        });
+/// One policy chasing the truth sequence (its RNG is seeded from `seed`
+/// alone, so trajectories are independent of evaluation order).
+fn run_policy(
+    policy: Policy,
+    truth: &[Time],
+    seed: u64,
+    kernel: &mut dyn UpdateKernel,
+) -> Trajectory {
+    let mut rng = Rng::new(seed ^ 0xbeef);
+    let mut est = AsaEstimator::new(AsaConfig {
+        policy,
+        ..AsaConfig::default()
+    });
+    let mut estimates = Vec::with_capacity(truth.len());
+    let mut modes = Vec::with_capacity(truth.len());
+    let mut total_loss = 0.0;
+    for &w in truth {
+        let (a, secs) = est.sample_wait(&mut rng);
+        estimates.push(secs);
+        total_loss += est.observe(a, w, kernel, &mut rng);
+        modes.push(est.best_wait());
     }
+    Trajectory {
+        policy,
+        estimates,
+        modes,
+        total_loss,
+    }
+}
+
+/// Run the simulation. The truth sequence is drawn from the grid's range at
+/// the five shift points (seeded), observations are noiseless waits equal to
+/// the current truth (the paper's hypothetical scenario).
+pub fn run(iterations: usize, seed: u64, kernel: &mut dyn UpdateKernel) -> ConvergenceResult {
+    let truth = truth_series(iterations, seed);
+    let trajectories = POLICIES
+        .iter()
+        .map(|&policy| run_policy(policy, &truth, seed, kernel))
+        .collect();
+    ConvergenceResult {
+        truth,
+        trajectories,
+    }
+}
+
+/// Parallel variant of [`run`]: the three policies are independent (each
+/// owns its RNG and estimator), so they map onto worker threads with a
+/// per-thread pure-Rust kernel. Output is bit-identical to the serial path
+/// with [`crate::coordinator::kernel::PureRustKernel`].
+pub fn run_par(iterations: usize, seed: u64) -> ConvergenceResult {
+    let truth = truth_series(iterations, seed);
+    let trajectories = crate::util::par::par_map(POLICIES.to_vec(), |policy| {
+        let mut kernel = crate::coordinator::kernel::PureRustKernel;
+        run_policy(policy, &truth, seed, &mut kernel)
+    });
     ConvergenceResult {
         truth,
         trajectories,
@@ -213,6 +241,21 @@ mod tests {
             .find(|t| matches!(t.policy, Policy::Tuned { .. }))
             .unwrap();
         assert_eq!(*tuned.modes.last().unwrap(), target);
+    }
+
+    #[test]
+    fn parallel_run_matches_serial() {
+        let mut k = PureRustKernel;
+        let serial = run(400, 5, &mut k);
+        let par = run_par(400, 5);
+        assert_eq!(serial.truth, par.truth);
+        assert_eq!(serial.trajectories.len(), par.trajectories.len());
+        for (s, p) in serial.trajectories.iter().zip(&par.trajectories) {
+            assert_eq!(s.policy, p.policy);
+            assert_eq!(s.estimates, p.estimates);
+            assert_eq!(s.modes, p.modes);
+            assert_eq!(s.total_loss.to_bits(), p.total_loss.to_bits());
+        }
     }
 
     #[test]

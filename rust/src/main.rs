@@ -95,8 +95,15 @@ fn cmd_convergence(argv: Vec<String>) -> i32 {
     };
     let iters = a.get_usize("iters", 1000).unwrap();
     let seed = a.get_u64("seed", 5).unwrap();
-    let mut kernel = make_kernel(a.flag("xla"));
-    let result = convergence::run(iters, seed, kernel.as_mut());
+    // One worker per policy on the pure-rust path (identical output);
+    // the XLA artifact kernel is a single mutable handle, so it stays
+    // serial.
+    let result = if a.flag("xla") {
+        let mut kernel = make_kernel(true);
+        convergence::run(iters, seed, kernel.as_mut())
+    } else {
+        convergence::run_par(iters, seed)
+    };
     println!("{}", result.chart());
     println!("{}", result.summary().render());
     write_result("fig5_convergence", &result.to_json());
@@ -234,8 +241,15 @@ fn cmd_table2(argv: Vec<String>) -> i32 {
     };
     let probes = a.get_usize("probes", 60).unwrap();
     let seed = a.get_u64("seed", 42).unwrap();
-    let mut kernel = make_kernel(a.flag("xla"));
-    let rows = accuracy::run_table2(probes, seed, kernel.as_mut());
+    // Pure-rust updates take the parallel sweep (one worker per
+    // (system, workflow) unit — bit-identical to the serial path); the
+    // XLA artifact kernel is a single mutable handle, so it stays serial.
+    let rows = if a.flag("xla") {
+        let mut kernel = make_kernel(true);
+        accuracy::run_table2(probes, seed, kernel.as_mut())
+    } else {
+        accuracy::run_table2_par(probes, seed)
+    };
     let t = accuracy::table2(&rows);
     println!("{}", t.render());
     write_csv("table2", &t.to_csv());

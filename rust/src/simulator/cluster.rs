@@ -7,7 +7,7 @@
 
 use crate::simulator::job::JobId;
 use crate::{Cores, Time};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 /// One live allocation.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +25,13 @@ pub struct Cluster {
     total: Cores,
     free: Cores,
     allocs: HashMap<JobId, Allocation>,
+    /// Allocations keyed by `(limit_end, cores, job)`, kept sorted so the
+    /// EASY-backfill shadow computation walks planned end times in order
+    /// (and stops early) instead of collecting + sorting every running job
+    /// on each blocked-head pass. The `cores` component matches the tuple
+    /// order the shadow merge historically used, so tie order at equal end
+    /// times is unchanged.
+    by_end: BTreeSet<(Time, Cores, JobId)>,
 }
 
 impl Cluster {
@@ -33,6 +40,7 @@ impl Cluster {
             total,
             free: total,
             allocs: HashMap::new(),
+            by_end: BTreeSet::new(),
         }
     }
 
@@ -77,11 +85,13 @@ impl Cluster {
                 limit_end,
             },
         );
+        self.by_end.insert((limit_end, cores, job));
     }
 
     /// Release a job's allocation (finish/cancel). No-op if not allocated.
     pub fn release(&mut self, job: JobId) -> Option<Allocation> {
         let alloc = self.allocs.remove(&job)?;
+        self.by_end.remove(&(alloc.limit_end, alloc.cores, job));
         self.free += alloc.cores;
         debug_assert!(self.free <= self.total);
         Some(alloc)
@@ -95,12 +105,11 @@ impl Cluster {
         self.allocs.len()
     }
 
-    /// Live allocations sorted by planned end time — the input to the EASY
-    /// backfill "shadow time" computation.
-    pub fn allocations_by_end(&self) -> Vec<Allocation> {
-        let mut v: Vec<Allocation> = self.allocs.values().copied().collect();
-        v.sort_by_key(|a| (a.limit_end, a.job));
-        v
+    /// `(limit_end, cores)` of live allocations in ascending `(end, cores)`
+    /// order — the input to the EASY backfill "shadow time" computation,
+    /// consumed lazily so the pass stops as soon as enough cores free up.
+    pub fn ends_iter(&self) -> impl Iterator<Item = (Time, Cores)> + '_ {
+        self.by_end.iter().map(|&(t, c, _)| (t, c))
     }
 }
 
@@ -155,7 +164,23 @@ mod tests {
         c.allocate(JobId(1), 10, 0, 300);
         c.allocate(JobId(2), 10, 0, 100);
         c.allocate(JobId(3), 10, 0, 200);
-        let ends: Vec<Time> = c.allocations_by_end().iter().map(|a| a.limit_end).collect();
-        assert_eq!(ends, vec![100, 200, 300]);
+        let pairs: Vec<(Time, Cores)> = c.ends_iter().collect();
+        assert_eq!(pairs, vec![(100, 10), (200, 10), (300, 10)]);
+    }
+
+    #[test]
+    fn end_index_tracks_release() {
+        let mut c = Cluster::new(100);
+        c.allocate(JobId(1), 10, 0, 300);
+        c.allocate(JobId(2), 20, 0, 100);
+        c.release(JobId(2));
+        assert_eq!(c.ends_iter().collect::<Vec<_>>(), vec![(300, 10)]);
+        // Equal end times order by cores, matching the shadow merge's
+        // historical (time, cores) tuple sort.
+        c.allocate(JobId(4), 5, 0, 300);
+        assert_eq!(
+            c.ends_iter().collect::<Vec<_>>(),
+            vec![(300, 5), (300, 10)]
+        );
     }
 }

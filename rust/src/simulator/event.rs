@@ -5,7 +5,7 @@
 
 use crate::Time;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
 
 /// Internal engine events.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -56,6 +56,10 @@ impl Ord for Entry {
 pub struct EventQueue {
     heap: BinaryHeap<Entry>,
     seq: u64,
+    /// Times with an outstanding deduplicated [`EventKind::Sample`] (see
+    /// [`EventQueue::push_sample_dedup`]); entries clear when the sample
+    /// pops.
+    sample_times: BTreeSet<Time>,
 }
 
 impl EventQueue {
@@ -69,8 +73,27 @@ impl EventQueue {
         self.heap.push(Entry { time, seq, kind });
     }
 
+    /// Push a [`EventKind::Sample`] at `time` unless one scheduled through
+    /// this method is already outstanding for exactly that time. The
+    /// scheduling pass re-requests a wakeup for the earliest `--begin`
+    /// release on every pass; without deduplication the heap fills with
+    /// identical samples (one per pass) that all fire no-op passes at the
+    /// same instant.
+    pub fn push_sample_dedup(&mut self, time: Time) -> bool {
+        if !self.sample_times.insert(time) {
+            return false;
+        }
+        self.push(time, EventKind::Sample);
+        true
+    }
+
     pub fn pop(&mut self) -> Option<(Time, EventKind)> {
-        self.heap.pop().map(|e| (e.time, e.kind))
+        self.heap.pop().map(|e| {
+            if matches!(e.kind, EventKind::Sample) {
+                self.sample_times.remove(&e.time);
+            }
+            (e.time, e.kind)
+        })
     }
 
     pub fn peek_time(&self) -> Option<Time> {
@@ -124,5 +147,18 @@ mod tests {
         q.push(7, EventKind::Sample);
         assert_eq!(q.peek_time(), Some(7));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_samples_are_coalesced() {
+        let mut q = EventQueue::new();
+        assert!(q.push_sample_dedup(100));
+        assert!(!q.push_sample_dedup(100), "same time must dedup");
+        assert!(q.push_sample_dedup(200), "different time is kept");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((100, EventKind::Sample)));
+        // Once the sample fired, the same time may be scheduled again.
+        assert!(q.push_sample_dedup(100));
+        assert_eq!(q.len(), 2);
     }
 }

@@ -25,6 +25,11 @@ struct UserAccount {
     shares: f64,
     /// Usage in inflated units (see module docs).
     usage_scaled: f64,
+    /// Ledger generation the cached factor was computed at; stale when it
+    /// differs from [`FairShare::generation`].
+    factor_gen: u64,
+    /// Cached fair-share factor (valid while `factor_gen` matches).
+    factor: f64,
 }
 
 /// Fair-share ledger for all users.
@@ -36,6 +41,12 @@ pub struct FairShare {
     total_usage_scaled: f64,
     /// Exponent base subtracted from `t/half_life` to keep scales bounded.
     epoch: f64,
+    /// Bumped whenever any input to the factor formula changes (a charge,
+    /// a new account joining the share pool, a rebase). Cached per-user
+    /// factors are valid only for a matching generation, so the `2^x` in
+    /// [`FairShare::factor`] is paid once per user per ledger change rather
+    /// than once per candidate per scheduling pass.
+    generation: u64,
 }
 
 impl FairShare {
@@ -49,17 +60,24 @@ impl FairShare {
             total_shares: 0.0,
             total_usage_scaled: 0.0,
             epoch: 0.0,
+            generation: 1,
         }
     }
 
     /// Register a user with a share weight (idempotent).
     pub fn ensure_user(&mut self, user: u32, shares: f64) {
         let total_shares = &mut self.total_shares;
+        let generation = &mut self.generation;
         self.accounts.entry(user).or_insert_with(|| {
             *total_shares += shares;
+            // A new account changes total_shares, so every cached factor
+            // is stale.
+            *generation += 1;
             UserAccount {
                 shares,
                 usage_scaled: 0.0,
+                factor_gen: 0,
+                factor: 1.0,
             }
         });
     }
@@ -74,6 +92,9 @@ impl FairShare {
             }
             self.total_usage_scaled *= shift;
             self.epoch = now as f64 / self.half_life as f64;
+            // Fractions are preserved mathematically but not bit-for-bit;
+            // drop the caches so factors recompute from the rebased values.
+            self.generation += 1;
             return 1.0;
         }
         2f64.powf(exp)
@@ -85,21 +106,38 @@ impl FairShare {
         let scaled = core_seconds * self.scale(now);
         self.accounts.get_mut(&user).unwrap().usage_scaled += scaled;
         self.total_usage_scaled += scaled;
+        self.generation += 1;
     }
 
     /// Fair-share factor in (0, 1]: 1 = under-served, →0 = heavy user.
+    ///
+    /// Cached per user and invalidated by ledger changes (see
+    /// [`FairShare::generation`]): the scheduler evaluates factors for every
+    /// queued candidate on every pass, but the ledger only changes on
+    /// charges, so steady-state passes hit the cache.
     pub fn factor(&mut self, user: u32, _now: Time) -> f64 {
         self.ensure_user(user, 1.0);
-        let acct = &self.accounts[&user];
-        if self.total_usage_scaled <= 0.0 || self.total_shares <= 0.0 {
-            return 1.0;
+        let generation = self.generation;
+        let total_usage_scaled = self.total_usage_scaled;
+        let total_shares = self.total_shares;
+        let acct = self.accounts.get_mut(&user).unwrap();
+        if acct.factor_gen == generation {
+            return acct.factor;
         }
-        let usage_frac = acct.usage_scaled / self.total_usage_scaled;
-        let share_frac = acct.shares / self.total_shares;
-        if share_frac <= 0.0 {
-            return 0.0;
-        }
-        2f64.powf(-usage_frac / share_frac)
+        let f = if total_usage_scaled <= 0.0 || total_shares <= 0.0 {
+            1.0
+        } else {
+            let usage_frac = acct.usage_scaled / total_usage_scaled;
+            let share_frac = acct.shares / total_shares;
+            if share_frac <= 0.0 {
+                0.0
+            } else {
+                2f64.powf(-usage_frac / share_frac)
+            }
+        };
+        acct.factor_gen = generation;
+        acct.factor = f;
+        f
     }
 
     /// Absolute decayed usage (core-seconds as of `now`).
@@ -171,6 +209,26 @@ mod tests {
         let f1 = fs.factor(1, 10);
         let f2 = fs.factor(2, 10);
         assert!((f1 - f2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_cache_invalidates_on_ledger_change() {
+        let mut fs = FairShare::new(604_800);
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 1.0);
+        fs.charge(1, 1e6, 0);
+        let f1a = fs.factor(1, 0);
+        assert_eq!(f1a, fs.factor(1, 0), "repeat hit must be identical");
+        // A charge to *another* user changes totals ⇒ user 1's factor moves.
+        fs.charge(2, 1e6, 0);
+        let f1b = fs.factor(1, 0);
+        assert!(f1b > f1a, "f1a={f1a} f1b={f1b}");
+        // A new account joining the pool also invalidates: user 1's share
+        // fraction shrinks from 1/2 to 1/3, so its factor must drop.
+        let before = fs.factor(1, 0);
+        fs.ensure_user(3, 1.0);
+        let after = fs.factor(1, 0);
+        assert!(after < before, "before={before} after={after}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod metrics;
 pub mod config;
 
 pub use job::{Dependency, Job, JobId, JobSpec, JobState};
-pub use sim::{SimEvent, Simulator};
+pub use sim::{SchedEngine, SimEvent, Simulator};
 pub use trace::BackgroundWorkload;
 
 use crate::Cores;
@@ -94,6 +94,9 @@ impl SystemConfig {
         match name {
             "hpc2n" => Some(Self::hpc2n()),
             "uppmax" => Some(Self::uppmax()),
+            // Small quiet system so campaign-shaped experiments can run in
+            // unit tests without the production systems' simulation cost.
+            "testbed" => Some(Self::testbed(64, 28)),
             _ => None,
         }
     }

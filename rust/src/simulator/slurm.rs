@@ -68,18 +68,49 @@ pub struct PassResult {
     pub reservation: Option<(JobId, Time)>,
 }
 
-/// One scheduling pass over the eligible queue.
-///
-/// `candidates` need not be sorted; the pass orders them by priority.
-/// Started jobs are *not* applied to `cluster` by this function — the caller
-/// (the simulator) applies state transitions — except internally the pass
-/// tracks hypothetical free cores so its own decisions are consistent.
+/// Reusable buffers for [`schedule_pass_with`]. The simulator owns one so
+/// steady-state passes sort in place instead of allocating a fresh priority
+/// vector (and tentative-start list) on every event.
+#[derive(Debug, Default)]
+pub struct PassScratch {
+    /// Priority-ordered candidates of the current pass.
+    order: Vec<(f64, Candidate)>,
+    /// `(limit_end, cores)` of this pass's own tentative starts.
+    tent: Vec<(Time, Cores)>,
+}
+
+/// One scheduling pass over the eligible queue (fresh scratch per call;
+/// hot paths should hold a [`PassScratch`] and use [`schedule_pass_with`]).
 pub fn schedule_pass(
     cfg: &SchedConfig,
     cluster: &Cluster,
     fairshare: &mut FairShare,
     candidates: &[Candidate],
     now: Time,
+) -> PassResult {
+    schedule_pass_with(
+        cfg,
+        cluster,
+        fairshare,
+        candidates,
+        now,
+        &mut PassScratch::default(),
+    )
+}
+
+/// One scheduling pass over the eligible queue.
+///
+/// `candidates` need not be sorted; the pass orders them by priority.
+/// Started jobs are *not* applied to `cluster` by this function — the caller
+/// (the simulator) applies state transitions — except internally the pass
+/// tracks hypothetical free cores so its own decisions are consistent.
+pub fn schedule_pass_with(
+    cfg: &SchedConfig,
+    cluster: &Cluster,
+    fairshare: &mut FairShare,
+    candidates: &[Candidate],
+    now: Time,
+    scratch: &mut PassScratch,
 ) -> PassResult {
     let mut result = PassResult::default();
     if candidates.is_empty() {
@@ -99,13 +130,12 @@ pub fn schedule_pass(
     }
 
     // Priority ordering (desc), deterministic tie-break on submit order/id.
-    let mut order: Vec<(f64, Candidate)> = candidates
-        .iter()
-        .map(|c| {
-            let fsf = fairshare.factor(c.user, now);
-            (priority(cfg, fsf, c, now, total), *c)
-        })
-        .collect();
+    let order = &mut scratch.order;
+    order.clear();
+    order.extend(candidates.iter().map(|c| {
+        let fsf = fairshare.factor(c.user, now);
+        (priority(cfg, fsf, c, now, total), *c)
+    }));
     order.sort_unstable_by(|a, b| {
         b.0.partial_cmp(&a.0)
             .unwrap()
@@ -129,25 +159,37 @@ pub fn schedule_pass(
 
     // Head job blocked: compute its reservation against a hypothetical
     // cluster where the jobs we just started are also running until
-    // now + their limit.
+    // now + their limit. Live allocations arrive pre-sorted by
+    // `(limit_end, cores)` from the cluster's end-time index; only the
+    // pass's own tentative starts need sorting, and the merge stops as
+    // soon as enough cores have freed up.
     let head = order[i].1;
     let (shadow, extra) = {
-        // Merge current allocations with the pass's own tentative starts.
-        let mut events: Vec<(Time, Cores)> = cluster
-            .allocations_by_end()
-            .iter()
-            .map(|a| (a.limit_end, a.cores))
-            .collect();
-        for (_, c) in order[..i].iter() {
-            events.push((now + c.time_limit, c.cores));
-        }
-        events.sort_unstable();
+        let tent = &mut scratch.tent;
+        tent.clear();
+        tent.extend(order[..i].iter().map(|(_, c)| (now + c.time_limit, c.cores)));
+        tent.sort_unstable();
         let mut f = free;
         let mut found = None;
         if head.cores <= f {
             found = Some((now, f - head.cores));
         } else {
-            for (t, c) in events {
+            let mut live = cluster.ends_iter().peekable();
+            let mut tents = tent.iter().copied().peekable();
+            loop {
+                let next = match (live.peek(), tents.peek()) {
+                    (Some(&a), Some(&b)) => {
+                        if a <= b {
+                            live.next()
+                        } else {
+                            tents.next()
+                        }
+                    }
+                    (Some(_), None) => live.next(),
+                    (None, Some(_)) => tents.next(),
+                    (None, None) => None,
+                };
+                let Some((t, c)) = next else { break };
                 f += c;
                 if head.cores <= f {
                     found = Some((t, f - head.cores));

@@ -2,111 +2,163 @@
 //!
 //! Each `rust/benches/*.rs` target is a `harness = false` binary that calls
 //! [`Bench::new`] and times closures with warmup, repeated samples and
-//! mean/std/min reporting. Output is plain text plus an optional JSON file
-//! so EXPERIMENTS.md numbers are regenerable.
+//! mean/std/min reporting. Output is plain text plus JSON under
+//! `target/bench-results/`; groups that opt into `root_json` additionally
+//! write `BENCH_<group>.json` at the working directory (the repo root under
+//! cargo), giving successive PRs a machine-readable perf trajectory to
+//! diff. `ASA_BENCH_SAMPLES=<n>` overrides every case's sample count and
+//! disables the time budget — CI smoke runs use `1`.
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::Instant;
 
+struct CaseResult {
+    label: String,
+    summary: Summary,
+    /// Work items per iteration for throughput cases (items/sec reporting).
+    items: Option<u64>,
+}
+
 /// One benchmark group (usually one per bench binary).
 pub struct Bench {
     name: String,
-    results: Vec<(String, Summary)>,
+    results: Vec<CaseResult>,
     /// Minimum samples per case.
     pub samples: usize,
     /// Target wall budget per case, seconds.
     pub budget_secs: f64,
+    /// Also write `BENCH_<group>.json` at the working directory.
+    pub root_json: bool,
+    /// `ASA_BENCH_SAMPLES` override (wins over `samples`, kills the budget).
+    forced_samples: Option<usize>,
 }
 
 impl Bench {
     pub fn new(name: &str) -> Self {
         println!("== bench group: {name} ==");
+        let forced_samples = std::env::var("ASA_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .map(|n| n.max(1));
         Bench {
             name: name.to_string(),
             results: Vec::new(),
             samples: 10,
             budget_secs: 2.0,
+            root_json: false,
+            forced_samples,
         }
     }
 
-    /// Time `f`, which should perform one complete unit of work and return a
-    /// value that is consumed via `std::hint::black_box` to defeat DCE.
-    pub fn case<T>(&mut self, label: &str, mut f: impl FnMut() -> T) {
+    fn run_case<T>(&mut self, label: &str, items: Option<u64>, f: &mut dyn FnMut() -> T) {
         // Warmup run (also primes caches / lazy statics).
         std::hint::black_box(f());
+        self.run_case_prewarmed(label, items, f);
+    }
+
+    fn run_case_prewarmed<T>(&mut self, label: &str, items: Option<u64>, f: &mut dyn FnMut() -> T) {
+        let samples = self.forced_samples.unwrap_or(self.samples);
+        let budget = if self.forced_samples.is_some() {
+            0.0
+        } else {
+            self.budget_secs
+        };
         let mut s = Summary::new();
         let started = Instant::now();
-        while s.count() < self.samples as u64
-            || (started.elapsed().as_secs_f64() < self.budget_secs
-                && s.count() < 10 * self.samples as u64)
+        while s.count() < samples as u64
+            || (started.elapsed().as_secs_f64() < budget && s.count() < 10 * samples as u64)
         {
             let t0 = Instant::now();
             std::hint::black_box(f());
             s.add(t0.elapsed().as_secs_f64() * 1e3); // ms
         }
-        println!(
-            "  {label:<44} {:>10.3} ms/iter  (±{:.3}, min {:.3}, n={})",
-            s.mean(),
-            s.std(),
-            s.min(),
-            s.count()
-        );
-        self.results.push((label.to_string(), s));
+        match items {
+            Some(n) => {
+                let per_sec = n as f64 / (s.mean() / 1e3);
+                println!(
+                    "  {label:<44} {:>10.3} ms/iter  ({per_sec:.0} items/s, n={})",
+                    s.mean(),
+                    s.count()
+                );
+            }
+            None => println!(
+                "  {label:<44} {:>10.3} ms/iter  (±{:.3}, min {:.3}, n={})",
+                s.mean(),
+                s.std(),
+                s.min(),
+                s.count()
+            ),
+        }
+        self.results.push(CaseResult {
+            label: label.to_string(),
+            summary: s,
+            items,
+        });
+    }
+
+    /// Time `f`, which should perform one complete unit of work and return a
+    /// value that is consumed via `std::hint::black_box` to defeat DCE.
+    pub fn case<T>(&mut self, label: &str, mut f: impl FnMut() -> T) {
+        self.run_case(label, None, &mut f);
     }
 
     /// Throughput helper: report both ms/iter and items/sec.
     pub fn case_throughput<T>(&mut self, label: &str, items: u64, mut f: impl FnMut() -> T) {
-        std::hint::black_box(f());
-        let mut s = Summary::new();
-        let started = Instant::now();
-        while s.count() < self.samples as u64
-            || (started.elapsed().as_secs_f64() < self.budget_secs
-                && s.count() < 10 * self.samples as u64)
-        {
-            let t0 = Instant::now();
-            std::hint::black_box(f());
-            s.add(t0.elapsed().as_secs_f64() * 1e3);
-        }
-        let per_sec = items as f64 / (s.mean() / 1e3);
-        println!(
-            "  {label:<44} {:>10.3} ms/iter  ({:.0} items/s, n={})",
-            s.mean(),
-            per_sec,
-            s.count()
-        );
-        self.results.push((label.to_string(), s));
+        self.run_case(label, Some(items), &mut f);
+    }
+
+    /// Throughput helper for cases whose item count comes out of the work
+    /// itself (e.g. events processed by a simulation): the warmup run's
+    /// return value sets the count, so no extra counting run is needed.
+    pub fn case_throughput_of(&mut self, label: &str, mut f: impl FnMut() -> u64) {
+        let items = std::hint::black_box(f());
+        self.run_case_prewarmed(label, Some(items), &mut f);
     }
 
     /// Mean of a recorded case in ms, if present (for assertions in tests).
     pub fn mean_ms(&self, label: &str) -> Option<f64> {
         self.results
             .iter()
-            .find(|(l, _)| l == label)
-            .map(|(_, s)| s.mean())
+            .find(|r| r.label == label)
+            .map(|r| r.summary.mean())
     }
 
-    /// Write results as JSON under `target/bench-results/<group>.json`.
-    pub fn finish(self) {
+    fn to_json(&self) -> Json {
         let mut arr = Vec::new();
-        for (label, s) in &self.results {
-            arr.push(
-                Json::obj()
-                    .with("label", label.as_str())
-                    .with("mean_ms", s.mean())
-                    .with("std_ms", s.std())
-                    .with("min_ms", s.min())
-                    .with("samples", s.count() as i64),
-            );
+        for r in &self.results {
+            let s = &r.summary;
+            let mut obj = Json::obj()
+                .with("label", r.label.as_str())
+                .with("mean_ms", s.mean())
+                .with("std_ms", s.std())
+                .with("min_ms", s.min())
+                .with("samples", s.count() as i64);
+            if let Some(n) = r.items {
+                obj.set("items", n as i64);
+                obj.set("items_per_sec", n as f64 / (s.mean() / 1e3));
+            }
+            arr.push(obj);
         }
-        let doc = Json::obj()
+        Json::obj()
             .with("group", self.name.as_str())
-            .with("results", Json::Arr(arr));
+            .with("results", Json::Arr(arr))
+    }
+
+    /// Write results as JSON under `target/bench-results/<group>.json` (and
+    /// `BENCH_<group>.json` at the working directory when `root_json`).
+    pub fn finish(self) {
+        let doc = self.to_json();
         let dir = std::path::Path::new("target/bench-results");
         if std::fs::create_dir_all(dir).is_ok() {
             let path = dir.join(format!("{}.json", self.name.replace(' ', "_")));
             let _ = std::fs::write(&path, doc.pretty());
             println!("  -> wrote {}", path.display());
+        }
+        if self.root_json {
+            let path = format!("BENCH_{}.json", self.name.replace(' ', "_"));
+            let _ = std::fs::write(&path, doc.pretty());
+            println!("  -> wrote {path}");
         }
     }
 }
@@ -137,5 +189,35 @@ mod tests {
         b.budget_secs = 0.01;
         b.case_throughput("tp", 100, || 42u32);
         assert!(b.mean_ms("tp").is_some());
+    }
+
+    #[test]
+    fn throughput_of_takes_items_from_warmup() {
+        let mut b = Bench::new("unit-test-group4");
+        b.samples = 1;
+        b.budget_secs = 0.0;
+        let mut calls = 0u64;
+        b.case_throughput_of("counted", || {
+            calls += 1;
+            123
+        });
+        // Warmup (which sets items) + one sample: exactly two runs.
+        assert_eq!(calls, 2);
+        let doc = b.to_json();
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("items").unwrap().as_i64(), Some(123));
+    }
+
+    #[test]
+    fn json_includes_throughput_fields() {
+        let mut b = Bench::new("unit-test-group3");
+        b.samples = 1;
+        b.budget_secs = 0.0;
+        b.case_throughput("tp", 250, || 1u8);
+        b.case("plain", || 2u8);
+        let rendered = b.to_json().to_string();
+        assert!(rendered.contains("items_per_sec"));
+        assert!(rendered.contains("mean_ms"));
+        assert!(rendered.contains("unit-test-group3"));
     }
 }

@@ -1,0 +1,144 @@
+//! Zero-dependency data parallelism: a deterministic `par_map` over
+//! `std::thread::scope`.
+//!
+//! The experiments are embarrassingly parallel across (system, scale)
+//! cells, solo baselines, sampling policies and seeds, but the crate is
+//! fully offline (no rayon). [`par_map`] spreads a work list over OS
+//! threads and returns results in **input order**, so a parallel campaign
+//! is bit-identical to its serial path: every unit owns its RNGs and
+//! simulator, nothing is shared, and placement never depends on thread
+//! scheduling (only wall-time does). Worker panics propagate to the caller
+//! through `std::thread::scope`'s join semantics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+enum Slot<T, R> {
+    Todo(T),
+    Taken,
+    Done(R),
+}
+
+/// Worker-thread count: `ASA_THREADS` override (≥1), else the machine's
+/// available parallelism. `ASA_THREADS=1` forces the serial path, which is
+/// occasionally useful for profiling or timing comparisons.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ASA_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to [`default_threads`] workers; results come
+/// back in input order regardless of completion order.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_threads(default_threads(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count (1 ⇒ plain serial map).
+pub fn par_map_threads<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 || threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let threads = threads.min(n);
+    // Work stealing by atomic cursor: each slot is claimed exactly once,
+    // computed, and written back under its own lock (contention is one
+    // lock round-trip per item, negligible next to simulation work).
+    let slots: Vec<Mutex<Slot<T, R>>> = items
+        .into_iter()
+        .map(|t| Mutex::new(Slot::Todo(t)))
+        .collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = match std::mem::replace(&mut *slots[i].lock().unwrap(), Slot::Taken)
+                {
+                    Slot::Todo(t) => t,
+                    _ => unreachable!("slot {i} claimed twice"),
+                };
+                let out = f(item);
+                *slots[i].lock().unwrap() = Slot::Done(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            match m.into_inner().expect("worker panics propagate via scope") {
+                Slot::Done(r) => r,
+                _ => unreachable!("scope joined with an unfinished slot"),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let out = par_map((0..200).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..200).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn matches_serial_map() {
+        let items: Vec<u64> = (0..57).map(|i| i * 31 + 7).collect();
+        let f = |x: u64| x.wrapping_mul(0x9e37_79b9_7f4a_7c15).rotate_left(17);
+        let serial: Vec<u64> = items.iter().map(|&x| f(x)).collect();
+        assert_eq!(par_map(items.clone(), f), serial);
+        assert_eq!(par_map_threads(1, items.clone(), f), serial);
+        assert_eq!(par_map_threads(3, items, f), serial);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(empty, |x: u32| x).is_empty());
+        assert_eq!(par_map(vec![41u32], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn borrows_from_caller_scope() {
+        // Scoped threads: the closure may borrow non-'static data.
+        let base = vec![10i64, 20, 30];
+        let out = par_map_threads(2, vec![0usize, 1, 2], |i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn oversubscribed_thread_count_is_clamped() {
+        let out = par_map_threads(64, (0..5i64).collect(), |x| x - 1);
+        assert_eq!(out, vec![-1, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let _ = par_map_threads(2, vec![1u32, 2, 3, 4], |x| {
+            assert!(x != 3, "boom");
+            x
+        });
+    }
+}

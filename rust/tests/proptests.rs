@@ -9,8 +9,12 @@ use asa::coordinator::policy::Policy;
 use asa::coordinator::pool::ResourcePool;
 use asa::experiments::campaign::Strategy;
 use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
-use asa::simulator::{JobId, JobSpec, SimEvent, Simulator, SystemConfig};
+use asa::simulator::{
+    Dependency, JobId, JobSpec, SchedEngine, SimEvent, Simulator, SystemConfig,
+};
+use asa::util::par::par_map;
 use asa::util::propcheck::check;
+use asa::Time;
 
 #[test]
 fn prop_update_preserves_distribution() {
@@ -139,6 +143,237 @@ fn prop_simulator_conservation() {
             assert!(job.core_seconds() >= 0);
         }
         assert_eq!(sim.cluster().free_cores(), total, "cores leaked");
+    });
+}
+
+/// A scripted action applied identically to both scheduling engines.
+#[derive(Clone, Debug)]
+enum OracleAction {
+    /// Advance both simulators to an absolute time.
+    RunUntil(Time),
+    /// Submit now; the dependency (if any) references an earlier
+    /// submission by script index.
+    Submit {
+        user: u32,
+        cores: u32,
+        runtime: Time,
+        limit: Time,
+        dep: Option<ScriptDep>,
+    },
+    /// Submit at a future absolute time (offset applied when executed).
+    SubmitAt {
+        delay: Time,
+        user: u32,
+        cores: u32,
+        runtime: Time,
+    },
+    /// Cancel the job created by script submission `idx` (whatever state
+    /// it is in — pending, held, running or already terminal).
+    Cancel(usize),
+}
+
+#[derive(Clone, Debug)]
+enum ScriptDep {
+    AfterOk(Vec<usize>),
+    BeginDelay(Time),
+}
+
+fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimEvent> {
+    let mut ids: Vec<JobId> = Vec::new();
+    let mut events: Vec<SimEvent> = Vec::new();
+    for action in script {
+        match action {
+            OracleAction::RunUntil(t) => {
+                sim.run_until(*t);
+                events.extend(sim.drain_events());
+            }
+            OracleAction::Submit {
+                user,
+                cores,
+                runtime,
+                limit,
+                dep,
+            } => {
+                let mut spec =
+                    JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
+                        .with_limit(*limit);
+                match dep {
+                    Some(ScriptDep::AfterOk(parents)) => {
+                        spec = spec.with_dependency(Dependency::AfterOk(
+                            parents.iter().map(|&i| ids[i]).collect(),
+                        ));
+                    }
+                    Some(ScriptDep::BeginDelay(d)) => {
+                        spec = spec.with_dependency(Dependency::BeginAt(sim.now() + d));
+                    }
+                    None => {}
+                }
+                ids.push(sim.submit(spec));
+            }
+            OracleAction::SubmitAt {
+                delay,
+                user,
+                cores,
+                runtime,
+            } => {
+                let spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime);
+                ids.push(sim.submit_at(sim.now() + delay, spec));
+            }
+            OracleAction::Cancel(idx) => {
+                sim.cancel(ids[*idx]);
+                events.extend(sim.drain_events());
+            }
+        }
+    }
+    // Drain to quiescence (no background trace: the heap empties).
+    while let Some(ev) = sim.step() {
+        events.push(ev);
+    }
+    events
+}
+
+#[test]
+fn prop_incremental_engine_matches_naive_oracle() {
+    // The tentpole equivalence property: for any workload script (random
+    // dependencies, --begin constraints, future submissions, cancels at
+    // arbitrary moments), the incremental scheduling core must emit the
+    // exact observable event sequence and job metrics of the preserved
+    // naive pass-rebuild oracle. (`metrics.passes` is internal and exempt:
+    // the naive engine double-fires same-time Sample passes.)
+    check("incremental engine == naive oracle", 60, |g| {
+        let nodes = g.u32(2, 10);
+        let cpn = g.u32(1, 8);
+        let total = nodes * cpn;
+        let n_actions = g.usize(3, 40);
+        let mut script: Vec<OracleAction> = Vec::new();
+        let mut t: Time = 0;
+        let mut n_submitted = 0usize;
+        for _ in 0..n_actions {
+            match g.usize(0, 9) {
+                0 | 1 | 2 | 3 => {
+                    let dep = if n_submitted == 0 {
+                        None
+                    } else {
+                        match g.usize(0, 5) {
+                            0 | 1 => {
+                                let k = g.usize(1, 3usize.min(n_submitted));
+                                let parents: Vec<usize> =
+                                    (0..k).map(|_| g.usize(0, n_submitted - 1)).collect();
+                                Some(ScriptDep::AfterOk(parents))
+                            }
+                            2 => Some(ScriptDep::BeginDelay(g.i64(0, 800))),
+                            _ => None,
+                        }
+                    };
+                    let runtime = g.i64(1, 600);
+                    // Limits may undershoot the runtime: exercises timeouts
+                    // and the resulting dependency-cancellation cascades.
+                    let limit = (runtime + g.i64(-300, 400)).max(1);
+                    script.push(OracleAction::Submit {
+                        user: g.u32(1, 6),
+                        cores: g.u32(1, total),
+                        runtime,
+                        limit,
+                        dep,
+                    });
+                    n_submitted += 1;
+                }
+                4 => {
+                    script.push(OracleAction::SubmitAt {
+                        delay: g.i64(1, 500),
+                        user: g.u32(1, 6),
+                        cores: g.u32(1, total),
+                        runtime: g.i64(1, 600),
+                    });
+                    n_submitted += 1;
+                }
+                5 if n_submitted > 0 => {
+                    script.push(OracleAction::Cancel(g.usize(0, n_submitted - 1)));
+                }
+                _ => {
+                    t += g.i64(1, 400);
+                    script.push(OracleAction::RunUntil(t));
+                }
+            }
+        }
+        let run = |engine: SchedEngine| {
+            let mut sim =
+                Simulator::new_empty_with_engine(SystemConfig::testbed(nodes, cpn), engine);
+            let events = apply_oracle_script(&mut sim, &script);
+            let m = &sim.metrics;
+            (
+                events,
+                m.started,
+                m.completed,
+                m.cancelled,
+                m.timed_out,
+                m.fg_wait.count(),
+                m.fg_wait.mean().to_bits(),
+                m.mean_utilization(sim.now().max(1)).to_bits(),
+                sim.queue_depth(),
+                sim.cluster().free_cores(),
+            )
+        };
+        let inc = run(SchedEngine::Incremental);
+        let naive = run(SchedEngine::Naive);
+        assert_eq!(inc, naive, "script: {script:?}");
+    });
+}
+
+#[test]
+fn prop_incremental_engine_matches_oracle_under_background_trace() {
+    // Same equivalence with a live background workload: trace arrivals,
+    // prefill backlog and foreground probes must interleave identically.
+    check("incremental == naive with background trace", 6, |g| {
+        let seed = g.rng().next_u64();
+        let horizon = 4 * 3600 + g.i64(0, 4 * 3600);
+        let run = |engine: SchedEngine| {
+            let mut sim = Simulator::new_with_engine(
+                SystemConfig::testbed(16, 4),
+                seed,
+                engine,
+            );
+            let probe = sim.submit(JobSpec::new(1, "probe", 8, 120));
+            sim.run_until(horizon);
+            let events = sim.drain_events();
+            let m = &sim.metrics;
+            (
+                events,
+                sim.job(probe).state,
+                m.started,
+                m.completed,
+                m.cancelled,
+                m.timed_out,
+                m.bg_wait.count(),
+                m.bg_wait.mean().to_bits(),
+                m.mean_utilization(sim.now().max(1)).to_bits(),
+                sim.queue_depth(),
+            )
+        };
+        assert_eq!(run(SchedEngine::Incremental), run(SchedEngine::Naive));
+    });
+}
+
+#[test]
+fn prop_par_map_campaign_units_match_serial() {
+    // Determinism of the parallel experiment harness: mapping simulator
+    // sessions over worker threads returns exactly the serial results.
+    check("par_map == serial over sim sessions", 5, |g| {
+        let n = g.usize(1, 6);
+        let seeds: Vec<u64> = (0..n).map(|_| g.rng().next_u64()).collect();
+        let unit = |seed: u64| -> (u64, u64, u64, u64) {
+            let mut sim = Simulator::new(SystemConfig::testbed(16, 4), seed);
+            sim.run_until(6 * 3600);
+            (
+                sim.metrics.started,
+                sim.metrics.completed,
+                sim.metrics.bg_wait.count(),
+                sim.metrics.mean_utilization(sim.now()).to_bits(),
+            )
+        };
+        let serial: Vec<_> = seeds.iter().map(|&s| unit(s)).collect();
+        let parallel = par_map(seeds, unit);
+        assert_eq!(serial, parallel);
     });
 }
 
