@@ -1,0 +1,145 @@
+//! Macro benchmarks: month-scale, memory-bounded simulation throughput.
+//!
+//! Where `perf_micro` times isolated hot paths, this group runs the
+//! long-horizon scenarios the arena-retirement work exists for: a 30-day
+//! background trace at 1× and (admission-capped) 4× load, and a
+//! month-horizon multi-tenant campaign soak with driver-level job
+//! retirement. Each case reports events/sec; the `meta` block records the
+//! peak live-job counts and state-bytes estimates that make
+//! memory-boundedness observable rather than asserted.
+//!
+//! Writes `BENCH_perf_macro.json` at the repo root so successive PRs can
+//! diff the trajectory (`asa bench-diff`). `ASA_PERF_MACRO_DAYS` overrides
+//! the horizon (CI smoke uses 3); labels are horizon-independent so
+//! items/sec stays comparable across overrides.
+
+use asa::experiments::campaign::Strategy;
+use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
+use asa::simulator::{Simulator, SystemConfig};
+use asa::util::bench::Bench;
+use asa::Time;
+
+fn horizon_days() -> i64 {
+    std::env::var("ASA_PERF_MACRO_DAYS")
+        .ok()
+        .and_then(|s| s.trim().parse::<i64>().ok())
+        .filter(|&d| d > 0)
+        .unwrap_or(30)
+}
+
+struct TraceStats {
+    events: u64,
+    live_jobs_peak: u64,
+    registered: u64,
+    rejected: u64,
+    memory_bytes: usize,
+}
+
+fn background_trace(cfg: &SystemConfig, horizon: Time) -> TraceStats {
+    let mut sim = Simulator::new(cfg.clone(), 42);
+    sim.run_until(horizon);
+    TraceStats {
+        events: sim.metrics.events,
+        live_jobs_peak: sim.metrics.live_jobs_peak,
+        registered: sim.jobs_registered(),
+        rejected: sim.metrics.rejected,
+        memory_bytes: sim.memory_bytes_estimate(),
+    }
+}
+
+/// 4× offered load with a Slurm-style MaxJobCount admission cap: the queue
+/// (and with it the live-job set and per-pass cost) stays bounded even
+/// though the machine can never drain the offered work.
+fn overloaded(mut cfg: SystemConfig) -> SystemConfig {
+    cfg.workload.target_load *= 4.0;
+    cfg.workload.max_queued_jobs = 2_000;
+    cfg
+}
+
+fn month_campaign(horizon: Time) -> ConcurrentOpts {
+    ConcurrentOpts {
+        tenants: 6,
+        per_tenant: 4,
+        mean_gap: 600, // overridden by horizon
+        scale: 112,
+        strategy: TenantStrategy::Uniform(Strategy::Asa),
+        seed: 42,
+        settle: 0,
+        baseline: false,
+        horizon,
+        retire: true,
+    }
+}
+
+fn main() {
+    let days = horizon_days();
+    let horizon: Time = days * 24 * 3600;
+    let mut b = Bench::new("perf_macro");
+    b.root_json = true;
+    b.samples = 2;
+    b.budget_secs = 0.0;
+    b.meta("horizon_days", days);
+
+    // 1) Month of background churn at nominal load (items = engine events).
+    // Gauges come from the warmup invocation — the sims are seeded, so
+    // every iteration reproduces the same counts; no extra gauge-only run.
+    let hpc2n = SystemConfig::hpc2n();
+    let mut gauges: Option<TraceStats> = None;
+    b.case_throughput_of("sim: hpc2n background 1x (macro horizon)", || {
+        let s = background_trace(&hpc2n, horizon);
+        let events = s.events;
+        gauges.get_or_insert(s);
+        events
+    });
+    let s = gauges.take().expect("warmup ran");
+    b.meta("hpc2n_1x_live_jobs_peak", s.live_jobs_peak as i64);
+    b.meta("hpc2n_1x_jobs_registered", s.registered as i64);
+    b.meta("hpc2n_1x_memory_bytes", s.memory_bytes);
+
+    let uppmax = SystemConfig::uppmax();
+    let mut gauges: Option<TraceStats> = None;
+    b.case_throughput_of("sim: uppmax background 1x (macro horizon)", || {
+        let s = background_trace(&uppmax, horizon);
+        let events = s.events;
+        gauges.get_or_insert(s);
+        events
+    });
+    let s = gauges.take().expect("warmup ran");
+    b.meta("uppmax_1x_live_jobs_peak", s.live_jobs_peak as i64);
+    b.meta("uppmax_1x_jobs_registered", s.registered as i64);
+    b.meta("uppmax_1x_memory_bytes", s.memory_bytes);
+
+    // 2) 4× overload with admission cap: live jobs must stay bounded by
+    // cap + machine occupancy, not by total submissions.
+    let hot = overloaded(SystemConfig::hpc2n());
+    let mut gauges: Option<TraceStats> = None;
+    b.case_throughput_of("sim: hpc2n background 4x capped (macro horizon)", || {
+        let s = background_trace(&hot, horizon);
+        let events = s.events;
+        gauges.get_or_insert(s);
+        events
+    });
+    let s = gauges.take().expect("warmup ran");
+    assert!(s.rejected > 0, "4x load must exercise the admission cap");
+    b.meta("hpc2n_4x_live_jobs_peak", s.live_jobs_peak as i64);
+    b.meta("hpc2n_4x_jobs_registered", s.registered as i64);
+    b.meta("hpc2n_4x_rejected", s.rejected as i64);
+    b.meta("hpc2n_4x_memory_bytes", s.memory_bytes);
+
+    // 3) Month-horizon multi-tenant campaign: 24 ASA workflows spread over
+    // the window on the live hpc2n queue, completed workflows retired.
+    let opts = month_campaign(horizon);
+    let mut report = None;
+    b.case_throughput_of("campaign: month-horizon concurrent soak", || {
+        let r = run_concurrent(&hpc2n, &opts);
+        let events = r.sim_events;
+        report.get_or_insert(r);
+        events
+    });
+    let report = report.take().expect("warmup ran");
+    b.meta("campaign_live_jobs_peak", report.live_jobs_peak as i64);
+    b.meta("campaign_jobs_registered", report.total_registered as i64);
+    b.meta("campaign_memory_bytes", report.memory_bytes);
+
+    b.finish();
+}

@@ -26,10 +26,10 @@ use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use crate::coordinator::state::AsaStore;
 use crate::coordinator::strategy::AsaRunStats;
 use crate::simulator::{JobId, SimEvent, Simulator};
+use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 use crate::workflow::spec::WorkflowRun;
 use crate::Time;
-use std::collections::HashMap;
 
 /// What a driver reports back after handling a callback.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,25 +120,47 @@ struct Slot {
     driver: Box<dyn StrategyDriver>,
     begun: bool,
     done: bool,
+    /// Terminal jobs owned by this driver, retired in one sweep when the
+    /// driver completes (only collected when `retire_owned` is on).
+    finished_jobs: Vec<JobId>,
 }
 
 /// Multiplexes one simulator's observable event stream across N
 /// concurrently running drivers, keyed by job ownership.
+///
+/// Ownership entries are dropped as soon as a job's terminal event has
+/// been routed — an id can produce no further events — so the routing map
+/// tracks only in-flight jobs no matter how long the session runs. With
+/// [`Orchestrator::set_retire_owned`], each driver's jobs are additionally
+/// retired from the simulator arena once that driver completes, keeping
+/// month-scale multi-tenant campaigns at constant memory.
 #[derive(Default)]
 pub struct Orchestrator {
     slots: Vec<Slot>,
-    /// JobId → owning driver index.
-    owner: HashMap<JobId, usize>,
+    /// JobId → owning driver index (in-flight jobs only).
+    owner: FxHashMap<JobId, usize>,
     /// Wake tag → driver index awaiting it.
-    wake_owner: HashMap<u64, usize>,
+    wake_owner: FxHashMap<u64, usize>,
     next_tag: u64,
     /// Drivers spawned but not yet `Done` (including deferred ones).
     active: usize,
+    /// Retire each driver's jobs from the simulator arena when the driver
+    /// completes. Off by default: callers that inspect `sim.job(id)` after
+    /// a run (tests, accuracy probes) need terminal jobs addressable.
+    retire_owned: bool,
 }
 
 impl Orchestrator {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Enable arena retirement of a driver's jobs at driver completion
+    /// (long-horizon sessions; see struct docs). A driver's jobs stay
+    /// addressable for its own whole lifetime — cross-stage `AfterOk`
+    /// references within one workflow remain valid.
+    pub fn set_retire_owned(&mut self, on: bool) {
+        self.retire_owned = on;
     }
 
     /// Spawn a driver immediately: `begin` runs before this returns.
@@ -174,6 +196,7 @@ impl Orchestrator {
             driver,
             begun: false,
             done: false,
+            finished_jobs: Vec::new(),
         });
         self.active += 1;
         idx
@@ -200,7 +223,10 @@ impl Orchestrator {
 
     /// Route one observable event to its owning driver (events for jobs no
     /// driver claimed are dropped, exactly like the blocking loops ignored
-    /// foreign events).
+    /// foreign events). Terminal events release the job's routing entry —
+    /// the id can produce no further events — and, under
+    /// [`Orchestrator::set_retire_owned`], queue the job for arena
+    /// retirement when its driver completes.
     pub fn dispatch(&mut self, sim: &mut Simulator, ctx: &mut DriverCtx, ev: SimEvent) {
         match ev {
             SimEvent::Wake { tag, .. } => {
@@ -209,9 +235,24 @@ impl Orchestrator {
                 }
             }
             ev => {
-                if let Some(idx) = ev.id().and_then(|id| self.owner.get(&id).copied()) {
-                    self.deliver(sim, ctx, idx, Some(ev));
+                let Some(id) = ev.id() else { return };
+                let owner_idx = if ev.is_terminal() {
+                    self.owner.remove(&id)
+                } else {
+                    self.owner.get(&id).copied()
+                };
+                let Some(idx) = owner_idx else { return };
+                if ev.is_terminal() && self.retire_owned {
+                    if self.slots[idx].done {
+                        // Straggler terminal event after the driver
+                        // finished (e.g. a cancel it issued on its way
+                        // out): retire immediately.
+                        sim.retire(id);
+                    } else {
+                        self.slots[idx].finished_jobs.push(id);
+                    }
                 }
+                self.deliver(sim, ctx, idx, Some(ev));
             }
         }
     }
@@ -253,6 +294,13 @@ impl Orchestrator {
         if status == DriverStatus::Done {
             self.slots[idx].done = true;
             self.active -= 1;
+            if self.retire_owned {
+                // The driver is finished: nothing will reference its jobs
+                // again, so their arena slots can recycle.
+                for id in std::mem::take(&mut self.slots[idx].finished_jobs) {
+                    sim.retire(id);
+                }
+            }
         }
     }
 
@@ -497,6 +545,29 @@ mod tests {
         orch.spawn(&mut sim, &mut ctx, Box::new(driver));
         orch.run(&mut sim, &mut ctx);
         assert_eq!(wakes.get(), 1);
+    }
+
+    #[test]
+    fn retire_owned_releases_arena_slots_after_driver_completion() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(4, 4));
+        let (mut store, mut kernel, mut rng) = test_ctx_parts();
+        let mut ctx = DriverCtx {
+            store: &mut store,
+            kernel: &mut kernel,
+            rng: &mut rng,
+        };
+        let mut orch = Orchestrator::new();
+        orch.set_retire_owned(true);
+        let a = orch.spawn(&mut sim, &mut ctx, Box::new(ToyDriver::new(1, 100)));
+        let b = orch.spawn(&mut sim, &mut ctx, Box::new(ToyDriver::new(2, 50)));
+        // A late third driver reuses the arena slots the first two free.
+        let c = orch.spawn_at(&mut sim, 500, Box::new(ToyDriver::new(3, 10)));
+        orch.run(&mut sim, &mut ctx);
+        assert_eq!(sim.live_jobs(), 0, "every workflow job retired");
+        assert!(sim.jobs_recycled() >= 1, "late driver reused a slot");
+        assert_eq!(orch.outcome(a).unwrap().run.makespan(), 100);
+        assert_eq!(orch.outcome(b).unwrap().run.makespan(), 50);
+        assert_eq!(orch.outcome(c).unwrap().run.submitted_at, 500);
     }
 
     #[test]

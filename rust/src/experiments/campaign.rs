@@ -96,6 +96,9 @@ impl Strategy {
 pub struct Cell {
     pub run: WorkflowRun,
     pub asa_stats: Option<AsaRunStats>,
+    /// Peak live jobs in the session's arena that produced this cell
+    /// (memory-boundedness gauge, surfaced by the usage experiment).
+    pub live_jobs_peak: u64,
 }
 
 /// Settling time before the first submission in a session: lets the
@@ -125,10 +128,12 @@ pub fn run_session(
             Strategy::BigJob => Cell {
                 run: wms::run_big_job(&mut sim, user, &wf, scale),
                 asa_stats: None,
+                live_jobs_peak: 0,
             },
             Strategy::PerStage => Cell {
                 run: wms::run_per_stage(&mut sim, user, &wf, scale),
                 asa_stats: None,
+                live_jobs_peak: 0,
             },
             Strategy::Asa | Strategy::AsaNaive => {
                 let opts = AsaRunOpts {
@@ -139,12 +144,18 @@ pub fn run_session(
                 Cell {
                     run,
                     asa_stats: Some(stats),
+                    live_jobs_peak: 0,
                 }
             }
         };
         let resume_at = sim.now() + GAP;
         sim.run_until(resume_at);
         cells.push(cell);
+    }
+    // Stamp the session's memory gauge on every cell it produced.
+    let peak = sim.metrics.live_jobs_peak;
+    for c in &mut cells {
+        c.live_jobs_peak = peak;
     }
     cells
 }

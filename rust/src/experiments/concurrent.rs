@@ -79,6 +79,15 @@ pub struct ConcurrentOpts {
     /// Also run each (workflow, strategy) solo under the identical seed to
     /// report the contention slowdown.
     pub baseline: bool,
+    /// Month-scale soak mode: when > 0, each tenant's arrivals are spread
+    /// over this many seconds (`mean_gap` is overridden with
+    /// `horizon / per_tenant`), so the session exercises a long-lived
+    /// queue instead of one burst.
+    pub horizon: Time,
+    /// Retire each driver's jobs from the simulator arena when the driver
+    /// completes (see `Orchestrator::set_retire_owned`) — what keeps the
+    /// horizon soak at constant memory.
+    pub retire: bool,
 }
 
 impl Default for ConcurrentOpts {
@@ -92,6 +101,8 @@ impl Default for ConcurrentOpts {
             seed: 42,
             settle: 6 * 3600,
             baseline: true,
+            horizon: 0,
+            retire: false,
         }
     }
 }
@@ -117,6 +128,16 @@ pub struct ConcurrentReport {
     /// Peak number of workflows simultaneously in flight.
     pub max_in_flight: usize,
     pub tenants: u32,
+    /// Peak jobs simultaneously live in the session's arena (bounded and
+    /// independent of horizon length when retirement is on).
+    pub live_jobs_peak: u64,
+    /// Total jobs registered over the session (background + workflows).
+    pub total_registered: u64,
+    /// Internal simulator events processed (events/sec numerator for the
+    /// perf_macro bench).
+    pub sim_events: u64,
+    /// Approximate final heap footprint of the simulation state.
+    pub memory_bytes: usize,
 }
 
 /// Peak overlap of `[arrival, finished_at)` intervals. Finishes are
@@ -187,13 +208,20 @@ pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> Concurren
     let mut arrivals = Rng::new(opts.seed ^ 0xa771);
 
     let mut orch = Orchestrator::new();
+    orch.set_retire_owned(opts.retire);
+    // Horizon soak: spread each tenant's submissions across the window.
+    let gap_mean = if opts.horizon > 0 {
+        (opts.horizon / opts.per_tenant.max(1) as Time).max(1)
+    } else {
+        opts.mean_gap.max(1)
+    };
     let mut plan: Vec<(DriverId, u32, u32, Time, Strategy, &'static str)> = Vec::new();
     for tenant in 0..opts.tenants {
         let user = 100 + tenant;
         let strategy = opts.strategy.for_tenant(tenant);
         let mut at = sim.now();
         for k in 0..opts.per_tenant {
-            let gap = arrivals.exponential(1.0 / opts.mean_gap.max(1) as f64);
+            let gap = arrivals.exponential(1.0 / gap_mean as f64);
             at += gap.ceil() as Time;
             let wf_name = WF_ROTATION[(tenant + k) as usize % WF_ROTATION.len()];
             let wf = apps::by_name(wf_name).expect("rotation workflow exists");
@@ -257,6 +285,10 @@ pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> Concurren
         cells,
         max_in_flight,
         tenants: opts.tenants,
+        live_jobs_peak: sim.metrics.live_jobs_peak,
+        total_registered: sim.jobs_registered(),
+        sim_events: sim.metrics.events,
+        memory_bytes: sim.memory_bytes_estimate(),
     }
 }
 
@@ -350,6 +382,10 @@ pub fn to_json(report: &ConcurrentReport) -> Json {
     Json::obj()
         .with("tenants", report.tenants)
         .with("max_in_flight", report.max_in_flight)
+        .with("live_jobs_peak", report.live_jobs_peak as i64)
+        .with("total_registered", report.total_registered as i64)
+        .with("sim_events", report.sim_events as i64)
+        .with("memory_bytes", report.memory_bytes as i64)
         .with("cells", Json::Arr(arr))
 }
 
@@ -374,6 +410,8 @@ mod tests {
             seed: 5,
             settle: 0,
             baseline: false,
+            horizon: 0,
+            retire: false,
         };
         let report = run_concurrent(&quiet_system(), &opts);
         assert_eq!(report.cells.len(), 12);
@@ -405,6 +443,8 @@ mod tests {
             seed: 9,
             settle: 0,
             baseline: false,
+            horizon: 0,
+            retire: false,
         };
         let report = run_concurrent(&quiet_system(), &opts);
         let strategies: std::collections::BTreeSet<&str> = report
@@ -431,6 +471,8 @@ mod tests {
             seed: 31,
             settle: 0,
             baseline: false,
+            horizon: 0,
+            retire: false,
         };
         let fingerprint = |r: &ConcurrentReport| -> Vec<(Time, Time, u64)> {
             r.cells
@@ -461,6 +503,8 @@ mod tests {
             seed: 3,
             settle: 0,
             baseline: true,
+            horizon: 0,
+            retire: false,
         };
         let report = run_concurrent(&quiet_system(), &opts);
         for c in &report.cells {
@@ -474,6 +518,33 @@ mod tests {
         assert!(rendered.contains("slowdown"));
         assert!(summary(&report).render().contains("per-stage"));
         assert!(to_json(&report).to_string().contains("max_in_flight"));
+    }
+
+    #[test]
+    fn horizon_soak_spreads_arrivals_and_retires_jobs() {
+        let opts = ConcurrentOpts {
+            tenants: 3,
+            per_tenant: 2,
+            mean_gap: 600, // overridden by horizon
+            scale: 56,
+            strategy: TenantStrategy::Uniform(Strategy::PerStage),
+            seed: 17,
+            settle: 0,
+            baseline: false,
+            horizon: 48 * 3600,
+            retire: true,
+        };
+        let report = run_concurrent(&quiet_system(), &opts);
+        assert_eq!(report.cells.len(), 6);
+        assert!(report.live_jobs_peak > 0);
+        assert!(report.sim_events > 0);
+        assert!(report.memory_bytes > 0);
+        // Arrivals actually spread across the horizon instead of bursting.
+        let spread = report.cells.iter().map(|c| c.arrival).max().unwrap()
+            - report.cells.iter().map(|c| c.arrival).min().unwrap();
+        assert!(spread > 3600, "arrivals must spread, got {spread}");
+        let rendered = to_json(&report).to_string();
+        assert!(rendered.contains("live_jobs_peak"));
     }
 
     #[test]

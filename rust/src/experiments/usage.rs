@@ -35,10 +35,29 @@ pub fn chart(cells: &[Cell]) -> String {
     out
 }
 
-/// Tabular form with the per-strategy saving vs Big Job.
+/// Peak live jobs across the sessions behind a (workflow, strategy) group
+/// — the memory-boundedness gauge stamped on each [`Cell`].
+fn peak_live(cells: &[Cell], wf: &str, strat: &str) -> u64 {
+    cells
+        .iter()
+        .filter(|c| c.run.workflow == wf && c.run.strategy == strat)
+        .map(|c| c.live_jobs_peak)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Tabular form with the per-strategy saving vs Big Job and the peak
+/// live-job gauge of the sessions involved (memory-boundedness is
+/// observable, not asserted).
 pub fn table(cells: &[Cell]) -> Table {
     let rows = aggregate(cells);
-    let mut t = Table::new(["workflow", "strategy", "core-hours", "vs big-job"]);
+    let mut t = Table::new([
+        "workflow",
+        "strategy",
+        "core-hours",
+        "vs big-job",
+        "peak live jobs",
+    ]);
     for (wf, strat, ch) in &rows {
         let big = rows
             .iter()
@@ -50,6 +69,7 @@ pub fn table(cells: &[Cell]) -> Table {
             strat.clone(),
             format!("{ch:.1}"),
             format!("{:+.0}%", (ch / big - 1.0) * 100.0),
+            format!("{}", peak_live(cells, wf, strat)),
         ]);
     }
     t
@@ -60,10 +80,12 @@ pub fn to_json(cells: &[Cell]) -> Json {
         aggregate(cells)
             .into_iter()
             .map(|(wf, strat, ch)| {
+                let peak = peak_live(cells, &wf, &strat) as i64;
                 Json::obj()
                     .with("workflow", wf)
                     .with("strategy", strat)
                     .with("core_hours", ch)
+                    .with("live_jobs_peak", peak)
             })
             .collect(),
     )
@@ -95,6 +117,7 @@ mod tests {
                 }],
             },
             asa_stats: None,
+            live_jobs_peak: 7,
         }
     }
 

@@ -35,6 +35,7 @@ fn main() {
         "table2" => cmd_table2(args),
         "usage" => cmd_usage(args),
         "regret" => cmd_regret(args),
+        "bench-diff" => cmd_bench_diff(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -60,6 +61,7 @@ fn print_usage() {
            table2       Table 2: prediction-accuracy probe experiment\n\
            usage        Fig. 9: total resource usage per strategy\n\
            regret       Appendix A: measured regret vs Theorem-1 bound\n\
+           bench-diff   compare two BENCH_*.json files (perf trajectory)\n\
            info         artifact/runtime status\n\n\
          Run `asa <subcommand> --help` for options."
     );
@@ -133,6 +135,12 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
         "strategy",
         "asa",
         "[concurrent] asa | per-stage | big-job | naive | mix",
+    )
+    .opt_default(
+        "horizon",
+        "0",
+        "[concurrent] spread each tenant's arrivals over this many days \
+         (month-scale soak; enables arena retirement of completed workflows)",
     );
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -175,6 +183,7 @@ fn cmd_campaign_concurrent(a: &asa::util::cli::Args) -> i32 {
         eprintln!("bad --strategy (asa | per-stage | big-job | naive | mix)");
         return 2;
     };
+    let horizon_days = a.get_u64("horizon", 0).unwrap();
     let opts = concurrent::ConcurrentOpts {
         tenants: a.get_u64("tenants", 4).unwrap() as u32,
         per_tenant: a.get_u64("per-tenant", 3).unwrap() as u32,
@@ -182,6 +191,11 @@ fn cmd_campaign_concurrent(a: &asa::util::cli::Args) -> i32 {
         scale: a.get_u64("scale", 112).unwrap() as u32,
         strategy,
         seed: a.get_u64("seed", 42).unwrap(),
+        horizon: horizon_days as i64 * 24 * 3600,
+        // Month-scale soaks would otherwise accumulate every finished
+        // workflow's jobs; solo baselines also get pointless at that scale.
+        retire: horizon_days > 0,
+        baseline: horizon_days == 0,
         ..concurrent::ConcurrentOpts::default()
     };
     if opts.tenants == 0 || opts.per_tenant == 0 {
@@ -195,6 +209,13 @@ fn cmd_campaign_concurrent(a: &asa::util::cli::Args) -> i32 {
         report.tenants,
         system_name,
         report.max_in_flight
+    );
+    println!(
+        "memory: peak {} live jobs of {} registered ({} sim events, ~{:.1} MiB state)",
+        report.live_jobs_peak,
+        report.total_registered,
+        report.sim_events,
+        report.memory_bytes as f64 / (1024.0 * 1024.0)
     );
     let t = concurrent::table(&report);
     println!("{}", t.render());
@@ -303,6 +324,148 @@ fn cmd_regret(argv: Vec<String>) -> i32 {
     let pts = regret::run_trial(t_max, shifts, seed, policy, kernel.as_mut());
     println!("{}", regret::table(&pts).render());
     write_result("regret", &regret::to_json(&pts));
+    0
+}
+
+/// `asa bench-diff`: compare a committed `BENCH_<group>.json` baseline with
+/// a fresh run of the same group — the CI perf-trajectory guard. Matching
+/// is by case label; throughput cases compare items/sec (rates stay
+/// comparable across horizon overrides like `ASA_PERF_MACRO_DAYS`), plain
+/// cases compare mean_ms. Regressions past the threshold emit GitHub
+/// `::warning::` annotations; `--fail` turns them into a non-zero exit.
+fn cmd_bench_diff(argv: Vec<String>) -> i32 {
+    let cli = asa::util::cli::Cli::new("asa bench-diff", "diff two bench JSON files")
+        .opt("base", "baseline BENCH_<group>.json (the committed trajectory)")
+        .opt("fresh", "freshly generated BENCH_<group>.json")
+        .opt_default("warn-pct", "25", "warn when a case regresses more than this %")
+        .flag("fail", "exit non-zero on regression instead of warning only");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let (Some(base_path), Some(fresh_path)) = (a.get("base"), a.get("fresh")) else {
+        eprintln!("bench-diff requires --base and --fresh");
+        return 2;
+    };
+    let warn_pct = a.get_f64("warn-pct", 25.0).unwrap();
+    let fresh_text = match std::fs::read_to_string(fresh_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read fresh results {fresh_path}: {e}");
+            return 2;
+        }
+    };
+    let base_text = match std::fs::read_to_string(base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "bench-diff: no baseline at {base_path} — commit the fresh \
+                 {fresh_path} to seed the perf trajectory"
+            );
+            return 0;
+        }
+    };
+    let parse = |text: &str, what: &str| match asa::util::json::Json::parse(text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("bench-diff: bad JSON in {what}: {e}");
+            None
+        }
+    };
+    let (Some(base), Some(fresh)) = (parse(&base_text, base_path), parse(&fresh_text, fresh_path))
+    else {
+        return 2;
+    };
+    let cases = |doc: &asa::util::json::Json| -> Vec<(String, Option<f64>, f64)> {
+        doc.get("results")
+            .and_then(|r| r.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|c| {
+                        let label = c.get("label")?.as_str()?.to_string();
+                        let rate = c.get("items_per_sec").and_then(|v| v.as_f64());
+                        let mean = c.get("mean_ms")?.as_f64()?;
+                        Some((label, rate, mean))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base_cases = cases(&base);
+    let fresh_cases = cases(&fresh);
+    if base_cases.is_empty() {
+        println!(
+            "bench-diff: baseline {base_path} has no results — commit the \
+             fresh {fresh_path} to seed the perf trajectory"
+        );
+        return 0;
+    }
+    let mut regressions = 0usize;
+    let mut t = asa::util::table::Table::new(["case", "metric", "base", "fresh", "delta"]);
+    for (label, fresh_rate, fresh_mean) in &fresh_cases {
+        let Some((_, base_rate, base_mean)) =
+            base_cases.iter().find(|(l, _, _)| l == label)
+        else {
+            t.row([label.clone(), "-".into(), "-".into(), "-".into(), "new case".into()]);
+            continue;
+        };
+        // Rates are the robust cross-run metric when present (higher is
+        // better); fall back to mean time (lower is better).
+        let (metric, base_v, fresh_v, delta_pct, regressed) =
+            match (base_rate, fresh_rate) {
+                (Some(b), Some(f)) if *b > 0.0 => {
+                    let d = (f / b - 1.0) * 100.0;
+                    ("items/sec", *b, *f, d, d < -warn_pct)
+                }
+                _ => {
+                    let d = if *base_mean > 0.0 {
+                        (fresh_mean / base_mean - 1.0) * 100.0
+                    } else {
+                        0.0
+                    };
+                    ("mean_ms", *base_mean, *fresh_mean, d, d > warn_pct)
+                }
+            };
+        if regressed {
+            regressions += 1;
+            println!(
+                "::warning::perf regression in {label:?}: {metric} {base_v:.1} -> \
+                 {fresh_v:.1} ({delta_pct:+.1}%, threshold {warn_pct}%)"
+            );
+        }
+        t.row([
+            label.clone(),
+            metric.into(),
+            format!("{base_v:.1}"),
+            format!("{fresh_v:.1}"),
+            format!("{delta_pct:+.1}%"),
+        ]);
+    }
+    // A case that exists in the baseline but not in the fresh run is how a
+    // regression escapes the guard (rename/delete the bench) — warn, don't
+    // silently drop it from the trajectory.
+    for (label, _, _) in &base_cases {
+        if !fresh_cases.iter().any(|(l, _, _)| l == label) {
+            regressions += 1;
+            println!(
+                "::warning::bench case {label:?} present in baseline {base_path} \
+                 but missing from fresh run {fresh_path}"
+            );
+            t.row([label.clone(), "-".into(), "-".into(), "-".into(), "missing".into()]);
+        }
+    }
+    println!("{}", t.render());
+    if regressions > 0 {
+        println!("{regressions} case(s) regressed more than {warn_pct}% or went missing");
+        if a.flag("fail") {
+            return 1;
+        }
+    } else {
+        println!("no regressions beyond {warn_pct}%");
+    }
     0
 }
 

@@ -6,8 +6,9 @@
 //! (total = nodes × cores_per_node), matching how queue-wait dynamics arise.
 
 use crate::simulator::job::JobId;
+use crate::util::hash::FxHashMap;
 use crate::{Cores, Time};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::BTreeSet;
 
 /// One live allocation.
 #[derive(Clone, Copy, Debug)]
@@ -24,7 +25,7 @@ pub struct Allocation {
 pub struct Cluster {
     total: Cores,
     free: Cores,
-    allocs: HashMap<JobId, Allocation>,
+    allocs: FxHashMap<JobId, Allocation>,
     /// Allocations keyed by `(limit_end, cores, job)`, kept sorted so the
     /// EASY-backfill shadow computation walks planned end times in order
     /// (and stops early) instead of collecting + sorting every running job
@@ -39,7 +40,7 @@ impl Cluster {
         Cluster {
             total,
             free: total,
-            allocs: HashMap::new(),
+            allocs: FxHashMap::default(),
             by_end: BTreeSet::new(),
         }
     }

@@ -112,6 +112,8 @@ pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
                 user_pool: i64_of(w, "user_pool", quiet.user_pool as i64) as u32,
                 backlog_factor: f64_of(w, "backlog_factor", quiet.backlog_factor),
                 initial_user_usage: f64_of(w, "initial_user_usage", quiet.initial_user_usage),
+                max_queued_jobs: i64_of(w, "max_queued_jobs", quiet.max_queued_jobs as i64)
+                    as usize,
             }
         }
         None => quiet,

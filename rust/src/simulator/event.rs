@@ -87,6 +87,22 @@ impl EventQueue {
         true
     }
 
+    /// Withdraw an outstanding deduplicated sample time (the job that
+    /// wanted a wakeup at `time` was cancelled). The already-queued heap
+    /// entry still pops — firing a redundant scheduling pass is harmless
+    /// and keeps engine equivalence — but the dedup set stays pruned and
+    /// the time may be re-requested by a later submission. Returns whether
+    /// an entry was removed.
+    pub fn retract_sample(&mut self, time: Time) -> bool {
+        self.sample_times.remove(&time)
+    }
+
+    /// Outstanding deduplicated sample times (observability for the
+    /// eager-prune tests).
+    pub fn outstanding_samples(&self) -> usize {
+        self.sample_times.len()
+    }
+
     pub fn pop(&mut self) -> Option<(Time, EventKind)> {
         self.heap.pop().map(|e| {
             if matches!(e.kind, EventKind::Sample) {
@@ -147,6 +163,23 @@ mod tests {
         q.push(7, EventKind::Sample);
         assert_eq!(q.peek_time(), Some(7));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn retracted_sample_time_can_be_rescheduled() {
+        let mut q = EventQueue::new();
+        assert!(q.push_sample_dedup(100));
+        assert_eq!(q.outstanding_samples(), 1);
+        assert!(q.retract_sample(100));
+        assert_eq!(q.outstanding_samples(), 0, "eagerly pruned");
+        assert!(!q.retract_sample(100), "second retract is a no-op");
+        // The time may be requested again by a later submission...
+        assert!(q.push_sample_dedup(100));
+        // ...and the stale heap entry still fires (harmless extra pass).
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((100, EventKind::Sample)));
+        assert_eq!(q.pop(), Some((100, EventKind::Sample)));
+        assert_eq!(q.outstanding_samples(), 0);
     }
 
     #[test]

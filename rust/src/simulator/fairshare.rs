@@ -16,9 +16,14 @@
 //! `charge` and `factor` O(1) — important because the scheduler evaluates
 //! factors for every queued candidate on every pass. A periodic rebase
 //! guards against overflow on very long simulations.
+//!
+//! Accounts live in a dense `Vec` keyed by the index [`FairShare::ensure_user`]
+//! returns; the simulator resolves each job's user to its index once at
+//! registration, so the per-candidate factor lookups in the scheduling
+//! pass are plain array reads ([`FairShare::factor_idx`]) with no hashing.
 
+use crate::util::hash::FxHashMap;
 use crate::Time;
-use std::collections::HashMap;
 
 #[derive(Clone, Debug)]
 struct UserAccount {
@@ -35,7 +40,9 @@ struct UserAccount {
 /// Fair-share ledger for all users.
 #[derive(Debug)]
 pub struct FairShare {
-    accounts: HashMap<u32, UserAccount>,
+    /// User id → dense account index.
+    index: FxHashMap<u32, u32>,
+    accounts: Vec<UserAccount>,
     half_life: Time,
     total_shares: f64,
     total_usage_scaled: f64,
@@ -55,7 +62,8 @@ impl FairShare {
     pub fn new(half_life: Time) -> Self {
         assert!(half_life > 0);
         FairShare {
-            accounts: HashMap::new(),
+            index: FxHashMap::default(),
+            accounts: Vec::new(),
             half_life,
             total_shares: 0.0,
             total_usage_scaled: 0.0,
@@ -64,22 +72,26 @@ impl FairShare {
         }
     }
 
-    /// Register a user with a share weight (idempotent).
-    pub fn ensure_user(&mut self, user: u32, shares: f64) {
-        let total_shares = &mut self.total_shares;
-        let generation = &mut self.generation;
-        self.accounts.entry(user).or_insert_with(|| {
-            *total_shares += shares;
-            // A new account changes total_shares, so every cached factor
-            // is stale.
-            *generation += 1;
-            UserAccount {
-                shares,
-                usage_scaled: 0.0,
-                factor_gen: 0,
-                factor: 1.0,
-            }
+    /// Register a user with a share weight (idempotent; the weight of an
+    /// existing account is left unchanged). Returns the account's dense
+    /// index for [`FairShare::factor_idx`].
+    pub fn ensure_user(&mut self, user: u32, shares: f64) -> u32 {
+        if let Some(&idx) = self.index.get(&user) {
+            return idx;
+        }
+        let idx = self.accounts.len() as u32;
+        self.index.insert(user, idx);
+        self.accounts.push(UserAccount {
+            shares,
+            usage_scaled: 0.0,
+            factor_gen: 0,
+            factor: 1.0,
         });
+        self.total_shares += shares;
+        // A new account changes total_shares, so every cached factor is
+        // stale.
+        self.generation += 1;
+        idx
     }
 
     fn scale(&mut self, now: Time) -> f64 {
@@ -87,7 +99,7 @@ impl FairShare {
         if exp > 512.0 {
             // Rebase so the exponent stays well inside f64 range.
             let shift = 2f64.powf(-exp);
-            for acct in self.accounts.values_mut() {
+            for acct in self.accounts.iter_mut() {
                 acct.usage_scaled *= shift;
             }
             self.total_usage_scaled *= shift;
@@ -102,25 +114,34 @@ impl FairShare {
 
     /// Charge `core_seconds` of usage to a user at time `now`.
     pub fn charge(&mut self, user: u32, core_seconds: f64, now: Time) {
-        self.ensure_user(user, 1.0);
+        let idx = self.ensure_user(user, 1.0);
         let scaled = core_seconds * self.scale(now);
-        self.accounts.get_mut(&user).unwrap().usage_scaled += scaled;
+        self.accounts[idx as usize].usage_scaled += scaled;
         self.total_usage_scaled += scaled;
         self.generation += 1;
     }
 
     /// Fair-share factor in (0, 1]: 1 = under-served, →0 = heavy user.
     ///
+    /// By-user-id convenience wrapper (registers the account lazily); the
+    /// scheduling pass uses [`FairShare::factor_idx`] with the dense index
+    /// carried by each candidate.
+    pub fn factor(&mut self, user: u32, now: Time) -> f64 {
+        let idx = self.ensure_user(user, 1.0);
+        self.factor_idx(idx, now)
+    }
+
+    /// Fair-share factor by dense account index.
+    ///
     /// Cached per user and invalidated by ledger changes (see
     /// [`FairShare::generation`]): the scheduler evaluates factors for every
     /// queued candidate on every pass, but the ledger only changes on
     /// charges, so steady-state passes hit the cache.
-    pub fn factor(&mut self, user: u32, _now: Time) -> f64 {
-        self.ensure_user(user, 1.0);
+    pub fn factor_idx(&mut self, idx: u32, _now: Time) -> f64 {
         let generation = self.generation;
         let total_usage_scaled = self.total_usage_scaled;
         let total_shares = self.total_shares;
-        let acct = self.accounts.get_mut(&user).unwrap();
+        let acct = &mut self.accounts[idx as usize];
         if acct.factor_gen == generation {
             return acct.factor;
         }
@@ -143,14 +164,21 @@ impl FairShare {
     /// Absolute decayed usage (core-seconds as of `now`).
     pub fn usage(&mut self, user: u32, now: Time) -> f64 {
         let s = self.scale(now);
-        self.accounts
-            .get(&user)
-            .map(|a| a.usage_scaled / s)
-            .unwrap_or(0.0)
+        match self.index.get(&user) {
+            Some(&idx) => self.accounts[idx as usize].usage_scaled / s,
+            None => 0.0,
+        }
     }
 
     pub fn user_count(&self) -> usize {
         self.accounts.len()
+    }
+
+    /// Approximate heap footprint of the ledger.
+    pub fn bytes_estimate(&self) -> usize {
+        use std::mem::size_of;
+        self.accounts.capacity() * size_of::<UserAccount>()
+            + self.index.capacity() * (size_of::<u32>() * 2)
     }
 }
 
@@ -232,12 +260,15 @@ mod tests {
     }
 
     #[test]
-    fn ensure_user_is_idempotent() {
+    fn ensure_user_is_idempotent_and_returns_stable_index() {
         let mut fs = FairShare::new(100);
-        fs.ensure_user(7, 2.0);
-        fs.ensure_user(7, 5.0); // ignored
+        let a = fs.ensure_user(7, 2.0);
+        let b = fs.ensure_user(7, 5.0); // weight ignored
+        assert_eq!(a, b);
         assert_eq!(fs.user_count(), 1);
         assert!((fs.factor(7, 0) - 1.0).abs() < 1e-12);
+        // The dense index is what factor_idx keys on.
+        assert_eq!(fs.factor_idx(a, 0), fs.factor(7, 0));
     }
 
     #[test]

@@ -6,9 +6,75 @@
 
 use crate::{Cores, Time};
 
-/// Opaque job identifier (index into the simulator's job arena).
+/// Opaque job identifier: a *generational* handle into the simulator's job
+/// arena, packed into one `u64` — the low 32 bits are the arena slot, the
+/// high 32 bits the slot's generation. Retiring a job bumps its slot's
+/// generation, so a recycled slot yields a fresh, never-before-seen id and
+/// stale handles are detectable instead of silently aliasing a new job.
+///
+/// Ids of never-recycled slots are generation 0, so `JobId(n)` for small
+/// `n` still names the n-th registered job (and tests may construct ids
+/// directly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct JobId(pub u64);
+
+impl JobId {
+    /// Assemble an id from an arena slot and its generation.
+    #[inline]
+    pub fn from_parts(slot: u32, generation: u32) -> JobId {
+        JobId(((generation as u64) << 32) | slot as u64)
+    }
+
+    /// Arena slot this id points at.
+    #[inline]
+    pub fn slot(self) -> usize {
+        (self.0 & 0xffff_ffff) as usize
+    }
+
+    /// Generation the slot had when this id was issued.
+    #[inline]
+    pub fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
+
+/// Interned job-name handle (index into the simulator's
+/// [`crate::simulator::store::NameInterner`]). Steady-state submissions
+/// carry a `NameId` (or a `&'static str`, interned on first sight) instead
+/// of a heap-allocated `String` per job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NameId(pub u32);
+
+/// A job name as supplied by the submitter: either text (interned by the
+/// simulator at registration) or an already-interned handle.
+///
+/// `&'static str` and pre-interned names make submission allocation-free;
+/// `String` (e.g. from `format!`) is accepted and deduplicated by the
+/// interner, so repeated dynamic names cost one allocation ever.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobName {
+    Static(&'static str),
+    Owned(String),
+    Interned(NameId),
+}
+
+impl From<&'static str> for JobName {
+    fn from(s: &'static str) -> Self {
+        JobName::Static(s)
+    }
+}
+
+impl From<String> for JobName {
+    fn from(s: String) -> Self {
+        JobName::Owned(s)
+    }
+}
+
+impl From<NameId> for JobName {
+    fn from(id: NameId) -> Self {
+        JobName::Interned(id)
+    }
+}
 
 /// Slurm-style dependency: the job may not *start* (nor be charged) before
 /// the condition holds. `AfterOk` is what ASA's non-naïve mode uses to make
@@ -36,13 +102,23 @@ pub enum JobState {
     TimedOut,
 }
 
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Cancelled | JobState::TimedOut
+        )
+    }
+}
+
 /// What the submitting entity asks for.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     /// Owning user (fair-share accounting key).
     pub user: u32,
-    /// Human-readable tag (workflow stage name or "bg").
-    pub name: String,
+    /// Human-readable tag (workflow stage name or "bg"), interned at
+    /// registration.
+    pub name: JobName,
     /// Cores requested (whole allocation, paper-style).
     pub cores: Cores,
     /// Wall-clock limit used for scheduling/backfill reservations.
@@ -55,7 +131,7 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    pub fn new(user: u32, name: impl Into<String>, cores: Cores, runtime: Time) -> Self {
+    pub fn new(user: u32, name: impl Into<JobName>, cores: Cores, runtime: Time) -> Self {
         JobSpec {
             user,
             name: name.into(),
@@ -79,55 +155,6 @@ impl JobSpec {
     }
 }
 
-/// A job instance in the simulator arena.
-#[derive(Clone, Debug)]
-pub struct Job {
-    pub id: JobId,
-    pub spec: JobSpec,
-    pub state: JobState,
-    pub submit_time: Time,
-    pub start_time: Option<Time>,
-    pub end_time: Option<Time>,
-}
-
-impl Job {
-    pub fn new(id: JobId, spec: JobSpec, submit_time: Time) -> Self {
-        Job {
-            id,
-            spec,
-            state: JobState::Pending,
-            submit_time,
-            start_time: None,
-            end_time: None,
-        }
-    }
-
-    /// Queue waiting time (defined once started).
-    pub fn wait_time(&self) -> Option<Time> {
-        self.start_time.map(|s| s - self.submit_time)
-    }
-
-    /// Core-seconds actually charged (start..end × cores).
-    pub fn core_seconds(&self) -> i64 {
-        match (self.start_time, self.end_time) {
-            (Some(s), Some(e)) => (e - s) * self.spec.cores as i64,
-            _ => 0,
-        }
-    }
-
-    /// Core-hours actually charged.
-    pub fn core_hours(&self) -> f64 {
-        self.core_seconds() as f64 / 3600.0
-    }
-
-    pub fn is_terminal(&self) -> bool {
-        matches!(
-            self.state,
-            JobState::Completed | JobState::Cancelled | JobState::TimedOut
-        )
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,25 +167,42 @@ mod tests {
     }
 
     #[test]
-    fn wait_and_charge_accounting() {
-        let mut j = Job::new(JobId(0), JobSpec::new(1, "x", 10, 100), 50);
-        assert_eq!(j.wait_time(), None);
-        assert_eq!(j.core_seconds(), 0);
-        j.start_time = Some(80);
-        j.end_time = Some(180);
-        j.state = JobState::Completed;
-        assert_eq!(j.wait_time(), Some(30));
-        assert_eq!(j.core_seconds(), 1000);
-        assert!((j.core_hours() - 1000.0 / 3600.0).abs() < 1e-12);
-        assert!(j.is_terminal());
-    }
-
-    #[test]
     fn builder_methods() {
         let s = JobSpec::new(2, "y", 4, 10)
             .with_limit(99)
             .with_dependency(Dependency::AfterOk(vec![JobId(7)]));
         assert_eq!(s.time_limit, 99);
         assert_eq!(s.dependency, Some(Dependency::AfterOk(vec![JobId(7)])));
+    }
+
+    #[test]
+    fn job_id_packing_roundtrips() {
+        let id = JobId::from_parts(7, 0);
+        assert_eq!(id, JobId(7), "generation-0 ids are plain indices");
+        assert_eq!(id.slot(), 7);
+        assert_eq!(id.generation(), 0);
+        let recycled = JobId::from_parts(7, 3);
+        assert_eq!(recycled.slot(), 7);
+        assert_eq!(recycled.generation(), 3);
+        assert_ne!(recycled, id, "recycled slot yields a fresh id");
+    }
+
+    #[test]
+    fn job_name_conversions() {
+        assert_eq!(JobName::from("bg"), JobName::Static("bg"));
+        assert_eq!(
+            JobName::from(String::from("dyn")),
+            JobName::Owned("dyn".into())
+        );
+        assert_eq!(JobName::from(NameId(4)), JobName::Interned(NameId(4)));
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(JobState::Completed.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+        assert!(JobState::TimedOut.is_terminal());
+        assert!(!JobState::Pending.is_terminal());
+        assert!(!JobState::Running.is_terminal());
     }
 }

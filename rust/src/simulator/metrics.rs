@@ -21,11 +21,29 @@ pub struct Metrics {
     /// Scheduling passes run and jobs started by backfill vs FCFS.
     pub passes: u64,
     pub started: u64,
+    /// Background-trace arrivals dropped by the admission cap
+    /// (`WorkloadProfile::max_queued_jobs`).
+    pub rejected: u64,
+    /// Internal engine events processed (the denominator for events/sec
+    /// throughput reporting; includes non-observable ones).
+    pub events: u64,
+    /// Peak number of jobs simultaneously held live in the arena —
+    /// pending + running + terminal-but-not-yet-retired. Bounded and
+    /// independent of total submissions when retirement works; this gauge
+    /// is what the long-horizon benches and proptests assert on.
+    pub live_jobs_peak: u64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record the current live-job count (called by the simulator after
+    /// every registration, the only place the count can rise).
+    #[inline]
+    pub fn note_live_jobs(&mut self, live: usize) {
+        self.live_jobs_peak = self.live_jobs_peak.max(live as u64);
     }
 
     /// Record the utilization level holding from `now` onwards.
@@ -64,6 +82,15 @@ mod tests {
         let mut m = Metrics::new();
         m.sample_utilization(0, 0.5);
         assert!((m.mean_utilization(100) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn live_jobs_peak_is_monotone() {
+        let mut m = Metrics::new();
+        m.note_live_jobs(10);
+        m.note_live_jobs(3);
+        m.note_live_jobs(7);
+        assert_eq!(m.live_jobs_peak, 10);
     }
 
     #[test]

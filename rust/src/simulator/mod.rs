@@ -12,6 +12,8 @@
 //! Components:
 //! * [`event`] — the time-ordered event heap.
 //! * [`job`] — job specs, states, dependencies, geometries.
+//! * [`store`] — the recycling generational job arena (hot/cold split) and
+//!   the name interner.
 //! * [`cluster`] — node/core inventory and allocation accounting.
 //! * [`fairshare`] — per-user halflife-decayed usage and priority factors.
 //! * [`slurm`] — the scheduling pass: priority ordering + EASY backfill.
@@ -21,6 +23,7 @@
 
 pub mod event;
 pub mod job;
+pub mod store;
 pub mod cluster;
 pub mod fairshare;
 pub mod slurm;
@@ -29,8 +32,9 @@ pub mod sim;
 pub mod metrics;
 pub mod config;
 
-pub use job::{Dependency, Job, JobId, JobSpec, JobState};
+pub use job::{Dependency, JobId, JobName, JobSpec, JobState, NameId};
 pub use sim::{SchedEngine, SimEvent, Simulator};
+pub use store::{JobStore, JobView, NameInterner};
 pub use trace::BackgroundWorkload;
 
 use crate::Cores;

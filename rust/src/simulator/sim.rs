@@ -10,19 +10,27 @@
 //! multiplexes one stream across many concurrent drivers. Background-trace
 //! jobs churn underneath without producing observable events, exactly as
 //! other users' jobs do on a real system.
+//!
+//! Jobs live in a recycling, generational, hot/cold-split arena
+//! ([`crate::simulator::store::JobStore`]): background jobs are retired the
+//! moment they reach a terminal state, foreground jobs when the caller
+//! releases them with [`Simulator::retire`], so month-scale simulations run
+//! at constant memory instead of accumulating every job ever submitted.
 
 use crate::simulator::cluster::Cluster;
 use crate::simulator::event::{EventKind, EventQueue};
 use crate::simulator::fairshare::FairShare;
-use crate::simulator::job::{Dependency, Job, JobId, JobSpec, JobState};
+use crate::simulator::job::{Dependency, JobId, JobSpec, JobState};
 use crate::simulator::metrics::Metrics;
 use crate::simulator::slurm::{schedule_pass_with, Candidate, PassScratch};
+use crate::simulator::store::{JobStore, JobView};
 use crate::simulator::trace::BackgroundWorkload;
 use crate::simulator::SystemConfig;
+use crate::util::hash::{FxHashMap, FxHashSet};
 use crate::util::rng::Rng;
 use crate::Time;
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::BTreeSet;
+use std::collections::VecDeque;
 
 /// Observable (foreground) state change.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,40 +68,35 @@ impl SimEvent {
             | SimEvent::Wake { time, .. } => time,
         }
     }
+
+    /// Does this event end the job's lifecycle?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            SimEvent::Finished { .. } | SimEvent::Cancelled { .. } | SimEvent::TimedOut { .. }
+        )
+    }
 }
 
 /// Which scheduling-core bookkeeping the simulator runs.
 ///
 /// `Incremental` (the default) maintains a persistent eligible set:
 /// dependency-held jobs are parked in a reverse-dependency index and a
-/// `--begin` min-heap, and only enter the schedulable queue when their
+/// `--begin` release set, and only enter the schedulable queue when their
 /// parents complete or their begin time arrives — steady-state passes touch
 /// only eligible jobs. `Naive` preserves the original per-pass rebuild
 /// (scan every pending job, re-filter by `dependency_ready`, re-scan for
 /// the next `--begin` release) as a test oracle: both engines must emit
 /// bit-identical observable event streams and job metrics for identical
-/// seeds (the internal `passes` counter may differ — the naive engine also
-/// schedules duplicate same-time `Sample` wakeups that fire no-op passes).
+/// seeds (the internal `passes`/`events` counters may differ — the naive
+/// engine also schedules duplicate same-time `Sample` wakeups that fire
+/// no-op passes). Arena retirement is part of the shared substrate, so
+/// recycled [`JobId`]s are identical across engines too.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SchedEngine {
     #[default]
     Incremental,
     Naive,
-}
-
-struct JobMeta {
-    foreground: bool,
-    /// Expected finish event time; guards against stale Finish events after
-    /// a cancel + garbage-heap entry.
-    finish_at: Option<Time>,
-    /// Index of this job in `pending` while queued: O(1) swap-removal
-    /// instead of an O(n) scan per start/cancel.
-    queue_pos: Option<u32>,
-    /// Unmet `AfterOk` parents (incremental engine; 0 once eligible).
-    unmet_deps: u32,
-    /// Parked in the dependency index / begin heap rather than the
-    /// eligible queue (incremental engine).
-    held: bool,
 }
 
 /// The discrete-event cluster simulator.
@@ -102,8 +105,8 @@ pub struct Simulator {
     engine: SchedEngine,
     now: Time,
     events: EventQueue,
-    jobs: Vec<Job>,
-    meta: Vec<JobMeta>,
+    /// Recycling generational job arena (hot/cold split; see `store`).
+    store: JobStore,
     /// Incremental engine: jobs eligible to schedule right now (dependency
     /// satisfied). Naive oracle: every Pending job, dependency-held or not.
     pending: Vec<JobId>,
@@ -113,11 +116,13 @@ pub struct Simulator {
     /// Reverse-dependency index: parent → children waiting on its
     /// completion (one entry per dependency occurrence). Turns
     /// `cancel_broken_dependents` and completion wakeups into O(children)
-    /// lookups instead of O(pending) scans.
-    dep_children: HashMap<JobId, Vec<JobId>>,
-    /// Future `--begin` release times, earliest first (entries for jobs
-    /// cancelled while parked are pruned lazily).
-    begin_heap: BinaryHeap<Reverse<(Time, JobId)>>,
+    /// lookups instead of O(pending) scans. Entries are pruned eagerly
+    /// when a parked child is cancelled.
+    dep_children: FxHashMap<JobId, Vec<JobId>>,
+    /// Future `--begin` release times, earliest first. Entries are removed
+    /// eagerly when the parked job is cancelled (and on promotion), so the
+    /// set only ever holds live parked jobs.
+    begin_set: BTreeSet<(Time, JobId)>,
     cluster: Cluster,
     fairshare: FairShare,
     trace: Option<BackgroundWorkload>,
@@ -129,7 +134,7 @@ pub struct Simulator {
     /// Reusable sort/merge buffers for the scheduling pass.
     scratch: PassScratch,
     /// Foreground users already seeded with pre-existing usage.
-    seeded_users: std::collections::HashSet<u32>,
+    seeded_users: FxHashSet<u32>,
     usage_rng: Rng,
 }
 
@@ -158,18 +163,17 @@ impl Simulator {
             engine,
             now: 0,
             events: EventQueue::new(),
-            jobs: Vec::new(),
-            meta: Vec::new(),
+            store: JobStore::new(),
             pending: Vec::new(),
             held_count: 0,
-            dep_children: HashMap::new(),
-            begin_heap: BinaryHeap::new(),
+            dep_children: FxHashMap::default(),
+            begin_set: BTreeSet::new(),
             out: VecDeque::new(),
             metrics: Metrics::new(),
             need_pass: false,
             cand_buf: Vec::new(),
             scratch: PassScratch::default(),
-            seeded_users: std::collections::HashSet::new(),
+            seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
         };
         sim.prefill();
@@ -193,18 +197,17 @@ impl Simulator {
             engine,
             now: 0,
             events: EventQueue::new(),
-            jobs: Vec::new(),
-            meta: Vec::new(),
+            store: JobStore::new(),
             pending: Vec::new(),
             held_count: 0,
-            dep_children: HashMap::new(),
-            begin_heap: BinaryHeap::new(),
+            dep_children: FxHashMap::default(),
+            begin_set: BTreeSet::new(),
             out: VecDeque::new(),
             metrics: Metrics::new(),
             need_pass: false,
             cand_buf: Vec::new(),
             scratch: PassScratch::default(),
-            seeded_users: std::collections::HashSet::new(),
+            seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
         }
     }
@@ -226,12 +229,11 @@ impl Simulator {
             let limit_left = residual + (spec.time_limit - spec.runtime).max(0);
             let id = self.register(spec, false);
             // Start directly: bypass the queue for the pre-existing load.
-            let job = &mut self.jobs[id.0 as usize];
-            job.state = JobState::Running;
-            job.start_time = Some(0);
-            let cores = job.spec.cores;
+            let cores = self.store.hot(id).cores;
+            self.store.hot_mut(id).state = JobState::Running;
+            self.store.cold_mut(id).start_time = Some(0);
             self.cluster.allocate(id, cores, 0, limit_left);
-            self.meta[id.0 as usize].finish_at = Some(residual);
+            self.store.hot_mut(id).finish_at = Some(residual);
             self.events.push(residual, EventKind::Finish(id));
         }
         for spec in backlog {
@@ -250,8 +252,16 @@ impl Simulator {
         &self.cfg
     }
 
-    pub fn job(&self, id: JobId) -> &Job {
-        &self.jobs[id.0 as usize]
+    /// Point-in-time copy of a job's externally visible fields. Panics on
+    /// a stale handle (the job was retired) — terminal *foreground* jobs
+    /// stay addressable until [`Simulator::retire`] is called for them.
+    pub fn job(&self, id: JobId) -> JobView {
+        self.store.view(id)
+    }
+
+    /// Resolved (interned) name of a live job.
+    pub fn job_name(&self, id: JobId) -> &str {
+        self.store.name(id)
     }
 
     pub fn cluster(&self) -> &Cluster {
@@ -261,6 +271,52 @@ impl Simulator {
     /// Jobs currently queued (Pending), including dependency-held ones.
     pub fn queue_depth(&self) -> usize {
         self.pending.len() + self.held_count
+    }
+
+    /// Jobs currently held live in the arena (pending + running +
+    /// terminal-but-unretired).
+    pub fn live_jobs(&self) -> usize {
+        self.store.live()
+    }
+
+    /// Arena slot recycles so far (observability for retirement tests).
+    pub fn jobs_recycled(&self) -> u64 {
+        self.store.recycled()
+    }
+
+    /// Jobs registered over the simulation's lifetime (live + retired).
+    pub fn jobs_registered(&self) -> u64 {
+        self.store.total_registered()
+    }
+
+    /// Approximate heap footprint of the simulation state: job arena +
+    /// symbol table + fair-share ledger + scheduler queues. Meant as a
+    /// boundedness gauge for long-horizon runs, not an exact RSS figure.
+    pub fn memory_bytes_estimate(&self) -> usize {
+        use std::mem::size_of;
+        self.store.bytes_estimate()
+            + self.fairshare.bytes_estimate()
+            + self.pending.capacity() * size_of::<JobId>()
+            + self.cand_buf.capacity() * size_of::<Candidate>()
+            + self.begin_set.len() * size_of::<(Time, JobId)>()
+            + self
+                .dep_children
+                .values()
+                .map(|v| v.capacity() * size_of::<JobId>() + 48)
+                .sum::<usize>()
+            + self.events.len() * 40
+    }
+
+    /// Sizes of the lazy-prune-prone structures, for the eager-pruning
+    /// tests: `(begin-set entries, dependency-index parents,
+    /// dependency-index child slots, outstanding dedup sample times)`.
+    pub fn prune_stats(&self) -> (usize, usize, usize, usize) {
+        (
+            self.begin_set.len(),
+            self.dep_children.len(),
+            self.dep_children.values().map(|v| v.len()).sum(),
+            self.events.outstanding_samples(),
+        )
     }
 
     fn register(&mut self, spec: JobSpec, foreground: bool) -> JobId {
@@ -279,60 +335,71 @@ impl Simulator {
                 }
             }
         }
-        let id = JobId(self.jobs.len() as u64);
-        self.jobs.push(Job::new(id, spec, self.now));
-        self.meta.push(JobMeta {
-            foreground,
-            finish_at: None,
-            queue_pos: None,
-            unmet_deps: 0,
-            held: false,
-        });
+        // Resolve the fair-share account once here so the scheduling pass
+        // reads factors by dense index, never by hashing user ids.
+        let fs_idx = self.fairshare.ensure_user(spec.user, 1.0);
+        let id = self.store.insert(spec, self.now, foreground, fs_idx);
+        self.metrics.note_live_jobs(self.store.live());
         id
     }
 
     /// Place a Pending job into the scheduler's bookkeeping. The
     /// incremental engine parks dependency-held jobs in the
-    /// reverse-dependency index or the begin-time heap; the naive oracle
+    /// reverse-dependency index or the begin-time set; the naive oracle
     /// keeps every pending job in one list and re-filters it each pass.
     fn admit(&mut self, id: JobId) {
-        debug_assert_eq!(self.jobs[id.0 as usize].state, JobState::Pending);
+        debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
         if self.engine == SchedEngine::Naive {
             self.queue_push(id);
             return;
         }
-        let dep = self.jobs[id.0 as usize].spec.dependency.clone();
+        let dep = self.store.cold(id).dependency.clone();
         match dep {
             None => self.queue_push(id),
             Some(Dependency::BeginAt(t)) => {
                 if t <= self.now {
                     self.queue_push(id);
                 } else {
-                    self.begin_heap.push(Reverse((t, id)));
-                    self.meta[id.0 as usize].held = true;
+                    self.begin_set.insert((t, id));
+                    self.store.hot_mut(id).held = true;
                     self.held_count += 1;
                 }
             }
             Some(Dependency::AfterOk(deps)) => {
                 let mut unmet = 0u32;
                 for &d in &deps {
-                    if self.jobs[d.0 as usize].state != JobState::Completed {
-                        // One index entry per occurrence: duplicate parents
-                        // decrement once per completion-sweep entry.
-                        unmet += 1;
-                        self.dep_children.entry(d).or_default().push(id);
+                    match self.store.state_of(d) {
+                        Some(JobState::Completed) => {}
+                        Some(s) if s.is_terminal() => {
+                            // Parent already failed: counts as unmet (the
+                            // job parks forever, matching the naive
+                            // engine, which only cascades cancellations at
+                            // the moment a parent *transitions* to a
+                            // failed state) — but no index entry: a dead
+                            // parent never transitions again, so the entry
+                            // could never be consulted, only leak.
+                            unmet += 1;
+                        }
+                        Some(_) => {
+                            // One index entry per occurrence: duplicate
+                            // parents decrement once per completion-sweep
+                            // entry.
+                            unmet += 1;
+                            self.dep_children.entry(d).or_default().push(id);
+                        }
+                        None => {
+                            // Stale handle (parent retired): like a failed
+                            // parent, the job parks forever.
+                            unmet += 1;
+                        }
                     }
                 }
                 if unmet == 0 {
                     self.queue_push(id);
                 } else {
-                    // Parents already failed (Cancelled/TimedOut) still
-                    // count as unmet: the job parks forever, matching the
-                    // naive engine, which only cascades cancellations at
-                    // the moment a parent *transitions* to a failed state.
-                    let m = &mut self.meta[id.0 as usize];
-                    m.unmet_deps = unmet;
-                    m.held = true;
+                    let h = self.store.hot_mut(id);
+                    h.unmet_deps = unmet;
+                    h.held = true;
                     self.held_count += 1;
                 }
             }
@@ -341,8 +408,8 @@ impl Simulator {
 
     /// Append `id` to the pending queue, recording its position.
     fn queue_push(&mut self, id: JobId) {
-        debug_assert!(self.meta[id.0 as usize].queue_pos.is_none());
-        self.meta[id.0 as usize].queue_pos = Some(self.pending.len() as u32);
+        debug_assert!(self.store.hot(id).queue_pos.is_none());
+        self.store.hot_mut(id).queue_pos = Some(self.pending.len() as u32);
         self.pending.push(id);
     }
 
@@ -351,13 +418,13 @@ impl Simulator {
     /// storage — the scheduling pass imposes its own total order — so a
     /// swap-remove is safe.
     fn queue_remove(&mut self, id: JobId) {
-        let Some(pos) = self.meta[id.0 as usize].queue_pos.take() else {
+        let Some(pos) = self.store.hot_mut(id).queue_pos.take() else {
             return;
         };
         let pos = pos as usize;
         self.pending.swap_remove(pos);
         if let Some(&moved) = self.pending.get(pos) {
-            self.meta[moved.0 as usize].queue_pos = Some(pos as u32);
+            self.store.hot_mut(moved).queue_pos = Some(pos as u32);
         }
     }
 
@@ -373,21 +440,26 @@ impl Simulator {
     pub fn submit_at(&mut self, at: Time, spec: JobSpec) -> JobId {
         assert!(at >= self.now, "submit_at in the past ({at} < {})", self.now);
         let id = self.register(spec, true);
-        self.jobs[id.0 as usize].submit_time = at;
+        self.store.hot_mut(id).submit_time = at;
         self.events.push(at, EventKind::Submit(id));
         id
     }
 
+    /// Intern a job name ahead of time; submitting with the returned
+    /// [`crate::simulator::NameId`] is allocation-free.
+    pub fn intern_name(&mut self, name: &str) -> crate::simulator::job::NameId {
+        self.store.names.intern(name)
+    }
+
     fn enqueue(&mut self, id: JobId) {
-        let job = &mut self.jobs[id.0 as usize];
-        debug_assert_eq!(job.state, JobState::Pending);
-        job.submit_time = self.now;
+        debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
+        self.store.hot_mut(id).submit_time = self.now;
         self.admit(id);
         // A pass runs even for a held submission: the naive engine always
         // re-ran the pass on submit, and a pass at a new `now` can change
         // age-factor ordering for the rest of the queue.
         self.need_pass = true;
-        if self.meta[id.0 as usize].foreground {
+        if self.store.hot(id).foreground {
             self.out.push_back(SimEvent::Submitted {
                 id,
                 time: self.now,
@@ -406,17 +478,47 @@ impl Simulator {
         self.events.push(at, EventKind::Wake(tag));
     }
 
-    /// Cancel a pending or running job.
+    /// Cancel a pending or running job. No-op on terminal (or already
+    /// retired) jobs.
     pub fn cancel(&mut self, id: JobId) {
-        let state = self.jobs[id.0 as usize].state;
+        let Some(state) = self.store.state_of(id) else {
+            return; // stale handle: the job is retired, hence terminal
+        };
         match state {
             JobState::Pending => {
-                if self.meta[id.0 as usize].held {
-                    // Parked job: clear the hold; index/heap entries are
-                    // pruned lazily (they check state + held on traversal).
-                    let m = &mut self.meta[id.0 as usize];
-                    m.held = false;
-                    m.unmet_deps = 0;
+                if self.store.hot(id).held {
+                    // Parked job: prune its residue from the begin set /
+                    // dependency index eagerly, so parked-then-cancelled
+                    // jobs cannot accumulate bookkeeping on long horizons.
+                    match self.store.cold(id).dependency.clone() {
+                        Some(Dependency::BeginAt(t)) => {
+                            self.begin_set.remove(&(t, id));
+                            let t_still_wanted = self
+                                .begin_set
+                                .range((t, JobId(0))..=(t, JobId(u64::MAX)))
+                                .next()
+                                .is_some();
+                            if !t_still_wanted {
+                                self.events.retract_sample(t);
+                            }
+                        }
+                        Some(Dependency::AfterOk(parents)) => {
+                            for d in parents {
+                                if let Some(children) = self.dep_children.get_mut(&d) {
+                                    children.retain(|&c| c != id);
+                                    if children.is_empty() {
+                                        self.dep_children.remove(&d);
+                                    }
+                                }
+                            }
+                        }
+                        // A held job always has a dependency (see `admit`);
+                        // nothing to prune otherwise.
+                        None => {}
+                    }
+                    let h = self.store.hot_mut(id);
+                    h.held = false;
+                    h.unmet_deps = 0;
                     self.held_count -= 1;
                 } else {
                     self.queue_remove(id);
@@ -424,20 +526,20 @@ impl Simulator {
             }
             JobState::Running => {
                 self.cluster.release(id);
-                let job = &self.jobs[id.0 as usize];
-                let used = (self.now - job.start_time.unwrap()) as f64
-                    * job.spec.cores as f64;
-                self.fairshare.charge(job.spec.user, used, self.now);
-                self.meta[id.0 as usize].finish_at = None;
+                let start = self.store.cold(id).start_time.unwrap();
+                let h = self.store.hot(id);
+                let used = (self.now - start) as f64 * h.cores as f64;
+                let user = h.user;
+                self.fairshare.charge(user, used, self.now);
+                self.store.hot_mut(id).finish_at = None;
             }
             _ => return, // already terminal
         }
-        let job = &mut self.jobs[id.0 as usize];
-        job.state = JobState::Cancelled;
-        job.end_time = Some(self.now);
+        self.store.hot_mut(id).state = JobState::Cancelled;
+        self.store.cold_mut(id).end_time = Some(self.now);
         self.metrics.cancelled += 1;
         self.need_pass = true;
-        if self.meta[id.0 as usize].foreground {
+        if self.store.hot(id).foreground {
             self.out.push_back(SimEvent::Cancelled {
                 id,
                 time: self.now,
@@ -446,6 +548,7 @@ impl Simulator {
         self.metrics
             .sample_utilization(self.now, self.cluster.utilization());
         self.cancel_broken_dependents(id);
+        self.maybe_retire(id);
     }
 
     /// Jobs whose `AfterOk` dependency can no longer be satisfied are
@@ -463,8 +566,8 @@ impl Simulator {
                     children
                         .into_iter()
                         .filter(|&c| {
-                            self.jobs[c.0 as usize].state == JobState::Pending
-                                && self.meta[c.0 as usize].held
+                            self.store.state_of(c) == Some(JobState::Pending)
+                                && self.store.hot(c).held
                         })
                         .collect()
                 })
@@ -473,25 +576,25 @@ impl Simulator {
                 .pending
                 .iter()
                 .copied()
-                .filter(|&p| {
-                    match &self.jobs[p.0 as usize].spec.dependency {
-                        Some(Dependency::AfterOk(deps)) => deps.iter().any(|&d| {
-                            d == failed
-                                && matches!(
-                                    self.jobs[d.0 as usize].state,
-                                    JobState::Cancelled | JobState::TimedOut
-                                )
-                        }),
-                        _ => false,
-                    }
+                .filter(|&p| match &self.store.cold(p).dependency {
+                    Some(Dependency::AfterOk(deps)) => deps.iter().any(|&d| {
+                        d == failed
+                            && matches!(
+                                self.store.state_of(d),
+                                Some(JobState::Cancelled) | Some(JobState::TimedOut)
+                            )
+                    }),
+                    _ => false,
                 })
                 .collect(),
         };
         // The pending queue / index are unordered storage; cancel in
         // submission order so the emitted event sequence is deterministic.
-        // (A child listing the same parent twice appears twice in the
-        // index — dedup so it is cancelled once, like the naive scan.)
-        broken.sort_unstable();
+        // Recycled ids no longer order by age, so sort by the registration
+        // sequence number. (A child listing the same parent twice appears
+        // twice in the index — dedup so it is cancelled once, like the
+        // naive scan; duplicates share a seq, so they sort adjacent.)
+        broken.sort_unstable_by_key(|&c| self.store.hot(c).seq);
         broken.dedup();
         for id in broken {
             self.cancel(id);
@@ -499,12 +602,12 @@ impl Simulator {
     }
 
     fn dependency_ready(&self, id: JobId) -> bool {
-        match &self.jobs[id.0 as usize].spec.dependency {
+        match &self.store.cold(id).dependency {
             None => true,
             Some(Dependency::BeginAt(t)) => self.now >= *t,
             Some(Dependency::AfterOk(deps)) => deps
                 .iter()
-                .all(|&d| self.jobs[d.0 as usize].state == JobState::Completed),
+                .all(|&d| self.store.state_of(d) == Some(JobState::Completed)),
         }
     }
 
@@ -513,44 +616,37 @@ impl Simulator {
     fn next_begin_at_scan(&self) -> Option<Time> {
         self.pending
             .iter()
-            .filter_map(|&p| match self.jobs[p.0 as usize].spec.dependency {
-                Some(Dependency::BeginAt(t)) if t > self.now => Some(t),
+            .filter_map(|&p| match &self.store.cold(p).dependency {
+                Some(Dependency::BeginAt(t)) if *t > self.now => Some(*t),
                 _ => None,
             })
             .min()
     }
 
     /// Move `--begin` jobs whose release time has arrived into the
-    /// eligible queue (incremental engine). Entries for jobs cancelled
-    /// while parked are discarded here.
+    /// eligible queue (incremental engine). Eager pruning on cancel means
+    /// every entry here is a live parked job.
     fn promote_due_begins(&mut self) {
-        while let Some(&Reverse((t, id))) = self.begin_heap.peek() {
+        while let Some(&(t, id)) = self.begin_set.iter().next() {
             if t > self.now {
                 break;
             }
-            self.begin_heap.pop();
-            if self.jobs[id.0 as usize].state == JobState::Pending
-                && self.meta[id.0 as usize].held
-            {
-                self.meta[id.0 as usize].held = false;
-                self.held_count -= 1;
-                self.queue_push(id);
-            }
+            self.begin_set.remove(&(t, id));
+            debug_assert!(
+                self.store.state_of(id) == Some(JobState::Pending)
+                    && self.store.hot(id).held,
+                "begin set held a non-parked job"
+            );
+            self.store.hot_mut(id).held = false;
+            self.held_count -= 1;
+            self.queue_push(id);
         }
     }
 
-    /// Earliest future `--begin` release (incremental engine): the heap
-    /// top, after lazily pruning entries whose job was cancelled.
-    fn next_begin_at_heap(&mut self) -> Option<Time> {
-        while let Some(&Reverse((t, id))) = self.begin_heap.peek() {
-            if self.jobs[id.0 as usize].state == JobState::Pending
-                && self.meta[id.0 as usize].held
-            {
-                return Some(t);
-            }
-            self.begin_heap.pop();
-        }
-        None
+    /// Earliest future `--begin` release (incremental engine): the first
+    /// entry of the eagerly-pruned release set.
+    fn next_begin_release(&self) -> Option<Time> {
+        self.begin_set.iter().next().map(|&(t, _)| t)
     }
 
     fn run_scheduling_pass(&mut self) {
@@ -571,16 +667,18 @@ impl Simulator {
         candidates.clear();
         match self.engine {
             // Eligible set is maintained incrementally: every queued job is
-            // a candidate, no dependency re-filtering.
+            // a candidate, no dependency re-filtering. The hot rows are
+            // dense, so this scan stays in cache.
             SchedEngine::Incremental => {
                 for &id in &self.pending {
-                    let j = &self.jobs[id.0 as usize];
+                    let h = self.store.hot(id);
                     candidates.push(Candidate {
                         id,
-                        user: j.spec.user,
-                        cores: j.spec.cores,
-                        time_limit: j.spec.time_limit,
-                        submit_time: j.submit_time,
+                        fs: h.fs_idx,
+                        cores: h.cores,
+                        time_limit: h.time_limit,
+                        submit_time: h.submit_time,
+                        seq: h.seq,
                     });
                 }
             }
@@ -589,13 +687,14 @@ impl Simulator {
                     if !self.dependency_ready(id) {
                         continue;
                     }
-                    let j = &self.jobs[id.0 as usize];
+                    let h = self.store.hot(id);
                     candidates.push(Candidate {
                         id,
-                        user: j.spec.user,
-                        cores: j.spec.cores,
-                        time_limit: j.spec.time_limit,
-                        submit_time: j.submit_time,
+                        fs: h.fs_idx,
+                        cores: h.cores,
+                        time_limit: h.time_limit,
+                        submit_time: h.submit_time,
+                        seq: h.seq,
                     });
                 }
             }
@@ -603,7 +702,7 @@ impl Simulator {
         // Wake the scheduler when a --begin job becomes eligible.
         match self.engine {
             SchedEngine::Incremental => {
-                if let Some(t) = self.next_begin_at_heap() {
+                if let Some(t) = self.next_begin_release() {
                     self.events.push_sample_dedup(t);
                 }
             }
@@ -633,20 +732,23 @@ impl Simulator {
 
     fn start_job(&mut self, id: JobId) {
         self.queue_remove(id);
-        let job = &mut self.jobs[id.0 as usize];
-        debug_assert_eq!(job.state, JobState::Pending);
-        job.state = JobState::Running;
-        job.start_time = Some(self.now);
-        let wait = (self.now - job.submit_time) as f64;
-        let cores = job.spec.cores;
-        let runs_for = job.spec.runtime.min(job.spec.time_limit);
-        let limit_end = self.now + job.spec.time_limit;
+        debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
+        let (cores, time_limit, submit_time, foreground) = {
+            let h = self.store.hot(id);
+            (h.cores, h.time_limit, h.submit_time, h.foreground)
+        };
+        let runtime = self.store.cold(id).runtime;
+        self.store.hot_mut(id).state = JobState::Running;
+        self.store.cold_mut(id).start_time = Some(self.now);
+        let wait = (self.now - submit_time) as f64;
+        let runs_for = runtime.min(time_limit);
+        let limit_end = self.now + time_limit;
         self.cluster.allocate(id, cores, self.now, limit_end);
         let finish = self.now + runs_for;
-        self.meta[id.0 as usize].finish_at = Some(finish);
+        self.store.hot_mut(id).finish_at = Some(finish);
         self.events.push(finish, EventKind::Finish(id));
         self.metrics.started += 1;
-        if self.meta[id.0 as usize].foreground {
+        if foreground {
             self.metrics.fg_wait.add(wait);
             self.out.push_back(SimEvent::Started {
                 id,
@@ -660,27 +762,25 @@ impl Simulator {
     }
 
     fn finish_job(&mut self, id: JobId) {
-        // Stale event guard (job cancelled/restarted since scheduling).
-        if self.jobs[id.0 as usize].state != JobState::Running
-            || self.meta[id.0 as usize].finish_at != Some(self.now)
+        // Stale event guard (job cancelled — possibly retired and its slot
+        // recycled — since scheduling; the generational id makes both
+        // cases detectable).
+        if self.store.state_of(id) != Some(JobState::Running)
+            || self.store.hot(id).finish_at != Some(self.now)
         {
             return;
         }
         self.cluster.release(id);
-        let timed_out;
-        {
-            let job = &mut self.jobs[id.0 as usize];
-            timed_out = job.spec.runtime > job.spec.time_limit;
-            job.state = if timed_out {
-                JobState::TimedOut
-            } else {
-                JobState::Completed
-            };
-            job.end_time = Some(self.now);
-        }
-        let job = &self.jobs[id.0 as usize];
+        let timed_out = self.store.cold(id).runtime > self.store.hot(id).time_limit;
+        self.store.hot_mut(id).state = if timed_out {
+            JobState::TimedOut
+        } else {
+            JobState::Completed
+        };
+        self.store.cold_mut(id).end_time = Some(self.now);
+        let view = self.store.view(id);
         self.fairshare
-            .charge(job.spec.user, job.core_seconds() as f64, self.now);
+            .charge(view.user, view.core_seconds() as f64, self.now);
         if timed_out {
             self.metrics.timed_out += 1;
         } else {
@@ -691,15 +791,15 @@ impl Simulator {
                 // parent completes (before the pass this finish triggers).
                 if let Some(children) = self.dep_children.remove(&id) {
                     for c in children {
-                        if self.jobs[c.0 as usize].state != JobState::Pending
-                            || !self.meta[c.0 as usize].held
+                        if self.store.state_of(c) != Some(JobState::Pending)
+                            || !self.store.hot(c).held
                         {
                             continue;
                         }
-                        let m = &mut self.meta[c.0 as usize];
-                        m.unmet_deps -= 1;
-                        if m.unmet_deps == 0 {
-                            m.held = false;
+                        let h = self.store.hot_mut(c);
+                        h.unmet_deps -= 1;
+                        if h.unmet_deps == 0 {
+                            h.held = false;
                             self.held_count -= 1;
                             self.queue_push(c);
                         }
@@ -708,7 +808,7 @@ impl Simulator {
             }
         }
         self.need_pass = true;
-        if self.meta[id.0 as usize].foreground {
+        if self.store.hot(id).foreground {
             let ev = if timed_out {
                 SimEvent::TimedOut { id, time: self.now }
             } else {
@@ -721,6 +821,43 @@ impl Simulator {
         if timed_out {
             self.cancel_broken_dependents(id);
         }
+        self.maybe_retire(id);
+    }
+
+    /// Background jobs retire the instant they reach a terminal state:
+    /// they emit no observable events and nothing holds their ids, so
+    /// their terminal events are trivially "drained". Foreground jobs stay
+    /// addressable until the caller releases them via
+    /// [`Simulator::retire`].
+    fn maybe_retire(&mut self, id: JobId) {
+        if !self.store.hot(id).foreground {
+            debug_assert!(!self.dep_children.contains_key(&id));
+            self.store.retire(id);
+        }
+    }
+
+    /// Release a terminal foreground job's arena slot for reuse. Call once
+    /// the job's terminal event has been consumed and no further
+    /// [`Simulator::job`] lookups are needed — afterwards the handle is
+    /// stale (lookups panic, `cancel` is a no-op) and the slot will be
+    /// recycled under a fresh generation.
+    ///
+    /// Returns `false` (and does nothing) when the job is not terminal,
+    /// when other jobs still hold index entries against it, or on the
+    /// naive oracle engine (which re-validates dependencies against parent
+    /// state and therefore must keep terminal jobs addressable).
+    pub fn retire(&mut self, id: JobId) -> bool {
+        if self.engine != SchedEngine::Incremental {
+            return false;
+        }
+        let Some(state) = self.store.state_of(id) else {
+            return false; // already retired
+        };
+        if !state.is_terminal() || self.dep_children.contains_key(&id) {
+            return false;
+        }
+        self.store.retire(id);
+        true
     }
 
     /// Process exactly one internal event. Returns false when the event heap
@@ -731,22 +868,36 @@ impl Simulator {
         };
         debug_assert!(time >= self.now, "time went backwards");
         self.now = time;
+        self.metrics.events += 1;
         match kind {
             EventKind::Submit(id) => {
                 // A submit_at job cancelled before its submission time
                 // stays cancelled (jobs register as Pending, so anything
-                // non-Pending here is already terminal — don't resurrect).
-                if self.jobs[id.0 as usize].state == JobState::Pending {
+                // non-Pending — or already retired — here is terminal;
+                // don't resurrect).
+                if self.store.state_of(id) == Some(JobState::Pending) {
                     self.enqueue(id);
                 }
             }
             EventKind::Finish(id) => self.finish_job(id),
             EventKind::TraceArrival => {
-                if let Some(trace) = self.trace.as_mut() {
-                    let spec = trace.next_job();
-                    let gap = trace.next_gap(self.now);
-                    let id = self.register(spec, false);
-                    self.enqueue(id);
+                if self.trace.is_some() {
+                    let (spec, gap, cap) = {
+                        let trace = self.trace.as_mut().unwrap();
+                        let spec = trace.next_job();
+                        let gap = trace.next_gap(self.now);
+                        (spec, gap, trace.profile().max_queued_jobs)
+                    };
+                    if cap > 0 && self.queue_depth() >= cap {
+                        // Admission control (Slurm MaxJobCount): drop the
+                        // arrival instead of growing the queue without
+                        // bound. The generator state advanced identically,
+                        // so engine equivalence is preserved.
+                        self.metrics.rejected += 1;
+                    } else {
+                        let id = self.register(spec, false);
+                        self.enqueue(id);
+                    }
                     self.events.push(self.now + gap, EventKind::TraceArrival);
                 }
             }
@@ -836,6 +987,7 @@ mod tests {
     fn single_job_runs_to_completion() {
         let mut sim = quiet_sim(10);
         let id = sim.submit(JobSpec::new(1, "j", 4, 100));
+        assert_eq!(sim.job_name(id), "j");
         let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
         assert_eq!(
             evs,
@@ -984,10 +1136,8 @@ mod tests {
         assert_eq!(sim.queue_depth(), 0);
     }
 
-    #[test]
-    fn background_trace_creates_waits() {
-        let mut cfg = SystemConfig::testbed(8, 4); // 32 cores
-        cfg.workload = crate::simulator::trace::WorkloadProfile {
+    fn oversubscribed_profile() -> crate::simulator::trace::WorkloadProfile {
+        crate::simulator::trace::WorkloadProfile {
             classes: vec![crate::simulator::trace::JobClass {
                 weight: 1.0,
                 cores_lo: 4,
@@ -1003,7 +1153,14 @@ mod tests {
             user_pool: 8,
             backlog_factor: 0.5,
             initial_user_usage: 0.0,
-        };
+            max_queued_jobs: 0,
+        }
+    }
+
+    #[test]
+    fn background_trace_creates_waits() {
+        let mut cfg = SystemConfig::testbed(8, 4); // 32 cores
+        cfg.workload = oversubscribed_profile();
         let mut sim = Simulator::new(cfg, 7);
         sim.run_until(48 * 3600);
         assert!(sim.metrics.started > 50, "bg jobs should run");
@@ -1012,6 +1169,136 @@ mod tests {
             "oversubscribed machine must queue"
         );
         assert!(sim.metrics.mean_utilization(sim.now()) > 0.5);
+    }
+
+    #[test]
+    fn background_jobs_retire_and_recycle_slots() {
+        let mut cfg = SystemConfig::testbed(8, 4);
+        cfg.workload = oversubscribed_profile();
+        let mut sim = Simulator::new(cfg, 7);
+        sim.run_until(48 * 3600);
+        assert!(sim.metrics.started > 50);
+        assert!(sim.jobs_recycled() > 0, "terminal bg jobs must recycle");
+        // No foreground jobs: everything live is either queued or running,
+        // i.e. terminal background jobs never linger in the arena.
+        assert_eq!(
+            sim.live_jobs(),
+            sim.queue_depth() + sim.cluster().running_count()
+        );
+        assert!(
+            sim.metrics.live_jobs_peak < sim.metrics.started + sim.metrics.rejected + 1000,
+            "peak live bounded"
+        );
+        assert!(sim.memory_bytes_estimate() > 0);
+    }
+
+    #[test]
+    fn foreground_retire_recycles_slot_with_new_generation() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 10));
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(a).state, JobState::Completed);
+        assert!(sim.retire(a));
+        assert!(!sim.retire(a), "second retire is a no-op");
+        let b = sim.submit(JobSpec::new(1, "b", 4, 10));
+        assert_eq!(b.slot(), a.slot(), "slot recycled");
+        assert_eq!(b.generation(), a.generation() + 1);
+        assert_ne!(a, b);
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(b).state, JobState::Completed);
+        assert_eq!(sim.jobs_recycled(), 1);
+        // The stale handle is inert, not dangerous.
+        sim.cancel(a);
+        assert_eq!(sim.job(b).state, JobState::Completed);
+    }
+
+    #[test]
+    #[should_panic(expected = "retired or unknown")]
+    fn retired_job_lookup_panics() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 1, 10));
+        while sim.step().is_some() {}
+        sim.retire(a);
+        let _ = sim.job(a);
+    }
+
+    #[test]
+    fn retire_refuses_non_terminal_jobs() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 100).with_limit(100));
+        let b = sim.submit(JobSpec::new(1, "b", 4, 10));
+        sim.run_until(0);
+        assert!(!sim.retire(a), "running job must not retire");
+        assert!(!sim.retire(b), "pending job must not retire");
+        while sim.step().is_some() {}
+        assert!(sim.retire(a));
+        assert!(sim.retire(b));
+    }
+
+    #[test]
+    fn cancel_prunes_begin_set_and_sample_dedup_eagerly() {
+        let mut sim = quiet_sim(4);
+        let id = sim.submit(
+            JobSpec::new(1, "b", 1, 10).with_dependency(Dependency::BeginAt(500)),
+        );
+        sim.run_until(0); // flush the pass: schedules the t=500 wakeup
+        let (begins, _, _, samples) = sim.prune_stats();
+        assert_eq!(begins, 1);
+        assert_eq!(samples, 1);
+        sim.cancel(id);
+        let (begins, _, _, samples) = sim.prune_stats();
+        assert_eq!(begins, 0, "begin entry pruned on cancel");
+        assert_eq!(samples, 0, "sample-dedup entry retracted on cancel");
+        while sim.step().is_some() {}
+        assert_eq!(sim.queue_depth(), 0);
+    }
+
+    #[test]
+    fn cancel_prunes_dependency_index_eagerly() {
+        let mut sim = quiet_sim(10);
+        let gate = sim.submit(JobSpec::new(1, "gate", 10, 100).with_limit(100));
+        let child = sim.submit(
+            JobSpec::new(1, "c", 1, 10).with_dependency(Dependency::AfterOk(vec![gate])),
+        );
+        sim.run_until(0);
+        let (_, parents, entries, _) = sim.prune_stats();
+        assert_eq!((parents, entries), (1, 1));
+        sim.cancel(child);
+        let (_, parents, entries, _) = sim.prune_stats();
+        assert_eq!((parents, entries), (0, 0), "index pruned on child cancel");
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(gate).state, JobState::Completed);
+    }
+
+    #[test]
+    fn admission_cap_bounds_queue_depth() {
+        let mut cfg = SystemConfig::testbed(2, 2); // 4 cores
+        cfg.workload = crate::simulator::trace::WorkloadProfile {
+            classes: vec![crate::simulator::trace::JobClass {
+                weight: 1.0,
+                cores_lo: 1,
+                cores_hi: 2,
+                runtime_mu: 7.0,
+                runtime_sigma: 0.5,
+            }],
+            target_load: 3.0, // far more than the machine can drain
+            burstiness: 1.0,
+            regime_period: 0,
+            regime_lo: 1.0,
+            regime_hi: 1.0,
+            user_pool: 4,
+            backlog_factor: 0.0,
+            initial_user_usage: 0.0,
+            max_queued_jobs: 8,
+        };
+        let mut sim = Simulator::new(cfg, 11);
+        sim.run_until(48 * 3600);
+        assert!(sim.metrics.rejected > 0, "cap must reject arrivals");
+        assert!(sim.queue_depth() <= 8, "depth {} > cap", sim.queue_depth());
+        assert_eq!(
+            sim.live_jobs(),
+            sim.queue_depth() + sim.cluster().running_count()
+        );
     }
 
     #[test]
@@ -1110,6 +1397,18 @@ mod tests {
             }
         }
         assert_eq!(b_start, Some(100));
+    }
+
+    #[test]
+    fn interned_names_submit_without_alloc() {
+        let mut sim = quiet_sim(8);
+        let name = sim.intern_name("stage");
+        let a = sim.submit(JobSpec::new(1, name, 1, 10));
+        let b = sim.submit(JobSpec::new(2, name, 1, 10));
+        assert_eq!(sim.job_name(a), "stage");
+        assert_eq!(sim.job_name(b), "stage");
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(a).state, JobState::Completed);
     }
 
     #[test]

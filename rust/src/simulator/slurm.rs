@@ -41,13 +41,21 @@ impl Default for SchedConfig {
 }
 
 /// A pending, dependency-eligible job as seen by one scheduling pass.
+///
+/// Carries the *dense* fair-share account index (`fs`, from
+/// [`FairShare::ensure_user`]) so factor lookups are array reads, and the
+/// submission sequence number (`seq`) as the deterministic tie-break —
+/// arena recycling means [`JobId`] values no longer order by registration.
 #[derive(Clone, Copy, Debug)]
 pub struct Candidate {
     pub id: JobId,
-    pub user: u32,
+    /// Dense fair-share account index of the owning user.
+    pub fs: u32,
     pub cores: Cores,
     pub time_limit: Time,
     pub submit_time: Time,
+    /// Registration sequence (deterministic total order over submissions).
+    pub seq: u64,
 }
 
 /// Priority of one candidate (higher runs first).
@@ -68,15 +76,70 @@ pub struct PassResult {
     pub reservation: Option<(JobId, Time)>,
 }
 
+/// Sort key of one candidate within a pass: `(priority, submit_time, seq,
+/// index into the candidate slice)` — self-contained so the sort never
+/// chases back into the candidate array during comparisons.
+type OrderKey = (f64, Time, u64, u32);
+
+/// Priority-descending comparator with the deterministic tie-break
+/// (earlier submit, then earlier registration).
+#[inline]
+fn key_cmp(a: &OrderKey, b: &OrderKey) -> std::cmp::Ordering {
+    b.0.partial_cmp(&a.0)
+        .unwrap()
+        .then_with(|| a.1.cmp(&b.1))
+        .then_with(|| a.2.cmp(&b.2))
+}
+
 /// Reusable buffers for [`schedule_pass_with`]. The simulator owns one so
 /// steady-state passes sort in place instead of allocating a fresh priority
 /// vector (and tentative-start list) on every event.
 #[derive(Debug, Default)]
 pub struct PassScratch {
-    /// Priority-ordered candidates of the current pass.
-    order: Vec<(f64, Candidate)>,
+    /// Sort keys of the current pass.
+    order: Vec<OrderKey>,
     /// `(limit_end, cores)` of this pass's own tentative starts.
     tent: Vec<(Time, Cores)>,
+}
+
+/// Earliest time `want` cores are simultaneously free, merging live
+/// allocations (pre-sorted by the cluster's end-time index) with this
+/// pass's own tentative starts (`tent`, sorted). Returns the shadow time
+/// and the cores left over at that moment (`extra`, backfill headroom);
+/// `(Time::MAX, 0)` when the demand can never be met.
+fn earliest_fit(
+    cluster: &Cluster,
+    tent: &[(Time, Cores)],
+    now: Time,
+    mut free: Cores,
+    want: Cores,
+) -> (Time, Cores) {
+    if want <= free {
+        return (now, free - want);
+    }
+    let mut live = cluster.ends_iter().peekable();
+    let mut tents = tent.iter().copied().peekable();
+    loop {
+        let next = match (live.peek(), tents.peek()) {
+            (Some(&a), Some(&b)) => {
+                if a <= b {
+                    live.next()
+                } else {
+                    tents.next()
+                }
+            }
+            (Some(_), None) => live.next(),
+            (None, Some(_)) => tents.next(),
+            (None, None) => None,
+        };
+        let Some((t, c)) = next else {
+            return (Time::MAX, 0);
+        };
+        free += c;
+        if want <= free {
+            return (t, free - want);
+        }
+    }
 }
 
 /// One scheduling pass over the eligible queue (fresh scratch per call;
@@ -104,6 +167,10 @@ pub fn schedule_pass(
 /// Started jobs are *not* applied to `cluster` by this function — the caller
 /// (the simulator) applies state transitions — except internally the pass
 /// tracks hypothetical free cores so its own decisions are consistent.
+///
+/// Candidates must carry fair-share indices from the same `fairshare`
+/// ledger (the simulator resolves them at job registration; factors are
+/// computed order-independently since every account already exists).
 pub fn schedule_pass_with(
     cfg: &SchedConfig,
     cluster: &Cluster,
@@ -117,38 +184,52 @@ pub fn schedule_pass_with(
         return result;
     }
     let total = cluster.total_cores();
+    let mut free = cluster.free_cores();
 
-    // Register every candidate's account before computing any factor:
-    // `factor` lazily creates accounts, so registration order must not
-    // leak into the priorities (the pending queue is unordered storage).
-    // On the evaluated systems all accounts are pre-seeded at prefill /
-    // first submission, so this only matters for synthetic quiet-profile
-    // setups where a brand-new account can join a busy pass; there it
-    // trades the old order-dependent factors for order-independent ones.
-    for c in candidates {
-        fairshare.ensure_user(c.user, 1.0);
-    }
-
-    // Priority ordering (desc), deterministic tie-break on submit order/id.
+    // Priority keys (factor lookups are dense-array reads, cached per
+    // ledger generation).
     let order = &mut scratch.order;
     order.clear();
-    order.extend(candidates.iter().map(|c| {
-        let fsf = fairshare.factor(c.user, now);
-        (priority(cfg, fsf, c, now, total), *c)
+    order.extend(candidates.iter().enumerate().map(|(i, c)| {
+        let fsf = fairshare.factor_idx(c.fs, now);
+        (priority(cfg, fsf, c, now, total), c.submit_time, c.seq, i as u32)
     }));
-    order.sort_unstable_by(|a, b| {
-        b.0.partial_cmp(&a.0)
-            .unwrap()
-            .then_with(|| a.1.submit_time.cmp(&b.1.submit_time))
-            .then_with(|| a.1.id.cmp(&b.1.id))
-    });
 
-    let mut free = cluster.free_cores();
+    // Fast path: when no candidate fits in the free cores, the pass cannot
+    // start anything — FCFS blocks at the head and backfill has no cores
+    // to hand out. Skip the O(n log n) sort; the head-of-line reservation
+    // (the priority argmax) still comes from one linear scan, so the
+    // result is identical to the sorted path's.
+    let min_cores = candidates.iter().map(|c| c.cores).min().unwrap();
+    if min_cores > free {
+        let head_key = order
+            .iter()
+            .copied()
+            .reduce(|best, e| {
+                if key_cmp(&e, &best) == std::cmp::Ordering::Less {
+                    e
+                } else {
+                    best
+                }
+            })
+            .unwrap();
+        let head = &candidates[head_key.3 as usize];
+        let (shadow, _) = earliest_fit(cluster, &[], now, free, head.cores);
+        result.reservation = Some((head.id, shadow));
+        return result;
+    }
+
+    // Priority ordering (desc), deterministic tie-break on submit order.
+    order.sort_unstable_by(key_cmp);
+
     let mut i = 0;
 
     // FCFS phase: start head jobs while they fit.
-    while i < order.len() && order[i].1.cores <= free {
-        let cand = order[i].1;
+    while i < order.len() {
+        let cand = &candidates[order[i].3 as usize];
+        if cand.cores > free {
+            break;
+        }
         result.start.push(cand.id);
         free -= cand.cores;
         i += 1;
@@ -163,47 +244,23 @@ pub fn schedule_pass_with(
     // `(limit_end, cores)` from the cluster's end-time index; only the
     // pass's own tentative starts need sorting, and the merge stops as
     // soon as enough cores have freed up.
-    let head = order[i].1;
-    let (shadow, extra) = {
-        let tent = &mut scratch.tent;
-        tent.clear();
-        tent.extend(order[..i].iter().map(|(_, c)| (now + c.time_limit, c.cores)));
-        tent.sort_unstable();
-        let mut f = free;
-        let mut found = None;
-        if head.cores <= f {
-            found = Some((now, f - head.cores));
-        } else {
-            let mut live = cluster.ends_iter().peekable();
-            let mut tents = tent.iter().copied().peekable();
-            loop {
-                let next = match (live.peek(), tents.peek()) {
-                    (Some(&a), Some(&b)) => {
-                        if a <= b {
-                            live.next()
-                        } else {
-                            tents.next()
-                        }
-                    }
-                    (Some(_), None) => live.next(),
-                    (None, Some(_)) => tents.next(),
-                    (None, None) => None,
-                };
-                let Some((t, c)) = next else { break };
-                f += c;
-                if head.cores <= f {
-                    found = Some((t, f - head.cores));
-                    break;
-                }
-            }
-        }
-        found.unwrap_or((Time::MAX, 0))
-    };
+    let head = &candidates[order[i].3 as usize];
+    let tent = &mut scratch.tent;
+    tent.clear();
+    tent.extend(
+        order[..i]
+            .iter()
+            .map(|k| &candidates[k.3 as usize])
+            .map(|c| (now + c.time_limit, c.cores)),
+    );
+    tent.sort_unstable();
+    let (shadow, extra) = earliest_fit(cluster, tent, now, free, head.cores);
     result.reservation = Some((head.id, shadow));
 
     // Backfill phase: lower-priority jobs that cannot delay the reservation.
     let mut extra = extra;
-    for (_, cand) in order[i + 1..].iter().take(cfg.backfill_depth) {
+    for key in order[i + 1..].iter().take(cfg.backfill_depth) {
+        let cand = &candidates[key.3 as usize];
         if cand.cores > free {
             continue;
         }
@@ -224,13 +281,17 @@ pub fn schedule_pass_with(
 mod tests {
     use super::*;
 
-    fn cand(id: u64, cores: Cores, limit: Time, submit: Time) -> Candidate {
+    /// Register user `id` in the ledger and build a candidate for it
+    /// (`seq` mirrors `id`: tests submit in id order).
+    fn cand(fs: &mut FairShare, id: u64, cores: Cores, limit: Time, submit: Time) -> Candidate {
+        let idx = fs.ensure_user(id as u32, 1.0);
         Candidate {
             id: JobId(id),
-            user: id as u32,
+            fs: idx,
             cores,
             time_limit: limit,
             submit_time: submit,
+            seq: id,
         }
     }
 
@@ -238,7 +299,7 @@ mod tests {
     fn starts_everything_that_fits() {
         let cluster = Cluster::new(100);
         let mut fs = FairShare::new(1000);
-        let cands = [cand(1, 40, 100, 0), cand(2, 60, 100, 1)];
+        let cands = [cand(&mut fs, 1, 40, 100, 0), cand(&mut fs, 2, 60, 100, 1)];
         let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
         assert_eq!(r.start.len(), 2);
         assert!(r.reservation.is_none());
@@ -250,10 +311,29 @@ mod tests {
         cluster.allocate(JobId(99), 80, 0, 500);
         let mut fs = FairShare::new(1000);
         // Head (older ⇒ higher age, same everything else) wants 50 > 20 free.
-        let cands = [cand(1, 50, 100, 0)];
+        let cands = [cand(&mut fs, 1, 50, 100, 0)];
         let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
         assert!(r.start.is_empty());
         assert_eq!(r.reservation, Some((JobId(1), 500)));
+    }
+
+    #[test]
+    fn nothing_fits_fast_path_reports_priority_head() {
+        // Several blocked candidates: the reservation must go to the
+        // priority argmax (the widest job here — with equal fair-share
+        // and near-zero ages, the size factor dominates), exactly as the
+        // sorted slow path would decide.
+        let mut cluster = Cluster::new(100);
+        cluster.allocate(JobId(99), 90, 0, 700);
+        let mut fs = FairShare::new(1000);
+        let cands = [
+            cand(&mut fs, 1, 40, 100, 500),
+            cand(&mut fs, 2, 30, 100, 0),
+            cand(&mut fs, 3, 50, 100, 900), // widest → highest size factor
+        ];
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 1000);
+        assert!(r.start.is_empty(), "nothing fits in 10 free cores");
+        assert_eq!(r.reservation, Some((JobId(3), 700)));
     }
 
     #[test]
@@ -262,9 +342,9 @@ mod tests {
         cluster.allocate(JobId(99), 80, 0, 1000);
         let mut fs = FairShare::new(1000);
         // Give the head a clear priority edge via age.
-        let head = cand(1, 50, 400, 0); // blocked until t=1000
-        let small_ok = cand(2, 10, 900, 500); // 10+900*? ends 10+900 ≤ 1000? now=10 ⇒ 910 ≤ 1000 ✓
-        let small_too_long = cand(3, 25, 5000, 600); // would overlap shadow and exceed extra
+        let head = cand(&mut fs, 1, 50, 400, 0); // blocked until t=1000
+        let small_ok = cand(&mut fs, 2, 10, 900, 500); // 10+900 ends ≤ 1000 ✓
+        let small_too_long = cand(&mut fs, 3, 25, 5000, 600); // overlaps shadow, exceeds extra
         let r = schedule_pass(
             &SchedConfig::default(),
             &cluster,
@@ -281,9 +361,9 @@ mod tests {
         let mut cluster = Cluster::new(100);
         cluster.allocate(JobId(99), 70, 0, 1000);
         let mut fs = FairShare::new(1000);
-        let head = cand(1, 80, 400, 0); // needs 80: shadow at t=1000, extra = 100-80=20
-        let long_small = cand(2, 20, 100_000, 500); // fits in extra forever
-        let long_big = cand(3, 25, 100_000, 600); // exceeds extra and overlaps shadow
+        let head = cand(&mut fs, 1, 80, 400, 0); // needs 80: shadow at t=1000, extra = 100-80=20
+        let long_small = cand(&mut fs, 2, 20, 100_000, 500); // fits in extra forever
+        let long_big = cand(&mut fs, 3, 25, 100_000, 600); // exceeds extra and overlaps shadow
         let r = schedule_pass(
             &SchedConfig::default(),
             &cluster,
@@ -298,13 +378,10 @@ mod tests {
     fn priority_orders_by_fairshare() {
         let cluster = Cluster::new(10);
         let mut fs = FairShare::new(1_000_000);
-        fs.ensure_user(1, 1.0);
-        fs.ensure_user(2, 1.0);
-        fs.charge(1, 1e9, 0); // user 1 is a hog
         // Only room for one of the two identical jobs.
-        let a = cand(1, 10, 100, 0);
-        let mut b = cand(2, 10, 100, 0);
-        b.user = 2;
+        let a = cand(&mut fs, 1, 10, 100, 0);
+        let b = cand(&mut fs, 2, 10, 100, 0);
+        fs.charge(1, 1e9, 0); // user 1 is a hog
         let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 1);
         assert_eq!(r.start, vec![JobId(2)], "light user should win");
     }
@@ -312,7 +389,14 @@ mod tests {
     #[test]
     fn age_saturates() {
         let cfg = SchedConfig::default();
-        let c_old = cand(1, 1, 10, 0);
+        let c_old = Candidate {
+            id: JobId(1),
+            fs: 0,
+            cores: 1,
+            time_limit: 10,
+            submit_time: 0,
+            seq: 0,
+        };
         let p1 = priority(&cfg, 1.0, &c_old, cfg.max_age, 100);
         let p2 = priority(&cfg, 1.0, &c_old, cfg.max_age * 10, 100);
         assert!((p1 - p2).abs() < 1e-9);
@@ -324,11 +408,45 @@ mod tests {
         // A starts; B must wait for A's limit end (now+100).
         let cluster = Cluster::new(100);
         let mut fs = FairShare::new(1000);
-        let a = cand(1, 60, 100, 0);
-        let b = cand(2, 60, 500, 1);
+        let a = cand(&mut fs, 1, 60, 100, 0);
+        let b = cand(&mut fs, 2, 60, 500, 1);
         let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 0);
         assert_eq!(r.start, vec![JobId(1)]);
         assert_eq!(r.reservation, Some((JobId(2), 100)));
+    }
+
+    #[test]
+    fn seq_breaks_ties_not_id_value() {
+        // Two identical candidates (same user → same factor, same submit):
+        // the one registered first (lower seq) wins even though its JobId
+        // *value* is larger (a recycled high-generation id).
+        let cluster = Cluster::new(10);
+        let mut fs = FairShare::new(1000);
+        let idx = fs.ensure_user(1, 1.0);
+        let recycled = Candidate {
+            id: JobId::from_parts(0, 3), // big packed value
+            fs: idx,
+            cores: 10,
+            time_limit: 100,
+            submit_time: 0,
+            seq: 10,
+        };
+        let fresh = Candidate {
+            id: JobId::from_parts(5, 0), // small packed value
+            fs: idx,
+            cores: 10,
+            time_limit: 100,
+            submit_time: 0,
+            seq: 11,
+        };
+        let r = schedule_pass(
+            &SchedConfig::default(),
+            &cluster,
+            &mut fs,
+            &[fresh, recycled],
+            1,
+        );
+        assert_eq!(r.start, vec![JobId::from_parts(0, 3)], "lower seq first");
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! The job arena: a recycling, generational, hot/cold-split job store.
+//!
+//! Long-horizon simulations submit millions of jobs but only ever have a
+//! few thousand *live* (pending or running) at once. The store keeps the
+//! steady state memory-bounded and cache-friendly:
+//!
+//! * **Arena recycling** — terminal jobs are retired through a free list;
+//!   each slot carries a generation, bumped on retirement, so a recycled
+//!   slot issues a fresh [`JobId`] and stale handles are detected instead
+//!   of aliasing a new job.
+//! * **Hot/cold split** — the fields the scheduling pass scans on every
+//!   event ([`HotJob`]: state, user, cores, limit, submit time, queue
+//!   bookkeeping) live in one dense array; everything touched only at
+//!   lifecycle transitions ([`ColdJob`]: name, dependency, true runtime,
+//!   start/end times) lives in a parallel side table, keeping the hot scan
+//!   tight.
+//! * **Name interning** — job names are [`NameId`]s into a per-store
+//!   symbol table; background-trace and workflow-stage submissions (all
+//!   `&'static str` or recurring `format!` strings) stop allocating a
+//!   `String` per job.
+
+use crate::simulator::job::{Dependency, JobId, JobName, JobSpec, JobState, NameId};
+use crate::util::hash::FxHashMap;
+use crate::{Cores, Time};
+use std::sync::Arc;
+
+/// Per-store symbol table for job names. Each distinct name is allocated
+/// once and shared (`Arc<str>`) between the id→name vector and the
+/// name→id index; `Arc` rather than `Rc` because whole simulators cross
+/// thread boundaries in the `par_map` experiment fan-outs.
+#[derive(Debug, Default)]
+pub struct NameInterner {
+    names: Vec<Arc<str>>,
+    index: FxHashMap<Arc<str>, NameId>,
+    /// Total bytes of the interned string data.
+    bytes: usize,
+}
+
+impl NameInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern by reference: allocation-free when the name is already known
+    /// (the steady-state path for `"bg"` and recurring stage names).
+    pub fn intern(&mut self, name: &str) -> NameId {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = NameId(self.names.len() as u32);
+        let shared: Arc<str> = Arc::from(name);
+        self.names.push(Arc::clone(&shared));
+        self.index.insert(shared, id);
+        self.bytes += name.len();
+        id
+    }
+
+    pub fn resolve(&self, id: NameId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Approximate heap footprint of the table.
+    pub fn bytes_estimate(&self) -> usize {
+        self.bytes
+            + self.names.capacity() * std::mem::size_of::<Arc<str>>()
+            + self.index.capacity()
+                * (std::mem::size_of::<Arc<str>>() + std::mem::size_of::<NameId>())
+    }
+}
+
+/// Scheduler-hot job fields: everything the scheduling pass and the
+/// dependency engine touch per event, packed for a dense sequential scan.
+#[derive(Clone, Debug)]
+pub struct HotJob {
+    pub state: JobState,
+    /// Owning user (fair-share account id).
+    pub user: u32,
+    /// Dense fair-share account index (resolved once at registration so
+    /// the pass never hashes user ids).
+    pub fs_idx: u32,
+    pub cores: Cores,
+    pub time_limit: Time,
+    pub submit_time: Time,
+    /// Global registration sequence number: the deterministic submission
+    /// order that survives slot recycling (ids no longer order by age).
+    pub seq: u64,
+    /// Expected finish event time; guards against stale Finish events
+    /// after a cancel.
+    pub finish_at: Option<Time>,
+    /// Index in the pending queue while queued (O(1) swap-removal).
+    pub queue_pos: Option<u32>,
+    /// Unmet `AfterOk` parents (incremental engine; 0 once eligible).
+    pub unmet_deps: u32,
+    /// Parked in the dependency index / begin set rather than the
+    /// eligible queue (incremental engine).
+    pub held: bool,
+    pub foreground: bool,
+}
+
+/// Cold job fields: touched at submit/start/finish only, never during the
+/// scheduling scan.
+#[derive(Clone, Debug)]
+pub struct ColdJob {
+    pub name: NameId,
+    /// True service demand (the scheduler never sees this).
+    pub runtime: Time,
+    pub dependency: Option<Dependency>,
+    pub start_time: Option<Time>,
+    pub end_time: Option<Time>,
+}
+
+/// A point-in-time copy of one job's externally visible fields — what
+/// [`crate::simulator::Simulator::job`] hands to drivers and tests.
+#[derive(Clone, Copy, Debug)]
+pub struct JobView {
+    pub id: JobId,
+    pub state: JobState,
+    pub user: u32,
+    pub cores: Cores,
+    pub time_limit: Time,
+    /// True service demand (test/driver observability; the simulated
+    /// scheduler itself never reads it).
+    pub runtime: Time,
+    pub submit_time: Time,
+    pub start_time: Option<Time>,
+    pub end_time: Option<Time>,
+}
+
+impl JobView {
+    /// Queue waiting time (defined once started).
+    pub fn wait_time(&self) -> Option<Time> {
+        self.start_time.map(|s| s - self.submit_time)
+    }
+
+    /// Core-seconds actually charged (start..end × cores).
+    pub fn core_seconds(&self) -> i64 {
+        match (self.start_time, self.end_time) {
+            (Some(s), Some(e)) => (e - s) * self.cores as i64,
+            _ => 0,
+        }
+    }
+
+    /// Core-hours actually charged.
+    pub fn core_hours(&self) -> f64 {
+        self.core_seconds() as f64 / 3600.0
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.state.is_terminal()
+    }
+}
+
+/// The recycling job arena (see module docs).
+#[derive(Debug, Default)]
+pub struct JobStore {
+    hot: Vec<HotJob>,
+    cold: Vec<ColdJob>,
+    gen: Vec<u32>,
+    occupied: Vec<bool>,
+    /// Retired slots available for reuse (LIFO).
+    free: Vec<u32>,
+    live: usize,
+    next_seq: u64,
+    recycled: u64,
+    pub names: NameInterner,
+}
+
+impl JobStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a job; recycles a retired slot when one is free. `fs_idx`
+    /// is the dense fair-share account index for `spec.user`.
+    pub fn insert(
+        &mut self,
+        spec: JobSpec,
+        submit_time: Time,
+        foreground: bool,
+        fs_idx: u32,
+    ) -> JobId {
+        let name = match &spec.name {
+            JobName::Static(s) => self.names.intern(s),
+            JobName::Owned(s) => self.names.intern(s),
+            JobName::Interned(id) => {
+                assert!(
+                    (id.0 as usize) < self.names.len(),
+                    "NameId {} not in this simulator's interner",
+                    id.0
+                );
+                *id
+            }
+        };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let hot = HotJob {
+            state: JobState::Pending,
+            user: spec.user,
+            fs_idx,
+            cores: spec.cores,
+            time_limit: spec.time_limit,
+            submit_time,
+            seq,
+            finish_at: None,
+            queue_pos: None,
+            unmet_deps: 0,
+            held: false,
+            foreground,
+        };
+        let cold = ColdJob {
+            name,
+            runtime: spec.runtime,
+            dependency: spec.dependency,
+            start_time: None,
+            end_time: None,
+        };
+        self.live += 1;
+        if let Some(slot) = self.free.pop() {
+            let s = slot as usize;
+            self.hot[s] = hot;
+            self.cold[s] = cold;
+            self.occupied[s] = true;
+            self.recycled += 1;
+            JobId::from_parts(slot, self.gen[s])
+        } else {
+            let slot = self.hot.len() as u32;
+            self.hot.push(hot);
+            self.cold.push(cold);
+            self.gen.push(0);
+            self.occupied.push(true);
+            JobId::from_parts(slot, 0)
+        }
+    }
+
+    /// Retire a terminal job: bump the slot generation (invalidating every
+    /// outstanding handle), drop per-job heap residue (the dependency
+    /// list) and put the slot on the free list.
+    pub fn retire(&mut self, id: JobId) {
+        let s = id.slot();
+        assert!(self.is_live(id), "retire of stale/unknown {id:?}");
+        assert!(
+            self.hot[s].state.is_terminal(),
+            "retire of non-terminal {id:?}"
+        );
+        self.cold[s].dependency = None;
+        self.occupied[s] = false;
+        self.gen[s] = self.gen[s].wrapping_add(1);
+        self.free.push(s as u32);
+        self.live -= 1;
+    }
+
+    /// Does `id` name a currently-stored job (right slot generation)?
+    #[inline]
+    pub fn is_live(&self, id: JobId) -> bool {
+        let s = id.slot();
+        s < self.hot.len() && self.occupied[s] && self.gen[s] == id.generation()
+    }
+
+    /// State of `id`, or `None` when the handle is stale (job retired) or
+    /// unknown.
+    #[inline]
+    pub fn state_of(&self, id: JobId) -> Option<JobState> {
+        if self.is_live(id) {
+            Some(self.hot[id.slot()].state)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn check(&self, id: JobId) {
+        assert!(
+            self.is_live(id),
+            "job {id:?} (slot {}, gen {}) is retired or unknown",
+            id.slot(),
+            id.generation()
+        );
+    }
+
+    #[inline]
+    pub fn hot(&self, id: JobId) -> &HotJob {
+        self.check(id);
+        &self.hot[id.slot()]
+    }
+
+    #[inline]
+    pub fn hot_mut(&mut self, id: JobId) -> &mut HotJob {
+        self.check(id);
+        &mut self.hot[id.slot()]
+    }
+
+    #[inline]
+    pub fn cold(&self, id: JobId) -> &ColdJob {
+        self.check(id);
+        &self.cold[id.slot()]
+    }
+
+    #[inline]
+    pub fn cold_mut(&mut self, id: JobId) -> &mut ColdJob {
+        self.check(id);
+        &mut self.cold[id.slot()]
+    }
+
+    /// Hot row by raw slot — the scheduling pass iterates the pending
+    /// queue's slots directly after the ids were validated on entry.
+    #[inline]
+    pub fn hot_slot(&self, slot: usize) -> &HotJob {
+        &self.hot[slot]
+    }
+
+    /// Assembled external view of one job (panics on stale handles).
+    pub fn view(&self, id: JobId) -> JobView {
+        self.check(id);
+        let s = id.slot();
+        let (h, c) = (&self.hot[s], &self.cold[s]);
+        JobView {
+            id,
+            state: h.state,
+            user: h.user,
+            cores: h.cores,
+            time_limit: h.time_limit,
+            runtime: c.runtime,
+            submit_time: h.submit_time,
+            start_time: c.start_time,
+            end_time: c.end_time,
+        }
+    }
+
+    /// Resolved name of one job.
+    pub fn name(&self, id: JobId) -> &str {
+        self.names.resolve(self.cold(id).name)
+    }
+
+    /// Jobs currently stored (non-retired).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Arena slots ever allocated (the high-water mark of live jobs).
+    pub fn capacity(&self) -> usize {
+        self.hot.len()
+    }
+
+    /// Jobs registered over the store's lifetime.
+    pub fn total_registered(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Inserts that reused a retired slot.
+    pub fn recycled(&self) -> u64 {
+        self.recycled
+    }
+
+    /// Approximate heap footprint of the arena + symbol table. Dependency
+    /// `Vec`s are counted at their live lengths.
+    pub fn bytes_estimate(&self) -> usize {
+        use std::mem::size_of;
+        let per_slot = size_of::<HotJob>()
+            + size_of::<ColdJob>()
+            + size_of::<u32>()
+            + size_of::<bool>();
+        let deps: usize = self
+            .cold
+            .iter()
+            .map(|c| match &c.dependency {
+                Some(Dependency::AfterOk(v)) => v.capacity() * size_of::<JobId>(),
+                _ => 0,
+            })
+            .sum();
+        self.hot.capacity() * per_slot
+            + self.free.capacity() * size_of::<u32>()
+            + deps
+            + self.names.bytes_estimate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(user: u32, name: &'static str, cores: Cores, runtime: Time) -> JobSpec {
+        JobSpec::new(user, name, cores, runtime)
+    }
+
+    #[test]
+    fn insert_and_view_roundtrip() {
+        let mut st = JobStore::new();
+        let id = st.insert(spec(1, "x", 10, 100), 50, true, 0);
+        assert_eq!(id, JobId(0));
+        let v = st.view(id);
+        assert_eq!(v.state, JobState::Pending);
+        assert_eq!(v.user, 1);
+        assert_eq!(v.cores, 10);
+        assert_eq!(v.submit_time, 50);
+        assert_eq!(v.wait_time(), None);
+        assert_eq!(v.core_seconds(), 0);
+        assert_eq!(st.name(id), "x");
+        assert_eq!(st.live(), 1);
+    }
+
+    #[test]
+    fn wait_and_charge_accounting() {
+        let mut st = JobStore::new();
+        let id = st.insert(spec(1, "x", 10, 100), 50, true, 0);
+        st.cold_mut(id).start_time = Some(80);
+        st.cold_mut(id).end_time = Some(180);
+        st.hot_mut(id).state = JobState::Completed;
+        let v = st.view(id);
+        assert_eq!(v.wait_time(), Some(30));
+        assert_eq!(v.core_seconds(), 1000);
+        assert!((v.core_hours() - 1000.0 / 3600.0).abs() < 1e-12);
+        assert!(v.is_terminal());
+    }
+
+    #[test]
+    fn retirement_recycles_slots_with_fresh_generation() {
+        let mut st = JobStore::new();
+        let a = st.insert(spec(1, "a", 1, 10), 0, false, 0);
+        let b = st.insert(spec(1, "b", 1, 10), 0, false, 0);
+        assert_eq!((a.slot(), b.slot()), (0, 1));
+        st.hot_mut(a).state = JobState::Completed;
+        st.retire(a);
+        assert_eq!(st.live(), 1);
+        assert!(!st.is_live(a), "retired handle is stale");
+        assert_eq!(st.state_of(a), None);
+        assert!(st.is_live(b));
+        let c = st.insert(spec(2, "c", 2, 20), 5, false, 0);
+        assert_eq!(c.slot(), 0, "slot recycled");
+        assert_eq!(c.generation(), 1, "generation bumped");
+        assert_ne!(c, a);
+        assert_eq!(st.view(c).user, 2);
+        assert_eq!(st.state_of(a), None, "old handle still stale");
+        assert_eq!(st.recycled(), 1);
+        assert_eq!(st.capacity(), 2, "no growth past the live peak");
+        assert_eq!(st.total_registered(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "retired or unknown")]
+    fn stale_handle_panics_on_access() {
+        let mut st = JobStore::new();
+        let a = st.insert(spec(1, "a", 1, 10), 0, false, 0);
+        st.hot_mut(a).state = JobState::Cancelled;
+        st.retire(a);
+        let _ = st.view(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-terminal")]
+    fn retiring_live_job_panics() {
+        let mut st = JobStore::new();
+        let a = st.insert(spec(1, "a", 1, 10), 0, false, 0);
+        st.retire(a);
+    }
+
+    #[test]
+    fn interner_dedupes_names() {
+        let mut st = JobStore::new();
+        let a = st.insert(spec(1, "bg", 1, 10), 0, false, 0);
+        let b = st.insert(spec(2, "bg", 1, 10), 0, false, 0);
+        let c = st.insert(JobSpec::new(3, String::from("bg"), 1, 10), 0, false, 0);
+        assert_eq!(st.cold(a).name, st.cold(b).name);
+        assert_eq!(st.cold(a).name, st.cold(c).name);
+        assert_eq!(st.names.len(), 1);
+        // Pre-interned ids are accepted as-is.
+        let pre = st.names.intern("stage-0");
+        let d = st.insert(JobSpec::new(4, pre, 1, 10), 0, false, 0);
+        assert_eq!(st.name(d), "stage-0");
+        assert_eq!(st.names.len(), 2);
+    }
+
+    #[test]
+    fn bytes_estimate_tracks_capacity_not_throughput() {
+        let mut st = JobStore::new();
+        for i in 0..1000 {
+            let id = st.insert(spec(1, "bg", 1, 10), i, false, 0);
+            st.hot_mut(id).state = JobState::Completed;
+            st.retire(id);
+        }
+        assert_eq!(st.capacity(), 1, "steady-state churn reuses one slot");
+        assert!(st.bytes_estimate() < 4096);
+        assert_eq!(st.total_registered(), 1000);
+        assert_eq!(st.live(), 0);
+    }
+
+    #[test]
+    fn seq_orders_by_registration_across_recycling() {
+        let mut st = JobStore::new();
+        let a = st.insert(spec(1, "a", 1, 10), 0, false, 0);
+        let b = st.insert(spec(1, "b", 1, 10), 0, false, 0);
+        st.hot_mut(b).state = JobState::Cancelled;
+        st.retire(b);
+        let c = st.insert(spec(1, "c", 1, 10), 0, false, 0);
+        // c recycled b's slot, so its id is NOT ordered after a's by value,
+        // but seq still orders registration.
+        assert!(st.hot(c).seq > st.hot(a).seq);
+    }
+}

@@ -53,6 +53,13 @@ pub struct WorkloadProfile {
     /// experiment accounts were active users ("1000s of core-hours", §5),
     /// so probes must not enter the queue with a pristine fair-share factor.
     pub initial_user_usage: f64,
+    /// Background-arrival admission cap (Slurm's `MaxJobCount`): a trace
+    /// arrival is rejected (dropped, counted in
+    /// `Metrics::rejected`) while the queue already holds this many
+    /// pending jobs. `0` disables the cap. Keeps the live-job set — and
+    /// the per-pass cost — bounded when a scenario offers more load than
+    /// the machine can drain (e.g. the 4× stress case in `perf_macro`).
+    pub max_queued_jobs: usize,
 }
 
 impl WorkloadProfile {
@@ -74,6 +81,7 @@ impl WorkloadProfile {
             user_pool: 160,
             backlog_factor: 1.2,
             initial_user_usage: 2.0e7,
+            max_queued_jobs: 50_000,
         }
     }
 
@@ -97,6 +105,7 @@ impl WorkloadProfile {
             user_pool: 90,
             backlog_factor: 3.0,
             initial_user_usage: 1.5e8,
+            max_queued_jobs: 50_000,
         }
     }
 
@@ -118,6 +127,7 @@ impl WorkloadProfile {
             user_pool: 4,
             backlog_factor: 0.0,
             initial_user_usage: 0.0,
+            max_queued_jobs: 0,
         }
     }
 

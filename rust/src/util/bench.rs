@@ -32,6 +32,10 @@ pub struct Bench {
     pub root_json: bool,
     /// `ASA_BENCH_SAMPLES` override (wins over `samples`, kills the budget).
     forced_samples: Option<usize>,
+    /// Free-form gauges attached to the group JSON under `"meta"` (e.g.
+    /// peak live jobs, bytes estimates) — facts about the run that are not
+    /// timings.
+    meta: Vec<(String, Json)>,
 }
 
 impl Bench {
@@ -48,7 +52,17 @@ impl Bench {
             budget_secs: 2.0,
             root_json: false,
             forced_samples,
+            meta: Vec::new(),
         }
+    }
+
+    /// Attach a non-timing gauge to the group JSON (`"meta"` object) and
+    /// echo it to the log. Later values win for a repeated key.
+    pub fn meta(&mut self, key: &str, value: impl Into<Json>) {
+        let value = value.into();
+        println!("  [meta] {key} = {}", value.to_string());
+        self.meta.retain(|(k, _)| k != key);
+        self.meta.push((key.to_string(), value));
     }
 
     fn run_case<T>(&mut self, label: &str, items: Option<u64>, f: &mut dyn FnMut() -> T) {
@@ -140,9 +154,17 @@ impl Bench {
             }
             arr.push(obj);
         }
-        Json::obj()
+        let mut doc = Json::obj()
             .with("group", self.name.as_str())
-            .with("results", Json::Arr(arr))
+            .with("results", Json::Arr(arr));
+        if !self.meta.is_empty() {
+            let mut m = Json::obj();
+            for (k, v) in &self.meta {
+                m.set(k, v.clone());
+            }
+            doc.set("meta", m);
+        }
+        doc
     }
 
     /// Write results as JSON under `target/bench-results/<group>.json` (and
@@ -206,6 +228,20 @@ mod tests {
         let doc = b.to_json();
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results[0].get("items").unwrap().as_i64(), Some(123));
+    }
+
+    #[test]
+    fn meta_gauges_land_in_group_json() {
+        let mut b = Bench::new("unit-test-group5");
+        b.samples = 1;
+        b.budget_secs = 0.0;
+        b.meta("live_jobs_peak", 123i64);
+        b.meta("live_jobs_peak", 456i64); // later value wins
+        b.meta("bytes", 789usize);
+        let doc = b.to_json();
+        let meta = doc.get("meta").expect("meta object present");
+        assert_eq!(meta.get("live_jobs_peak").unwrap().as_i64(), Some(456));
+        assert_eq!(meta.get("bytes").unwrap().as_i64(), Some(789));
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod rng;
 pub mod stats;
 pub mod json;
 pub mod cli;
+pub mod hash;
 pub mod par;
 pub mod propcheck;
 pub mod bench;

@@ -170,6 +170,8 @@ fn concurrent_campaign_on_live_cluster() {
         seed: 13,
         settle: 4 * 3600,
         baseline: false,
+        horizon: 0,
+        retire: false,
     };
     let report = run_concurrent(&SystemConfig::hpc2n(), &opts);
     assert_eq!(report.cells.len(), 8);

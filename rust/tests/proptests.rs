@@ -324,9 +324,13 @@ fn prop_incremental_engine_matches_naive_oracle() {
 fn prop_incremental_engine_matches_oracle_under_background_trace() {
     // Same equivalence with a live background workload: trace arrivals,
     // prefill backlog and foreground probes must interleave identically.
+    // Background jobs retire (and their arena slots recycle) as they
+    // finish, so this also pins down that both engines hand out identical
+    // *recycled* JobIds — the ids are embedded in the compared streams.
     check("incremental == naive with background trace", 6, |g| {
         let seed = g.rng().next_u64();
         let horizon = 4 * 3600 + g.i64(0, 4 * 3600);
+        let cancel_at = g.i64(600, 3000);
         let run = |engine: SchedEngine| {
             let mut sim = Simulator::new_with_engine(
                 SystemConfig::testbed(16, 4),
@@ -334,23 +338,72 @@ fn prop_incremental_engine_matches_oracle_under_background_trace() {
                 engine,
             );
             let probe = sim.submit(JobSpec::new(1, "probe", 8, 120));
+            // Foreground churn interleaved with recycled background slots:
+            // a future submission and a cancel at a scripted moment.
+            let late = sim.submit_at(cancel_at + 200, JobSpec::new(2, "late", 4, 300));
+            let doomed = sim.submit(JobSpec::new(3, "doomed", 2, 10_000).with_limit(10_000));
+            sim.run_until(cancel_at);
+            sim.cancel(doomed);
             sim.run_until(horizon);
             let events = sim.drain_events();
+            let recycled = sim.jobs_recycled();
+            assert!(recycled > 0, "bg churn must recycle arena slots");
             let m = &sim.metrics;
             (
                 events,
-                sim.job(probe).state,
-                m.started,
-                m.completed,
-                m.cancelled,
-                m.timed_out,
-                m.bg_wait.count(),
-                m.bg_wait.mean().to_bits(),
-                m.mean_utilization(sim.now().max(1)).to_bits(),
-                sim.queue_depth(),
+                (
+                    sim.job(probe).state,
+                    sim.job(late).state,
+                    sim.job(doomed).state,
+                ),
+                (recycled, sim.live_jobs(), sim.queue_depth()),
+                (m.started, m.completed, m.cancelled, m.timed_out, m.rejected),
+                (
+                    m.bg_wait.count(),
+                    m.bg_wait.mean().to_bits(),
+                    m.mean_utilization(sim.now().max(1)).to_bits(),
+                ),
             )
         };
         assert_eq!(run(SchedEngine::Incremental), run(SchedEngine::Naive));
+    });
+}
+
+#[test]
+fn prop_live_jobs_stay_bounded_as_submissions_grow_100x() {
+    // The bounded-memory property behind arena retirement: growing the
+    // horizon (and with it total submissions) ~100x must not grow the
+    // peak live-job count with it — terminal background jobs leave the
+    // arena, so live jobs track machine occupancy + queue, not history.
+    check("live jobs bounded over 100x horizon growth", 3, |g| {
+        let seed = g.rng().next_u64();
+        let short_h = 2 * 3600;
+        let long_h = 100 * short_h;
+        let run = |horizon| {
+            let mut sim = Simulator::new(SystemConfig::testbed(8, 4), seed);
+            sim.run_until(horizon);
+            (
+                sim.jobs_registered(),
+                sim.metrics.live_jobs_peak,
+                sim.live_jobs(),
+            )
+        };
+        let (reg_short, peak_short, _) = run(short_h);
+        let (reg_long, peak_long, live_long) = run(long_h);
+        assert!(
+            reg_long >= reg_short * 20,
+            "horizon growth must multiply submissions (short {reg_short}, long {reg_long})"
+        );
+        // Peak live is a steady-state property: allow slack for burstiness
+        // but nothing near the 100x submission growth.
+        assert!(
+            peak_long <= peak_short * 4 + 64,
+            "live-job peak grew with history: short {peak_short}, long {peak_long}"
+        );
+        assert!(
+            (live_long as u64) <= peak_long,
+            "final live {live_long} above recorded peak {peak_long}"
+        );
     });
 }
 
@@ -396,6 +449,8 @@ fn prop_orchestrator_interleaving_is_deterministic() {
             seed: g.rng().next_u64(),
             settle: 0,
             baseline: false,
+            horizon: 0,
+            retire: g.bool(),
         };
         let system = SystemConfig::testbed(64, 28);
         let fingerprint = |r: &asa::experiments::concurrent::ConcurrentReport| {
