@@ -109,7 +109,24 @@ fn main() {
     b.meta("uppmax_1x_jobs_registered", s.registered as i64);
     b.meta("uppmax_1x_memory_bytes", s.memory_bytes);
 
-    // 2) 4× overload with admission cap: live jobs must stay bounded by
+    // 2) Partitioned two-centre domain: the cori/abisko split runs one
+    // scheduling pass + EASY shadow per partition over a shared event
+    // loop — this case tracks the per-pass cost of the partitioned path
+    // at the same month horizon as the flat machines above.
+    let twoc = SystemConfig::two_center();
+    let mut gauges: Option<TraceStats> = None;
+    b.case_throughput_of("sim: two-center partitioned background 1x (macro horizon)", || {
+        let s = background_trace(&twoc, horizon);
+        let events = s.events;
+        gauges.get_or_insert(s);
+        events
+    });
+    let s = gauges.take().expect("warmup ran");
+    b.meta("two_center_live_jobs_peak", s.live_jobs_peak as i64);
+    b.meta("two_center_jobs_registered", s.registered as i64);
+    b.meta("two_center_memory_bytes", s.memory_bytes);
+
+    // 3) 4× overload with admission cap: live jobs must stay bounded by
     // cap + machine occupancy, not by total submissions.
     let hot = overloaded(SystemConfig::hpc2n());
     let mut gauges: Option<TraceStats> = None;
@@ -126,7 +143,7 @@ fn main() {
     b.meta("hpc2n_4x_rejected", s.rejected as i64);
     b.meta("hpc2n_4x_memory_bytes", s.memory_bytes);
 
-    // 3) Month-horizon multi-tenant campaign: 24 ASA workflows spread over
+    // 4) Month-horizon multi-tenant campaign: 24 ASA workflows spread over
     // the window on the live hpc2n queue, completed workflows retired.
     let opts = month_campaign(horizon);
     let mut report = None;

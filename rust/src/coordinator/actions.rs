@@ -28,14 +28,26 @@ impl ActionGrid {
         grid
     }
 
-    /// A custom grid (must be strictly increasing and non-empty).
+    /// A custom grid. Validation happens at construction — an invalid
+    /// grid must fail *here* with a clear message, not panic later at
+    /// `values.last().unwrap()` deep inside a campaign run.
+    pub fn try_new(values: Vec<Time>) -> Result<Self, String> {
+        if values.is_empty() {
+            return Err("action grid must have at least one alternative".into());
+        }
+        if !values.windows(2).all(|w| w[0] < w[1]) {
+            return Err("action grid must be strictly increasing".into());
+        }
+        Ok(ActionGrid { values })
+    }
+
+    /// A custom grid (must be strictly increasing and non-empty); panics
+    /// with the [`ActionGrid::try_new`] message on invalid input.
     pub fn new(values: Vec<Time>) -> Self {
-        assert!(!values.is_empty());
-        assert!(
-            values.windows(2).all(|w| w[0] < w[1]),
-            "grid must be strictly increasing"
-        );
-        ActionGrid { values }
+        match Self::try_new(values) {
+            Ok(g) => g,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Small uniform grid for unit tests/simulations (e.g. Fig. 5 uses the
@@ -141,6 +153,22 @@ mod tests {
     #[should_panic(expected = "strictly increasing")]
     fn unsorted_grid_rejected() {
         ActionGrid::new(vec![5, 3]);
+    }
+
+    #[test]
+    fn empty_grid_rejected_at_construction() {
+        // The regression from the issue: an empty grid used to slip
+        // through to `values.last().unwrap()` mid-campaign.
+        let err = ActionGrid::try_new(vec![]).unwrap_err();
+        assert!(err.contains("at least one"), "clear message: {err}");
+        assert!(ActionGrid::try_new(vec![5, 3]).is_err());
+        assert!(ActionGrid::try_new(vec![1, 2, 3]).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one alternative")]
+    fn empty_grid_panics_with_clear_message() {
+        ActionGrid::new(vec![]);
     }
 
     #[test]

@@ -15,9 +15,50 @@
 
 use crate::coordinator::asa::{AsaConfig, AsaEstimator};
 use crate::coordinator::kernel::UpdateKernel;
+use crate::coordinator::state::{AsaStore, GeometryKey};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::Time;
+use crate::{Cores, Time};
+
+/// One candidate partition for a proactive submission: the partition's
+/// index in the simulator's partition list, the (partition, geometry)
+/// estimator key, and the stage width at that partition's node
+/// granularity.
+#[derive(Clone, Debug)]
+pub struct PartitionOption {
+    pub index: usize,
+    pub key: GeometryKey,
+    pub cores: Cores,
+}
+
+/// Partition-selection step: ASA learning *where* to submit as well as
+/// *when*. Among the eligible partitions, pick the one whose (partition,
+/// geometry) estimator currently expects the smallest wait; ties resolve
+/// to the earlier option, so selection is deterministic and costs no RNG
+/// draws (single-partition runs stay bit-identical to pre-partition ones).
+/// The comparison is read-only: unexplored keys are scored at the cold
+/// uniform-grid prior instead of materializing 0-observation banks in the
+/// store for options that are merely inspected.
+///
+/// The cold prior is the uniform mean of the action grid — an unexplored
+/// partition therefore looks *better* than any partition whose learned
+/// waits exceed that prior, which is what drives exploration away from
+/// congested queues without an explicit exploration schedule.
+///
+/// Returns the index **into `options`** of the chosen candidate.
+pub fn select_partition(store: &AsaStore, options: &[PartitionOption]) -> usize {
+    assert!(!options.is_empty(), "no eligible partition for submission");
+    let mut best = 0;
+    let mut best_wait = f64::INFINITY;
+    for (i, opt) in options.iter().enumerate() {
+        let expected = store.expected_wait_or_prior(&opt.key);
+        if expected < best_wait {
+            best_wait = expected;
+            best = i;
+        }
+    }
+    best
+}
 
 /// Observable queue state at submission time.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -227,6 +268,52 @@ mod tests {
         // rather than a cold uniform.
         let wt = est.expected_wait(SHALLOW);
         assert!((wt - 9000.0).abs() < 3000.0, "fallback={wt}");
+    }
+
+    #[test]
+    fn partition_selection_routes_to_learned_faster_queue() {
+        let mut store = AsaStore::new(cfg());
+        let mut k = PureRustKernel;
+        let mut rng = Rng::new(5);
+        let fast = GeometryKey::new_in("tc", "cori", 112);
+        let slow = GeometryKey::new_in("tc", "abisko", 112);
+        for _ in 0..60 {
+            let (a, _) = store.estimator(&fast).sample_wait(&mut rng);
+            store.estimator(&fast).observe(a, 60, &mut k, &mut rng);
+            let (a, _) = store.estimator(&slow).sample_wait(&mut rng);
+            store.estimator(&slow).observe(a, 40_000, &mut k, &mut rng);
+        }
+        let options = vec![
+            PartitionOption { index: 0, key: fast, cores: 112 },
+            PartitionOption { index: 1, key: slow, cores: 120 },
+        ];
+        assert_eq!(select_partition(&store, &options), 0);
+        // Reversed order: still the fast one.
+        let rev: Vec<PartitionOption> = options.iter().rev().cloned().collect();
+        assert_eq!(select_partition(&store, &rev), 1);
+    }
+
+    #[test]
+    fn partition_selection_explores_cold_queue_when_known_one_is_congested() {
+        let mut store = AsaStore::new(cfg());
+        let mut k = PureRustKernel;
+        let mut rng = Rng::new(6);
+        let congested = GeometryKey::new_in("tc", "cori", 112);
+        for _ in 0..60 {
+            let (a, _) = store.estimator(&congested).sample_wait(&mut rng);
+            store.estimator(&congested).observe(a, 60_000, &mut k, &mut rng);
+        }
+        let cold = GeometryKey::new_in("tc", "abisko", 112);
+        let options = vec![
+            PartitionOption { index: 0, key: congested, cores: 112 },
+            PartitionOption { index: 1, key: cold, cores: 120 },
+        ];
+        // The cold prior (uniform grid mean, ~6.7k s) undercuts the
+        // learned 60k-second congestion: the unexplored partition wins.
+        assert_eq!(select_partition(&store, &options), 1);
+        // And the inspection was read-only: no 0-observation bank was
+        // materialized for the cold option.
+        assert_eq!(store.len(), 1, "selection must not grow the store");
     }
 
     #[test]

@@ -101,20 +101,26 @@ impl ResourcePool {
         tid
     }
 
+    /// Best-fit placement in a single pass: the task's entry is looked up
+    /// once and the winning allocation is mutated through the very borrow
+    /// that proved it exists — no second `get_mut().unwrap()` that can
+    /// panic when a task was cancelled between queue drain and placement
+    /// (such stale queue entries simply return `false` here).
     fn place(&mut self, tid: TaskId) -> bool {
-        let need = self.tasks[&tid].cores;
+        let Some(task) = self.tasks.get_mut(&tid) else {
+            return false; // cancelled while queued; stale queue entry
+        };
+        let need = task.cores;
         // Best-fit: the allocation with the least free cores that still fits
         // (reduces fragmentation across stage allocations).
         let target = self
             .allocs
-            .iter()
+            .iter_mut()
             .filter(|(_, a)| a.free >= need)
-            .min_by_key(|(job, a)| (a.free, job.0))
-            .map(|(&job, _)| job);
+            .min_by_key(|(job, a)| (a.free, job.0));
         match target {
-            Some(job) => {
-                self.allocs.get_mut(&job).unwrap().free -= need;
-                let task = self.tasks.get_mut(&tid).unwrap();
+            Some((&job, alloc)) => {
+                alloc.free -= need;
                 task.placed_on = Some(job);
                 task.state = TaskState::Running;
                 true
@@ -127,7 +133,10 @@ impl ResourcePool {
         let mut remaining = Vec::new();
         let queue = std::mem::take(&mut self.queue);
         for tid in queue {
-            let state = self.tasks[&tid].state;
+            // Cancelled tasks may leave stale ids in the queue; drop them.
+            let Some(state) = self.tasks.get(&tid).map(|t| t.state) else {
+                continue;
+            };
             if matches!(state, TaskState::Queued | TaskState::Orphaned) && !self.place(tid) {
                 remaining.push(tid);
             }
@@ -163,6 +172,25 @@ impl ResourcePool {
         } else {
             None
         }
+    }
+
+    /// Cancel a task in any state and forget it. The task's id is purged
+    /// from the placement queue so `queued_tasks()` stays truthful; even
+    /// if a stale id slipped through, `place`/`drain_queue` tolerate
+    /// missing tasks instead of panicking (the issue's "cancelled between
+    /// queue drain and placement" path). Returns whether the task existed.
+    pub fn cancel(&mut self, tid: TaskId) -> bool {
+        let Some(task) = self.tasks.remove(&tid) else {
+            return false;
+        };
+        self.queue.retain(|&q| q != tid);
+        if let Some(job) = task.placed_on {
+            if let Some(alloc) = self.allocs.get_mut(&job) {
+                alloc.free += task.cores;
+            }
+            self.drain_queue();
+        }
+        true
     }
 
     pub fn state(&self, tid: TaskId) -> Option<TaskState> {
@@ -264,5 +292,38 @@ mod tests {
         let mut pool = ResourcePool::new();
         pool.register_allocation(JobId(1), 2);
         pool.register_allocation(JobId(1), 2);
+    }
+
+    #[test]
+    fn cancelled_queued_task_leaves_no_panic_path() {
+        // The issue's scenario: a task sits in the queue, gets cancelled,
+        // and a later capacity event drains the queue over its stale id.
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 2);
+        let running = pool.launch(2);
+        let queued = pool.launch(2);
+        assert_eq!(pool.state(queued), Some(TaskState::Queued));
+        assert!(pool.cancel(queued));
+        assert_eq!(pool.state(queued), None, "cancelled task is gone");
+        assert_eq!(pool.queued_tasks(), 0, "queue entry purged on cancel");
+        // Completing the running task drains the (now empty) queue — the
+        // stale-id path in place/drain_queue stays tolerant regardless.
+        pool.complete(running);
+        assert_eq!(pool.free_cores(), 2);
+        assert_eq!(pool.queued_tasks(), 0);
+        assert!(!pool.cancel(queued), "second cancel is a no-op");
+    }
+
+    #[test]
+    fn cancelling_running_task_frees_cores_and_migrates_queue() {
+        let mut pool = ResourcePool::new();
+        pool.register_allocation(JobId(1), 4);
+        let a = pool.launch(4);
+        let b = pool.launch(4);
+        assert_eq!(pool.state(b), Some(TaskState::Queued));
+        assert!(pool.cancel(a));
+        // The freed cores must immediately place the queued task.
+        assert_eq!(pool.state(b), Some(TaskState::Running));
+        assert_eq!(pool.free_cores(), 0);
     }
 }

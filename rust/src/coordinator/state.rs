@@ -2,18 +2,28 @@
 //!
 //! Paper §4.3: "Algorithm 1's state is kept across different runs … shared
 //! among the different workflow submissions", and §4.8/§5 report that the
-//! sharing is "in a per job-geometry basis". A geometry is (system, cores).
-//! The store persists to JSON so campaigns can be resumed and inspected.
+//! sharing is "in a per job-geometry basis". A geometry is (system, cores);
+//! on partitioned machines it is (system, partition, cores) — waits under
+//! the `debug` and `bigmem` queues of one centre, or under two whole
+//! centres, are different distributions, and one per-partition table each
+//! is exactly what makes ASA's estimates transferable across queue
+//! structures. The store persists to JSON so campaigns can be resumed and
+//! inspected.
 
 use crate::coordinator::asa::{AsaConfig, AsaEstimator};
 use crate::util::json::Json;
 use crate::Cores;
 use std::collections::BTreeMap;
 
-/// Estimator key: one learning state per (system, requested cores).
+/// Estimator key: one learning state per (system, partition, requested
+/// cores). `partition` is empty on unpartitioned systems, which keeps
+/// their tags (and persisted stores) identical to the pre-partition
+/// format.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct GeometryKey {
     pub system: String,
+    /// Partition name; empty = the machine's single anonymous partition.
+    pub partition: String,
     pub cores: Cores,
 }
 
@@ -21,18 +31,38 @@ impl GeometryKey {
     pub fn new(system: &str, cores: Cores) -> Self {
         GeometryKey {
             system: system.to_string(),
+            partition: String::new(),
             cores,
         }
     }
 
-    fn tag(&self) -> String {
-        format!("{}:{}", self.system, self.cores)
+    /// Key within a named partition of `system`.
+    pub fn new_in(system: &str, partition: &str, cores: Cores) -> Self {
+        GeometryKey {
+            system: system.to_string(),
+            partition: partition.to_string(),
+            cores,
+        }
+    }
+
+    /// `system:cores`, or `system/partition:cores` within a partition.
+    pub fn tag(&self) -> String {
+        if self.partition.is_empty() {
+            format!("{}:{}", self.system, self.cores)
+        } else {
+            format!("{}/{}:{}", self.system, self.partition, self.cores)
+        }
     }
 
     fn parse(tag: &str) -> Option<Self> {
-        let (system, cores) = tag.rsplit_once(':')?;
+        let (head, cores) = tag.rsplit_once(':')?;
+        let (system, partition) = match head.split_once('/') {
+            Some((s, p)) => (s, p),
+            None => (head, ""),
+        };
         Some(GeometryKey {
             system: system.to_string(),
+            partition: partition.to_string(),
             cores: cores.parse().ok()?,
         })
     }
@@ -66,6 +96,22 @@ impl AsaStore {
 
     pub fn get(&self, key: &GeometryKey) -> Option<&AsaEstimator> {
         self.map.get(key)
+    }
+
+    /// Expected wait for a key *without* mutating the store: the
+    /// estimator's current expectation, or — for a never-touched key —
+    /// the cold uniform-grid prior a fresh estimator would report.
+    /// Lets selection logic compare candidate geometries read-only
+    /// instead of materializing 0-observation banks for every option it
+    /// merely inspects.
+    pub fn expected_wait_or_prior(&self, key: &GeometryKey) -> f64 {
+        match self.map.get(key) {
+            Some(est) => est.expected_wait(),
+            None => {
+                let grid = &self.cfg.grid;
+                grid.values().iter().map(|&v| v as f64).sum::<f64>() / grid.len() as f64
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -135,8 +181,29 @@ mod tests {
     #[test]
     fn geometry_tags_round_trip() {
         let k = GeometryKey::new("hpc2n", 112);
+        assert_eq!(k.tag(), "hpc2n:112", "unpartitioned tag format unchanged");
         assert_eq!(GeometryKey::parse(&k.tag()), Some(k));
+        let p = GeometryKey::new_in("two-center", "abisko", 320);
+        assert_eq!(p.tag(), "two-center/abisko:320");
+        assert_eq!(GeometryKey::parse(&p.tag()), Some(p));
         assert!(GeometryKey::parse("no-cores").is_none());
+    }
+
+    #[test]
+    fn partitioned_keys_are_distinct_estimators() {
+        let mut store = AsaStore::new(AsaConfig::default());
+        let a = GeometryKey::new_in("tc", "cori", 112);
+        let b = GeometryKey::new_in("tc", "abisko", 112);
+        let flat = GeometryKey::new("tc", 112);
+        store.estimator(&a);
+        store.estimator(&b);
+        store.estimator(&flat);
+        assert_eq!(store.len(), 3, "partition is part of the key");
+        // Persisted form keys by the partition-qualified tags.
+        let dumped = store.to_json().to_string();
+        assert!(dumped.contains("tc/cori:112"));
+        assert!(dumped.contains("tc/abisko:112"));
+        assert!(dumped.contains("tc:112"));
     }
 
     #[test]

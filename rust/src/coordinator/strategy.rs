@@ -21,11 +21,12 @@
 //! the same order as the original blocking loop (the idle-machine unit
 //! tests below pin that equivalence).
 
+use crate::coordinator::contextual::{select_partition, PartitionOption};
 use crate::coordinator::driver::{DriverCtx, DriverOutcome, DriverStatus, StrategyDriver};
 use crate::coordinator::kernel::UpdateKernel;
 use crate::coordinator::pool::ResourcePool;
 use crate::coordinator::state::{AsaStore, GeometryKey};
-use crate::simulator::{Dependency, JobId, JobSpec, SimEvent, Simulator};
+use crate::simulator::{Dependency, JobId, JobSpec, PartitionId, SimEvent, Simulator};
 use crate::util::rng::Rng;
 use crate::workflow::spec::{StageRecord, WorkflowRun, WorkflowSpec};
 use crate::{Cores, Time};
@@ -63,7 +64,14 @@ struct StageCursor {
 enum AsaState {
     Idle,
     /// Stage 0 submitted plainly, awaiting its start.
-    Stage0 { job: JobId },
+    Stage0 {
+        job: JobId,
+        /// (partition, geometry) the stage was routed to, plus its width
+        /// and duration there.
+        key: GeometryKey,
+        cores: Cores,
+        d: Time,
+    },
     /// Stage `y` proactively submitted while stage `y−1` runs (Fig. 4).
     Pipeline {
         prev: StageCursor,
@@ -74,6 +82,10 @@ enum AsaState {
         d_y: Time,
         est_wait: Time,
         action: usize,
+        /// (partition, geometry) key stage `y` was routed to.
+        key_y: GeometryKey,
+        /// Partition index of stage `y` (for the naïve resubmission).
+        part_y: PartitionId,
         prev_end: Option<Time>,
         started_y: Option<Time>,
     },
@@ -115,6 +127,61 @@ impl AsaDriver {
         }
     }
 
+    /// Eligible (partition, geometry) options for stage `stage_idx`: one
+    /// per partition that can host the stage per the shared
+    /// [`crate::workflow::wms::eligible_partitions`] rule (capacity at
+    /// that partition's node granularity + QOS cap vs the stage limit) —
+    /// ASA and the baselines must agree on where a job *can* run. On a
+    /// single-partition machine this is exactly the pre-partition
+    /// geometry (empty partition name, machine-wide node size), with no
+    /// estimator-store access, so legacy runs replay bit-identically.
+    fn partition_options(&self, sim: &Simulator, stage_idx: usize) -> Vec<PartitionOption> {
+        let system = sim.config().name;
+        let stage = &self.wf.stages[stage_idx];
+        let parts = sim.partition_specs();
+        let opts: Vec<PartitionOption> = crate::workflow::wms::eligible_partitions(
+            sim,
+            |node_cores| stage.cores(self.scale, node_cores),
+            |node_cores| {
+                crate::workflow::wms::stage_limit(
+                    stage.duration(stage.cores(self.scale, node_cores)),
+                )
+            },
+        )
+        .map(|(i, cores)| PartitionOption {
+            index: i,
+            key: GeometryKey::new_in(system, parts[i].name, cores),
+            cores,
+        })
+        .collect();
+        assert!(
+            !opts.is_empty(),
+            "no partition fits stage {:?} of {:?} at scale {} (capacity or QOS cap)",
+            stage.name,
+            self.wf.name,
+            self.scale
+        );
+        opts
+    }
+
+    /// Pick a partition for stage `stage_idx`: the learned-fastest one
+    /// (see [`select_partition`]); trivially partition 0 on
+    /// single-partition machines, where no selection state is touched.
+    fn route_stage(
+        &self,
+        sim: &Simulator,
+        ctx: &mut DriverCtx,
+        stage_idx: usize,
+    ) -> PartitionOption {
+        let mut opts = self.partition_options(sim, stage_idx);
+        let choice = if opts.len() == 1 {
+            0
+        } else {
+            select_partition(&*ctx.store, &opts)
+        };
+        opts.swap_remove(choice)
+    }
+
     /// Sample the wait estimate for stage `y`, submit its resource-change
     /// request `â` seconds before the running stage's expected end, and
     /// enter the pipeline state. For the final transition (`y` past the
@@ -130,24 +197,24 @@ impl AsaDriver {
             self.state = AsaState::Final { prev };
             return DriverStatus::Running;
         }
-        let node_cores = sim.config().cores_per_node;
-        let system = sim.config().name;
+        let opt = self.route_stage(sim, ctx, y);
         let stage = &self.wf.stages[y];
-        let cores_y = stage.cores(self.scale, node_cores);
+        let cores_y = opt.cores;
         let d_y = stage.duration(cores_y);
-        let key = GeometryKey::new(system, cores_y);
-        let (action, est_wait) = ctx.store.estimator(&key).sample_wait(ctx.rng);
+        let (action, est_wait) = ctx.store.estimator(&opt.key).sample_wait(ctx.rng);
 
         // Submit the resource-change request â seconds before the expected
         // end of the running stage (Fig. 4).
         let submit_time = (prev.expected_end - est_wait).max(sim.now());
+        let part_y = PartitionId(opt.index as u32);
         let mut spec = JobSpec::new(
             self.user,
             format!("{}-s{y}-{}", self.wf.name, stage.name),
             cores_y,
             d_y,
         )
-        .with_limit(crate::workflow::wms::stage_limit(d_y));
+        .with_limit(crate::workflow::wms::stage_limit(d_y))
+        .with_partition(part_y);
         if !self.opts.naive {
             spec = spec.with_dependency(Dependency::AfterOk(vec![prev.job]));
         }
@@ -162,6 +229,8 @@ impl AsaDriver {
             d_y,
             est_wait,
             action,
+            key_y: opt.key,
+            part_y,
             prev_end: None,
             started_y: None,
         };
@@ -208,12 +277,13 @@ impl StrategyDriver for AsaDriver {
         }
     }
 
-    fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
-        // Stage 0: a plain submission (nothing to overlap with).
-        let node_cores = sim.config().cores_per_node;
+    fn begin(&mut self, sim: &mut Simulator, ctx: &mut DriverCtx) -> DriverStatus {
+        // Stage 0: a plain submission (nothing to overlap with), routed to
+        // the learned-fastest partition like every later stage.
         self.submitted_at = sim.now();
+        let opt = self.route_stage(sim, ctx, 0);
         let s0 = &self.wf.stages[0];
-        let cores0 = s0.cores(self.scale, node_cores);
+        let cores0 = opt.cores;
         let d0 = s0.duration(cores0);
         let job = sim.submit(
             JobSpec::new(
@@ -222,10 +292,16 @@ impl StrategyDriver for AsaDriver {
                 cores0,
                 d0,
             )
-            .with_limit(crate::workflow::wms::stage_limit(d0)),
+            .with_limit(crate::workflow::wms::stage_limit(d0))
+            .with_partition(PartitionId(opt.index as u32)),
         );
         self.new_jobs.push(job);
-        self.state = AsaState::Stage0 { job };
+        self.state = AsaState::Stage0 {
+            job,
+            key: opt.key,
+            cores: cores0,
+            d: d0,
+        };
         DriverStatus::Running
     }
 
@@ -235,30 +311,18 @@ impl StrategyDriver for AsaDriver {
         ctx: &mut DriverCtx,
         ev: SimEvent,
     ) -> DriverStatus {
-        let system = sim.config().name;
         match std::mem::replace(&mut self.state, AsaState::Idle) {
-            AsaState::Stage0 { job } => match ev {
+            AsaState::Stage0 { job, key, cores, d } => match ev {
                 SimEvent::Started { id, time } if id == job => {
-                    let node_cores = sim.config().cores_per_node;
-                    let s0 = &self.wf.stages[0];
-                    let cores0 = s0.cores(self.scale, node_cores);
-                    let d0 = s0.duration(cores0);
-                    self.pool.register_allocation(job, cores0);
-                    let task0 = self.pool.launch(cores0);
+                    self.pool.register_allocation(job, cores);
+                    let task0 = self.pool.launch(cores);
                     // Learn from the observed stage-0 wait as well.
-                    learn(
-                        ctx,
-                        system,
-                        cores0,
-                        None,
-                        time - self.submitted_at,
-                        &mut self.stats,
-                    );
+                    learn(ctx, &key, None, time - self.submitted_at, &mut self.stats);
                     let prev = StageCursor {
                         job,
-                        cores: cores0,
+                        cores,
                         started: time,
-                        expected_end: time + d0,
+                        expected_end: time + d,
                         submitted: self.submitted_at,
                         perceived_wait: time - self.submitted_at,
                         stage: 0,
@@ -270,7 +334,7 @@ impl StrategyDriver for AsaDriver {
                     panic!("job {id:?} cancelled while awaiting start")
                 }
                 _ => {
-                    self.state = AsaState::Stage0 { job };
+                    self.state = AsaState::Stage0 { job, key, cores, d };
                     DriverStatus::Running
                 }
             },
@@ -284,6 +348,8 @@ impl StrategyDriver for AsaDriver {
                 d_y,
                 est_wait,
                 action,
+                key_y,
+                part_y,
                 mut prev_end,
                 mut started_y,
             } => {
@@ -302,8 +368,7 @@ impl StrategyDriver for AsaDriver {
                                 // valid queue sample.)
                                 learn(
                                     ctx,
-                                    system,
-                                    cores_y,
+                                    &key_y,
                                     Some(action),
                                     time - submitted_y,
                                     &mut self.stats,
@@ -313,8 +378,9 @@ impl StrategyDriver for AsaDriver {
                                 let cancelled = sim.job(id);
                                 self.stats.overhead_core_secs += cancelled.core_seconds();
                                 self.stats.resubmissions += 1;
-                                // Resubmit to start after the running stage;
-                                // the re-queue is a fresh submission now.
+                                // Resubmit to start after the running stage
+                                // — on the same partition the grant came
+                                // from; the re-queue is a fresh submission.
                                 submitted_y = sim.now();
                                 job_y = sim.submit(
                                     JobSpec::new(
@@ -324,6 +390,7 @@ impl StrategyDriver for AsaDriver {
                                         d_y,
                                     )
                                     .with_limit(crate::workflow::wms::stage_limit(d_y))
+                                    .with_partition(part_y)
                                     .with_dependency(Dependency::BeginAt(prev.expected_end)),
                                 );
                                 self.new_jobs.push(job_y);
@@ -343,7 +410,7 @@ impl StrategyDriver for AsaDriver {
 
                     // Learn from the realised wait of the job that started.
                     let realised = sy - submitted_y;
-                    learn(ctx, system, cores_y, Some(action), realised, &mut self.stats);
+                    learn(ctx, &key_y, Some(action), realised, &mut self.stats);
                     self.stats.predictions.push((est_wait, realised));
 
                     // Close out the previous stage's record now that its
@@ -383,6 +450,8 @@ impl StrategyDriver for AsaDriver {
                         d_y,
                         est_wait,
                         action,
+                        key_y,
+                        part_y,
                         prev_end,
                         started_y,
                     };
@@ -448,19 +517,18 @@ pub fn run_asa(
     (out.run, out.asa_stats.expect("ASA driver always records stats"))
 }
 
-/// Feed one realised wait into the geometry's estimator. When `action` is
-/// `None` the wait was observed on a plain (non-proactive) submission; the
-/// estimator still learns by scoring the action it *would* have sampled.
+/// Feed one realised wait into the (partition, geometry) estimator. When
+/// `action` is `None` the wait was observed on a plain (non-proactive)
+/// submission; the estimator still learns by scoring the action it
+/// *would* have sampled.
 fn learn(
     ctx: &mut DriverCtx,
-    system: &str,
-    cores: Cores,
+    key: &GeometryKey,
     action: Option<usize>,
     wait: Time,
     _stats: &mut AsaRunStats,
 ) {
-    let key = GeometryKey::new(system, cores);
-    let est = ctx.store.estimator(&key);
+    let est = ctx.store.estimator(key);
     let a = action.unwrap_or_else(|| est.sample(ctx.rng));
     est.observe(a, wait, ctx.kernel, ctx.rng);
 }
@@ -546,6 +614,83 @@ mod tests {
             run.core_hours(),
             per_stage
         );
+    }
+
+    #[test]
+    fn asa_on_partitioned_machine_learns_per_partition_geometries() {
+        // Two-partition testbed: the run must complete, every stage must
+        // land on a real partition, and the estimator store must be keyed
+        // by (partition, geometry) — partition names in every tag.
+        let mut sim =
+            Simulator::new_empty(SystemConfig::testbed_partitioned(64, 28));
+        let mut store = AsaStore::new(AsaConfig {
+            policy: Policy::Tuned { rep: 50 },
+            ..AsaConfig::default()
+        });
+        let mut kernel = PureRustKernel;
+        let mut rng = Rng::new(31);
+        let (run, _) = run_asa(
+            &mut sim,
+            1,
+            &apps::montage(),
+            112,
+            &mut store,
+            &mut kernel,
+            &mut rng,
+            &AsaRunOpts::default(),
+        );
+        assert_eq!(run.stages.len(), 9);
+        assert_eq!(run.total_wait(), 0, "idle machine");
+        assert!(store.len() >= 1);
+        for key in store.keys() {
+            assert!(
+                key.partition == "regular" || key.partition == "debug",
+                "key {:?} must carry a partition",
+                key
+            );
+        }
+    }
+
+    #[test]
+    fn asa_routes_away_from_congested_partition() {
+        // Fill the `regular` partition with a long hog, then train the
+        // regular-partition estimator on huge waits; the next workflow's
+        // stage-0 routing must pick `debug`.
+        let mut sim =
+            Simulator::new_empty(SystemConfig::testbed_partitioned(8, 28)); // 224+224
+        let hog = sim.submit(JobSpec::new(9, "hog", 224, 500_000).with_limit(500_000));
+        sim.run_until(0);
+        let _ = sim.drain_events();
+        let mut store = AsaStore::new(AsaConfig {
+            policy: Policy::Tuned { rep: 50 },
+            ..AsaConfig::default()
+        });
+        let mut kernel = PureRustKernel;
+        let mut rng = Rng::new(7);
+        // Teach the store that `regular` waits forever at both blast
+        // geometries (56-core match stage, 28-core merge stage).
+        for cores in [56u32, 28] {
+            let key = GeometryKey::new_in("testbed2", "regular", cores);
+            for _ in 0..80 {
+                let (a, _) = store.estimator(&key).sample_wait(&mut rng);
+                store.estimator(&key).observe(a, 80_000, &mut kernel, &mut rng);
+            }
+        }
+        let (run, _) = run_asa(
+            &mut sim,
+            1,
+            &apps::blast(),
+            56,
+            &mut store,
+            &mut kernel,
+            &mut rng,
+            &AsaRunOpts::default(),
+        );
+        // The workflow completed despite `regular` being fully occupied —
+        // only possible if its stages routed to `debug`.
+        assert_eq!(run.total_wait(), 0, "blast must dodge the hog");
+        assert_eq!(sim.job(hog).state, crate::simulator::JobState::Running);
+        sim.cancel(hog);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use crate::coordinator::asa::AsaConfig;
 use crate::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use crate::coordinator::state::{AsaStore, GeometryKey};
-use crate::simulator::{JobSpec, SimEvent, Simulator, SystemConfig};
+use crate::simulator::{JobSpec, PartitionId, SimEvent, Simulator, SystemConfig};
 use crate::util::json::Json;
 use crate::util::par::par_map;
 use crate::util::rng::Rng;
@@ -23,11 +23,13 @@ use crate::util::stats::Summary;
 use crate::util::table::Table;
 use crate::{Cores, Time};
 
-/// Accuracy results for one (workflow, geometry).
+/// Accuracy results for one (workflow, partition, geometry).
 #[derive(Clone, Debug)]
 pub struct GeometryAccuracy {
     pub workflow: &'static str,
     pub system: &'static str,
+    /// Partition probed (empty on unpartitioned systems).
+    pub partition: &'static str,
     pub cores: Cores,
     pub real_wt: Summary,
     pub asa_wt: Summary,
@@ -49,26 +51,32 @@ impl GeometryAccuracy {
     }
 }
 
-/// Run the 60-probe experiment for one workflow geometry.
+/// Run the 60-probe experiment for one workflow geometry within one
+/// partition (`partition` is 0 — the whole machine — on unpartitioned
+/// systems, where the estimator key stays the legacy `system:cores`).
 ///
 /// `probe_runtime` approximates the workflow's first-stage duration so the
 /// probes have realistic backfill behaviour.
+#[allow(clippy::too_many_arguments)]
 pub fn probe_geometry(
     sim: &mut Simulator,
     store: &mut AsaStore,
     kernel: &mut dyn UpdateKernel,
     rng: &mut Rng,
     workflow: &'static str,
+    partition: u32,
     cores: Cores,
     probe_runtime: Time,
     probes: usize,
     spacing: Time,
 ) -> GeometryAccuracy {
     let system = sim.config().name;
-    let key = GeometryKey::new(system, cores);
+    let part_name = sim.partition_name(partition as usize);
+    let key = GeometryKey::new_in(system, part_name, cores);
     let mut acc = GeometryAccuracy {
         workflow,
         system,
+        partition: part_name,
         cores,
         real_wt: Summary::new(),
         asa_wt: Summary::new(),
@@ -127,12 +135,10 @@ pub fn probe_geometry(
             }
         }
         let (action, predicted) = store.estimator(&key).sample_wait(rng);
-        let id = sim.submit(JobSpec::new(
-            user,
-            format!("{workflow}-probe{i}"),
-            cores,
-            probe_runtime,
-        ));
+        let id = sim.submit(
+            JobSpec::new(user, format!("{workflow}-probe{i}"), cores, probe_runtime)
+                .with_partition(PartitionId(partition)),
+        );
         pending.insert(id, (action, predicted));
     }
     // Collect the tail.
@@ -156,8 +162,10 @@ pub fn probe_geometry(
 
 /// The geometry sweep for one (system, workflow): each scaling probed in
 /// turn with the estimator store persisting across scales (the paper keeps
-/// Algorithm 1's state across runs). Units are independent of each other —
-/// [`run_table2_par`] exploits exactly that.
+/// Algorithm 1's state across runs). On partitioned systems every scaling
+/// is probed once per partition that can host it, yielding one
+/// per-(partition, geometry) estimator table each. Units are independent
+/// of each other — [`run_table2_par`] exploits exactly that.
 pub fn table2_unit(
     system: &SystemConfig,
     workflow: &'static str,
@@ -169,32 +177,93 @@ pub fn table2_unit(
     let wf = crate::workflow::apps::by_name(workflow).unwrap();
     let mut store = AsaStore::new(AsaConfig::default());
     let mut out = Vec::new();
+    let parts = system.resolved_partitions();
     for &cores in scales {
         let mut sim = Simulator::new(system.clone(), seed ^ cores as u64);
         sim.run_until(6 * 3600);
         let mut rng = Rng::new(seed ^ 0xacc ^ cores as u64);
-        // The probed geometry is the workflow's peak job shape: its
-        // scaling in cores and its full execution time (these are
-        // the "job geometries related to each workflow", §4.8).
-        let probe_runtime = wf.total_exec(cores, system.cores_per_node);
-        // Warm-up (unrecorded): the paper's estimator state is kept
-        // across runs, so probes never start from a cold uniform.
-        probe_geometry(
-            &mut sim, &mut store, kernel, &mut rng, workflow, cores, probe_runtime, 10, 60,
-        );
-        out.push(probe_geometry(
-            &mut sim,
-            &mut store,
-            kernel,
-            &mut rng,
-            workflow,
-            cores,
-            probe_runtime,
-            probes,
-            60,
-        ));
+        for (p, part) in parts.iter().enumerate() {
+            if cores > part.total_cores() {
+                continue; // geometry cannot exist in this partition
+            }
+            // The probed geometry is the workflow's peak job shape: its
+            // scaling in cores and its full execution time at this
+            // partition's node granularity (these are the "job geometries
+            // related to each workflow", §4.8).
+            let probe_runtime = wf.total_exec(cores, part.cores_per_node);
+            // Warm-up (unrecorded): the paper's estimator state is kept
+            // across runs, so probes never start from a cold uniform.
+            probe_geometry(
+                &mut sim, &mut store, kernel, &mut rng, workflow, p as u32, cores,
+                probe_runtime, 10, 60,
+            );
+            out.push(probe_geometry(
+                &mut sim,
+                &mut store,
+                kernel,
+                &mut rng,
+                workflow,
+                p as u32,
+                cores,
+                probe_runtime,
+                probes,
+                60,
+            ));
+        }
     }
     out
+}
+
+/// Two-centre sweep scales: derived from the campaign preset's scalings
+/// (length included), so `table2 --system two-center` probes exactly the
+/// geometries the campaign runs and can never silently drift from them.
+pub const TWO_CENTER_SCALES: [Cores; crate::experiments::campaign::TWO_CENTER_SCALINGS.len()] = {
+    let src = crate::experiments::campaign::TWO_CENTER_SCALINGS;
+    let mut out = [0; crate::experiments::campaign::TWO_CENTER_SCALINGS.len()];
+    let mut i = 0;
+    while i < src.len() {
+        out[i] = src[i].1;
+        i += 1;
+    }
+    out
+};
+
+/// Table 2 over an arbitrary (possibly partitioned) system: all three
+/// workflows probed at the given scales, one row per (workflow,
+/// partition, geometry).
+pub fn run_table2_for(
+    system: &SystemConfig,
+    scales: &[Cores],
+    probes: usize,
+    seed: u64,
+    kernel: &mut dyn UpdateKernel,
+) -> Vec<GeometryAccuracy> {
+    let mut out = Vec::new();
+    for workflow in ["montage", "blast", "statistics"] {
+        out.extend(table2_unit(system, workflow, scales, probes, seed, kernel));
+    }
+    out
+}
+
+/// [`run_table2_for`] with one worker per workflow (each owning a
+/// pure-Rust kernel), bit-identical to the serial run in the same row
+/// order — the same fan-out shape as [`run_table2_par`]. The XLA-artifact
+/// kernel is a single mutable handle, so XLA runs must stay serial.
+pub fn run_table2_for_par(
+    system: &SystemConfig,
+    scales: &[Cores],
+    probes: usize,
+    seed: u64,
+) -> Vec<GeometryAccuracy> {
+    let workflows: Vec<&'static str> = vec!["montage", "blast", "statistics"];
+    let scales: Vec<Cores> = scales.to_vec();
+    par_map(workflows, |workflow| {
+        let mut kernel = PureRustKernel;
+        table2_unit(system, workflow, &scales, probes, seed, &mut kernel)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// The (system, workflow) unit list of the full Table-2 sweep.
@@ -234,15 +303,20 @@ pub fn run_table2_par(probes: usize, seed: u64) -> Vec<GeometryAccuracy> {
     .collect()
 }
 
-/// Render Table 2.
+/// Render Table 2 (one row per (workflow, partition, geometry)).
 pub fn table2(rows: &[GeometryAccuracy]) -> Table {
     let mut t = Table::new([
-        "workflow", "cores", "Real WT (h)", "ASA WT (h)", "ASA PWT (h)",
+        "workflow", "partition", "cores", "Real WT (h)", "ASA WT (h)", "ASA PWT (h)",
         "Hit %", "Miss %", "OH loss (h)",
     ]);
     for r in rows {
         t.row([
             r.workflow.to_string(),
+            if r.partition.is_empty() {
+                "-".to_string()
+            } else {
+                r.partition.to_string()
+            },
             format!("{}", r.cores),
             r.real_wt.pm(1),
             r.asa_wt.pm(1),
@@ -266,6 +340,7 @@ pub fn to_json(rows: &[GeometryAccuracy]) -> Json {
                 Json::obj()
                     .with("workflow", r.workflow)
                     .with("system", r.system)
+                    .with("partition", r.partition)
                     .with("cores", r.cores)
                     .with("real_wt_h", r.real_wt.mean())
                     .with("real_wt_std", r.real_wt.std())
@@ -292,13 +367,33 @@ mod tests {
         let mut kernel = PureRustKernel;
         let mut rng = Rng::new(6);
         let acc = probe_geometry(
-            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 28, 300, 10, 60,
+            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 0, 28, 300, 10, 60,
         );
         assert_eq!(acc.hits + acc.misses, 10);
         assert_eq!(acc.real_wt.count(), 10);
-        // Estimator accumulated the observations.
+        assert_eq!(acc.partition, "", "unpartitioned probes stay unlabelled");
+        // Estimator accumulated the observations under the legacy key.
         let key = GeometryKey::new("testbed", 28);
         assert_eq!(store.get(&key).unwrap().observations(), 10);
+    }
+
+    #[test]
+    fn partitioned_probes_produce_per_partition_rows_and_keys() {
+        let mut system = SystemConfig::testbed_partitioned(16, 28); // 448+448
+        system.workload = crate::simulator::trace::WorkloadProfile::quiet();
+        let mut kernel = PureRustKernel;
+        let rows = table2_unit(&system, "blast", &[28], 4, 5, &mut kernel);
+        // One row per partition at the probed geometry.
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].partition, "regular");
+        assert_eq!(rows[1].partition, "debug");
+        for r in &rows {
+            assert_eq!(r.hits + r.misses, 4);
+        }
+        let rendered = table2(&rows).render();
+        assert!(rendered.contains("regular") && rendered.contains("debug"));
+        let j = to_json(&rows);
+        assert!(j.to_string().contains("\"partition\""));
     }
 
     #[test]
@@ -314,7 +409,7 @@ mod tests {
         let mut kernel = PureRustKernel;
         let mut rng = Rng::new(9);
         let acc = probe_geometry(
-            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 14, 300, 20, 60,
+            &mut sim, &mut store, &mut kernel, &mut rng, "blast", 0, 14, 300, 20, 60,
         );
         // All probes got measured, and the estimator learned that this
         // machine's waits are tiny: its posterior concentrates at the grid
@@ -367,6 +462,7 @@ mod tests {
         let rows = vec![GeometryAccuracy {
             workflow: "montage",
             system: "hpc2n",
+            partition: "",
             cores: 28,
             real_wt: Summary::of(&[0.4, 0.5]),
             asa_wt: Summary::of(&[0.7, 0.6]),

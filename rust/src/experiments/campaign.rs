@@ -40,6 +40,13 @@ pub const SCALINGS: [(&str, Cores); 6] = [
     ("uppmax", 640),
 ];
 
+/// The two-centre preset's scalings (`--two-center`): every workflow runs
+/// on the partitioned `two-center` system, where strategies pick between
+/// the `cori` and `abisko` partitions per stage (ASA by learned wait,
+/// baselines first-fit).
+pub const TWO_CENTER_SCALINGS: [(&str, Cores); 3] =
+    [("two-center", 28), ("two-center", 112), ("two-center", 320)];
+
 /// Which strategy to drive.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -232,10 +239,19 @@ pub fn table1(cells: &[Cell]) -> Table {
         "workflow", "system", "cores", "strategy", "TWT (s)", "makespan (s)", "CH (h)",
     ]);
     let strategies = ["big-job", "per-stage", "asa"];
+    // The (system, scale) cells actually present, in first-seen order —
+    // works for the paper's SCALINGS and the two-center preset alike.
+    let mut scalings: Vec<(&str, Cores)> = Vec::new();
+    for c in cells {
+        let key = (c.run.system, c.run.scale);
+        if !scalings.contains(&key) {
+            scalings.push(key);
+        }
+    }
     for wf in ["montage", "blast", "statistics"] {
         // Collect per-strategy relative overheads for the normalized rows.
         let mut rel: std::collections::HashMap<&str, Vec<[f64; 3]>> = Default::default();
-        for &(sys, scale) in &SCALINGS {
+        for &(sys, scale) in &scalings {
             // Best value per metric across strategies at this scaling.
             let find = |strat: &str| {
                 cells.iter().find(|c| {
@@ -405,6 +421,21 @@ mod tests {
         assert_eq!(cells.len(), 2);
         assert!(cells.iter().all(|c| c.asa_stats.is_some()));
         assert_eq!(cells[0].run.workflow, "blast");
+    }
+
+    #[test]
+    fn campaign_unit_runs_end_to_end_on_partitioned_system() {
+        // All strategies over a two-partition machine: the full session
+        // path (warm-up, Big-Job/Per-Stage first-fit, ASA partition
+        // routing) must complete and produce one cell per strategy.
+        let cells = campaign_unit("testbed2", 56, &["blast"], false, 9);
+        assert_eq!(cells.len(), 3, "big-job, per-stage, asa");
+        for c in &cells {
+            assert_eq!(c.run.system, "testbed2");
+            assert!(!c.run.stages.is_empty());
+        }
+        let asa = cells.iter().find(|c| c.run.strategy == "asa").unwrap();
+        assert!(asa.asa_stats.is_some());
     }
 
     #[test]

@@ -138,6 +138,11 @@ pub struct ConcurrentReport {
     pub sim_events: u64,
     /// Approximate final heap footprint of the simulation state.
     pub memory_bytes: usize,
+    /// Per-(partition, geometry) estimator summary at session end:
+    /// `(key tag, observations, expected wait s)` — on partitioned systems
+    /// the tags carry partition names (`system/partition:cores`), making
+    /// ASA's "where to submit" learning inspectable per centre.
+    pub estimator_summary: Vec<(String, u64, f64)>,
 }
 
 /// Peak overlap of `[arrival, finished_at)` intervals. Finishes are
@@ -281,6 +286,13 @@ pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> Concurren
         });
     }
     let max_in_flight = max_in_flight(&cells);
+    let estimator_summary = store
+        .keys()
+        .map(|k| {
+            let est = store.get(k).expect("keyed estimator exists");
+            (k.tag(), est.observations(), est.expected_wait())
+        })
+        .collect();
     ConcurrentReport {
         cells,
         max_in_flight,
@@ -289,6 +301,7 @@ pub fn run_concurrent(system: &SystemConfig, opts: &ConcurrentOpts) -> Concurren
         total_registered: sim.jobs_registered(),
         sim_events: sim.metrics.events,
         memory_bytes: sim.memory_bytes_estimate(),
+        estimator_summary,
     }
 }
 
@@ -313,6 +326,15 @@ pub fn table(report: &ConcurrentReport) -> Table {
             slowdown,
             format!("{:.1}", c.run.core_hours()),
         ]);
+    }
+    t
+}
+
+/// Per-(partition, geometry) estimator state at session end.
+pub fn estimator_table(report: &ConcurrentReport) -> Table {
+    let mut t = Table::new(["geometry", "obs", "E[wait] (s)"]);
+    for (tag, obs, wait) in &report.estimator_summary {
+        t.row([tag.clone(), format!("{obs}"), format!("{wait:.0}")]);
     }
     t
 }
@@ -379,6 +401,16 @@ pub fn to_json(report: &ConcurrentReport) -> Json {
         }
         arr.push(obj);
     }
+    let estimators: Vec<Json> = report
+        .estimator_summary
+        .iter()
+        .map(|(tag, obs, wait)| {
+            Json::obj()
+                .with("geometry", tag.as_str())
+                .with("observations", *obs as i64)
+                .with("expected_wait", *wait)
+        })
+        .collect();
     Json::obj()
         .with("tenants", report.tenants)
         .with("max_in_flight", report.max_in_flight)
@@ -386,6 +418,7 @@ pub fn to_json(report: &ConcurrentReport) -> Json {
         .with("total_registered", report.total_registered as i64)
         .with("sim_events", report.sim_events as i64)
         .with("memory_bytes", report.memory_bytes as i64)
+        .with("estimators", Json::Arr(estimators))
         .with("cells", Json::Arr(arr))
 }
 
@@ -545,6 +578,41 @@ mod tests {
         assert!(spread > 3600, "arrivals must spread, got {spread}");
         let rendered = to_json(&report).to_string();
         assert!(rendered.contains("live_jobs_peak"));
+    }
+
+    #[test]
+    fn partitioned_concurrent_session_reports_per_partition_estimators() {
+        // The two-partition end-to-end path: ASA tenants on a partitioned
+        // machine, per-(partition, geometry) estimator tables in the
+        // report output.
+        let system = SystemConfig::testbed_partitioned(64, 28);
+        let opts = ConcurrentOpts {
+            tenants: 2,
+            per_tenant: 2,
+            mean_gap: 120,
+            scale: 56,
+            strategy: TenantStrategy::Uniform(Strategy::Asa),
+            seed: 23,
+            settle: 0,
+            baseline: false,
+            horizon: 0,
+            retire: false,
+        };
+        let report = run_concurrent(&system, &opts);
+        assert_eq!(report.cells.len(), 4);
+        assert!(!report.estimator_summary.is_empty());
+        for (tag, obs, _) in &report.estimator_summary {
+            assert!(
+                tag.contains("/regular:") || tag.contains("/debug:"),
+                "estimator tag {tag:?} must carry a partition"
+            );
+            // Partition selection is read-only, so every key in the store
+            // belongs to a geometry that was actually submitted + learned.
+            assert!(*obs > 0, "store must hold only learned keys, {tag:?} has 0");
+        }
+        let rendered = estimator_table(&report).render();
+        assert!(rendered.contains("testbed2/"));
+        assert!(to_json(&report).to_string().contains("estimators"));
     }
 
     #[test]

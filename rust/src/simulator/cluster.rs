@@ -114,6 +114,78 @@ impl Cluster {
     }
 }
 
+/// The machine as a set of named partitions (Slurm partitions / two whole
+/// centres), each an independent [`Cluster`] with its own capacity and
+/// `by_end` backfill index. The scheduling pass and the EASY shadow run
+/// per partition; aggregate read accessors mirror the single-[`Cluster`]
+/// API so utilization/occupancy consumers are partition-agnostic.
+///
+/// A single-partition machine behaves bit-identically to the old bare
+/// `Cluster`: one inner cluster, and every aggregate is that cluster's own
+/// value.
+#[derive(Debug)]
+pub struct Partitions {
+    parts: Vec<Cluster>,
+}
+
+impl Partitions {
+    /// One cluster per capacity entry. At least one partition is required.
+    pub fn new(capacities: &[Cores]) -> Self {
+        assert!(!capacities.is_empty(), "a machine needs >= 1 partition");
+        Partitions {
+            parts: capacities.iter().map(|&c| Cluster::new(c)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// One partition's cluster (panics on a bad index — partition ids are
+    /// validated at job registration).
+    pub fn part(&self, p: usize) -> &Cluster {
+        &self.parts[p]
+    }
+
+    pub fn part_mut(&mut self, p: usize) -> &mut Cluster {
+        &mut self.parts[p]
+    }
+
+    /// Total cores across all partitions.
+    pub fn total_cores(&self) -> Cores {
+        self.parts.iter().map(|c| c.total_cores()).sum()
+    }
+
+    /// Free cores across all partitions.
+    pub fn free_cores(&self) -> Cores {
+        self.parts.iter().map(|c| c.free_cores()).sum()
+    }
+
+    pub fn used_cores(&self) -> Cores {
+        self.parts.iter().map(|c| c.used_cores()).sum()
+    }
+
+    /// Machine-wide utilization (used / total over all partitions).
+    pub fn utilization(&self) -> f64 {
+        self.used_cores() as f64 / self.total_cores() as f64
+    }
+
+    /// Live allocations across all partitions.
+    pub fn running_count(&self) -> usize {
+        self.parts.iter().map(|c| c.running_count()).sum()
+    }
+
+    /// Look an allocation up across partitions (observability; hot paths
+    /// address the partition directly).
+    pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
+        self.parts.iter().find_map(|c| c.allocation(job))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +239,35 @@ mod tests {
         c.allocate(JobId(3), 10, 0, 200);
         let pairs: Vec<(Time, Cores)> = c.ends_iter().collect();
         assert_eq!(pairs, vec![(100, 10), (200, 10), (300, 10)]);
+    }
+
+    #[test]
+    fn partitions_isolate_capacity_and_aggregate_reads() {
+        let mut m = Partitions::new(&[60, 40]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.total_cores(), 100);
+        m.part_mut(0).allocate(JobId(1), 60, 0, 100);
+        // Partition 0 is full; partition 1 still has room.
+        assert!(!m.part(0).fits(1));
+        assert!(m.part(1).fits(40));
+        assert_eq!(m.free_cores(), 40);
+        assert_eq!(m.used_cores(), 60);
+        assert!((m.utilization() - 0.6).abs() < 1e-12);
+        assert_eq!(m.running_count(), 1);
+        assert!(m.allocation(JobId(1)).is_some());
+        assert!(m.allocation(JobId(2)).is_none());
+        m.part_mut(0).release(JobId(1));
+        assert_eq!(m.free_cores(), 100);
+    }
+
+    #[test]
+    fn single_partition_aggregates_match_inner_cluster() {
+        let mut m = Partitions::new(&[100]);
+        m.part_mut(0).allocate(JobId(1), 25, 0, 50);
+        assert_eq!(m.total_cores(), m.part(0).total_cores());
+        assert_eq!(m.free_cores(), m.part(0).free_cores());
+        assert_eq!(m.utilization(), m.part(0).utilization());
+        assert_eq!(m.running_count(), m.part(0).running_count());
     }
 
     #[test]

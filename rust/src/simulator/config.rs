@@ -23,10 +23,28 @@
 //! Every field is optional except `name`, `nodes`, `cores_per_node` and at
 //! least one workload class; omitted fields inherit the quiet-profile /
 //! default-scheduler values so partial configs stay valid.
+//!
+//! A machine may optionally be split into named partitions (Slurm
+//! partitions, or whole centres of a multi-centre domain):
+//!
+//! ```json
+//! {
+//!   "partitions": [
+//!     {"name": "regular", "nodes": 100, "cores_per_node": 64},
+//!     {"name": "debug", "nodes": 8, "cores_per_node": 64,
+//!      "max_time_limit": 3600, "trace_share": 0.1}
+//!   ]
+//! }
+//! ```
+//!
+//! With partitions present, the top-level `nodes`/`cores_per_node` are
+//! overridden to describe the first (primary) partition and the machine
+//! total is the sum over partitions. Omitting `partitions` keeps the
+//! single whole-machine pool, bit-identical to pre-partition configs.
 
 use crate::simulator::slurm::SchedConfig;
 use crate::simulator::trace::{JobClass, WorkloadProfile};
-use crate::simulator::SystemConfig;
+use crate::simulator::{PartitionSpec, SystemConfig};
 use crate::util::json::Json;
 
 fn f64_of(j: &Json, key: &str, default: f64) -> f64 {
@@ -43,6 +61,12 @@ pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
         .get("name")
         .and_then(|v| v.as_str())
         .ok_or("missing 'name'")?;
+    // '/' and ':' are structural in persisted estimator tags
+    // (`system/partition:cores`); a name containing them would be
+    // re-parsed under a different key on store reload.
+    if name.contains('/') || name.contains(':') {
+        return Err(format!("system name {name:?} must not contain '/' or ':'"));
+    }
     let nodes = doc
         .get("nodes")
         .and_then(|v| v.as_i64())
@@ -67,6 +91,77 @@ pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
                 as usize,
         },
         None => defaults,
+    };
+
+    let partitions = match doc.get("partitions").and_then(|v| v.as_arr()) {
+        Some(arr) if !arr.is_empty() => {
+            let mut parts = Vec::with_capacity(arr.len());
+            let mut shares: Vec<Option<f64>> = Vec::with_capacity(arr.len());
+            for p in arr {
+                let pname = p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("partition missing 'name'")?;
+                if pname.is_empty() {
+                    return Err("partition name must be non-empty".into());
+                }
+                if pname.contains('/') || pname.contains(':') {
+                    return Err(format!(
+                        "partition name {pname:?} must not contain '/' or ':'"
+                    ));
+                }
+                if parts.iter().any(|q: &PartitionSpec| q.name == pname) {
+                    return Err(format!("duplicate partition name {pname:?}"));
+                }
+                let pn = i64_of(p, "nodes", 0);
+                let pc = i64_of(p, "cores_per_node", 0);
+                if pn <= 0 || pc <= 0 {
+                    return Err(format!(
+                        "partition {pname:?} needs positive nodes and cores_per_node"
+                    ));
+                }
+                shares.push(p.get("trace_share").and_then(|v| v.as_f64()).map(|s| s.max(0.0)));
+                parts.push(PartitionSpec {
+                    // Leaked like the system name below: configs load once
+                    // per process, and PartitionSpec.name is &'static str
+                    // so presets stay allocation-free.
+                    name: Box::leak(pname.to_string().into_boxed_str()),
+                    nodes: pn as u32,
+                    cores_per_node: pc as u32,
+                    max_time_limit: i64_of(p, "max_time_limit", 0).max(0),
+                    trace_share: 0.0, // resolved below
+                });
+            }
+            // Default trace share: the partition's *fraction* of total
+            // capacity — the same scale as explicitly given shares (which
+            // are naturally written as fractions), so mixing explicit and
+            // defaulted entries keeps sensible proportions.
+            let total_cap: f64 = parts.iter().map(|p| p.total_cores() as f64).sum();
+            for (part, share) in parts.iter_mut().zip(shares) {
+                part.trace_share =
+                    share.unwrap_or(part.total_cores() as f64 / total_cap);
+            }
+            if parts.iter().map(|p| p.trace_share).sum::<f64>() <= 0.0 {
+                return Err("partition trace shares must sum to a positive value".into());
+            }
+            parts
+        }
+        Some(_) => return Err("partitions must be a non-empty array when given".into()),
+        None => Vec::new(),
+    };
+    // Primary-partition invariant: with partitions declared, the legacy
+    // aggregate fields describe the first entry.
+    let (nodes, cores_per_node) = match partitions.first() {
+        Some(p) => (p.nodes, p.cores_per_node),
+        None => (nodes, cores_per_node),
+    };
+    // Total machine capacity: the summed partitions when declared,
+    // else the top-level aggregate. Workload classes validate against
+    // this (not the pre-override top-level fields).
+    let machine_cores: u32 = if partitions.is_empty() {
+        nodes * cores_per_node
+    } else {
+        partitions.iter().map(|p| p.total_cores()).sum()
     };
 
     let quiet = WorkloadProfile::quiet();
@@ -94,11 +189,10 @@ pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
                         c.cores_hi, c.cores_lo
                     ));
                 }
-                if c.cores_hi > nodes * cores_per_node {
+                if c.cores_hi > machine_cores {
                     return Err(format!(
-                        "class cores_hi {} exceeds machine capacity {}",
-                        c.cores_hi,
-                        nodes * cores_per_node
+                        "class cores_hi {} exceeds machine capacity {machine_cores}",
+                        c.cores_hi
                     ));
                 }
             }
@@ -128,6 +222,7 @@ pub fn system_from_json(doc: &Json) -> Result<SystemConfig, String> {
         cores_per_node,
         sched,
         workload,
+        partitions,
     })
 }
 
@@ -211,7 +306,125 @@ mod tests {
     #[test]
     fn resolve_prefers_presets() {
         assert_eq!(resolve_system("uppmax").unwrap().nodes, 486);
+        assert_eq!(resolve_system("two-center").unwrap().partition_count(), 2);
         assert!(resolve_system("does-not-exist").is_err());
+    }
+
+    #[test]
+    fn partitions_parse_with_defaults_and_primary_override() {
+        let mut doc = minimal();
+        doc.set(
+            "partitions",
+            Json::Arr(vec![
+                Json::obj()
+                    .with("name", "regular")
+                    .with("nodes", 3i64)
+                    .with("cores_per_node", 8i64),
+                Json::obj()
+                    .with("name", "debug")
+                    .with("nodes", 1i64)
+                    .with("cores_per_node", 8i64)
+                    .with("max_time_limit", 3600i64)
+                    .with("trace_share", 0.1),
+            ]),
+        );
+        let cfg = system_from_json(&doc).unwrap();
+        assert_eq!(cfg.partition_count(), 2);
+        assert_eq!(cfg.total_cores(), 32);
+        // Primary partition mirrored into the legacy aggregate fields.
+        assert_eq!((cfg.nodes, cfg.cores_per_node), (3, 8));
+        let parts = cfg.resolved_partitions();
+        assert_eq!(parts[0].name, "regular");
+        assert_eq!(parts[0].max_time_limit, 0);
+        // Defaulted share is the capacity *fraction* (24 of 32 cores), the
+        // same scale as explicitly-written fractional shares.
+        assert!(
+            (parts[0].trace_share - 0.75).abs() < 1e-12,
+            "capacity-fraction default, got {}",
+            parts[0].trace_share
+        );
+        assert_eq!(parts[1].max_time_limit, 3600);
+        assert!((parts[1].trace_share - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_width_validates_against_summed_partition_capacity() {
+        // 3×8 + 1×8 = 32 cores total; a class as wide as the whole machine
+        // must be accepted even though the primary partition holds only 24.
+        let mut doc = Json::parse(
+            r#"{"name":"t","nodes":3,"cores_per_node":8,
+                "workload":{"classes":[{"weight":1,"cores_lo":1,"cores_hi":32,
+                                        "runtime_mu":6,"runtime_sigma":0.5}]}}"#,
+        )
+        .unwrap();
+        doc.set(
+            "partitions",
+            Json::Arr(vec![
+                Json::obj().with("name", "regular").with("nodes", 3i64).with("cores_per_node", 8i64),
+                Json::obj().with("name", "debug").with("nodes", 1i64).with("cores_per_node", 8i64),
+            ]),
+        );
+        let cfg = system_from_json(&doc).unwrap();
+        assert_eq!(cfg.total_cores(), 32);
+        // Wider than the whole machine still fails.
+        let mut doc2 = doc.clone();
+        doc2.set(
+            "workload",
+            Json::obj().with(
+                "classes",
+                Json::Arr(vec![Json::obj()
+                    .with("weight", 1.0)
+                    .with("cores_lo", 1i64)
+                    .with("cores_hi", 33i64)
+                    .with("runtime_mu", 6.0)
+                    .with("runtime_sigma", 0.5)]),
+            ),
+        );
+        assert!(system_from_json(&doc2).is_err());
+    }
+
+    #[test]
+    fn names_with_tag_separators_rejected() {
+        // '/'/':' are structural in persisted estimator tags.
+        let mut doc = minimal();
+        doc.set("name", "site/a");
+        assert!(system_from_json(&doc).is_err());
+        let mut doc = minimal();
+        doc.set("name", "site:a");
+        assert!(system_from_json(&doc).is_err());
+        let mut doc = minimal();
+        doc.set(
+            "partitions",
+            Json::Arr(vec![Json::obj()
+                .with("name", "a/b")
+                .with("nodes", 1i64)
+                .with("cores_per_node", 4i64)]),
+        );
+        assert!(system_from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_partitions_rejected() {
+        for bad in [
+            // Empty array.
+            Json::Arr(vec![]),
+            // Missing name.
+            Json::Arr(vec![Json::obj().with("nodes", 1i64).with("cores_per_node", 4i64)]),
+            // Zero cores.
+            Json::Arr(vec![Json::obj()
+                .with("name", "p")
+                .with("nodes", 1i64)
+                .with("cores_per_node", 0i64)]),
+            // Duplicate names.
+            Json::Arr(vec![
+                Json::obj().with("name", "p").with("nodes", 1i64).with("cores_per_node", 4i64),
+                Json::obj().with("name", "p").with("nodes", 1i64).with("cores_per_node", 4i64),
+            ]),
+        ] {
+            let mut doc = minimal();
+            doc.set("partitions", bad);
+            assert!(system_from_json(&doc).is_err());
+        }
     }
 
     #[test]

@@ -45,6 +45,23 @@ impl JobId {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct NameId(pub u32);
 
+/// Interned partition handle: an index into the system's partition list
+/// (see [`crate::simulator::SystemConfig::partitions`]). Like [`NameId`],
+/// it is a dense index rather than a string, so per-job partition routing
+/// is allocation-free. `PartitionId::DEFAULT` (index 0) is the machine's
+/// primary partition — on single-partition systems, the whole machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PartitionId(pub u32);
+
+impl PartitionId {
+    pub const DEFAULT: PartitionId = PartitionId(0);
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// A job name as supplied by the submitter: either text (interned by the
 /// simulator at registration) or an already-interned handle.
 ///
@@ -128,6 +145,10 @@ pub struct JobSpec {
     pub runtime: Time,
     /// Optional start constraint.
     pub dependency: Option<Dependency>,
+    /// Which partition the job is submitted to (Slurm `-p`). Defaults to
+    /// the primary partition, which on single-partition systems is the
+    /// whole machine.
+    pub partition: PartitionId,
 }
 
 impl JobSpec {
@@ -141,6 +162,7 @@ impl JobSpec {
             time_limit: runtime + runtime / 2 + 600,
             runtime,
             dependency: None,
+            partition: PartitionId::DEFAULT,
         }
     }
 
@@ -151,6 +173,11 @@ impl JobSpec {
 
     pub fn with_dependency(mut self, dep: Dependency) -> Self {
         self.dependency = Some(dep);
+        self
+    }
+
+    pub fn with_partition(mut self, partition: PartitionId) -> Self {
+        self.partition = partition;
         self
     }
 }
@@ -173,6 +200,9 @@ mod tests {
             .with_dependency(Dependency::AfterOk(vec![JobId(7)]));
         assert_eq!(s.time_limit, 99);
         assert_eq!(s.dependency, Some(Dependency::AfterOk(vec![JobId(7)])));
+        assert_eq!(s.partition, PartitionId::DEFAULT);
+        let s = s.with_partition(PartitionId(2));
+        assert_eq!(s.partition.index(), 2);
     }
 
     #[test]

@@ -32,28 +32,86 @@ pub mod sim;
 pub mod metrics;
 pub mod config;
 
-pub use job::{Dependency, JobId, JobName, JobSpec, JobState, NameId};
+pub use job::{Dependency, JobId, JobName, JobSpec, JobState, NameId, PartitionId};
 pub use sim::{SchedEngine, SimEvent, Simulator};
 pub use store::{JobStore, JobView, NameInterner};
 pub use trace::BackgroundWorkload;
 
-use crate::Cores;
+use crate::{Cores, Time};
+
+/// One named partition of a simulated machine (Slurm partition, or one
+/// whole centre of a multi-centre scheduling domain). Each partition has
+/// its own core inventory and backfill index; fair-share stays
+/// account-global across partitions.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub cores_per_node: Cores,
+    /// QOS wall-time cap (Slurm `MaxTime`); submissions requesting more
+    /// have their limit clamped to this. `0` = unlimited.
+    pub max_time_limit: Time,
+    /// Relative share of background-trace arrivals routed here (weights
+    /// are normalized across partitions).
+    pub trace_share: f64,
+}
+
+impl PartitionSpec {
+    pub fn total_cores(&self) -> Cores {
+        self.nodes * self.cores_per_node
+    }
+}
 
 /// Static description of one simulated computing system (paper §4.2).
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
     pub name: &'static str,
+    /// Nodes of the primary partition (the whole machine when
+    /// `partitions` is empty).
     pub nodes: u32,
     pub cores_per_node: Cores,
     /// Scheduler pass parameters.
     pub sched: slurm::SchedConfig,
     /// Background workload profile.
     pub workload: trace::WorkloadProfile,
+    /// Named partitions. Empty (the common case, and every pre-partition
+    /// config) means a single anonymous partition spanning
+    /// `nodes × cores_per_node` — bit-identical to the unpartitioned
+    /// machine. When non-empty, `nodes`/`cores_per_node` must describe the
+    /// first entry (the primary partition) and the machine total is the
+    /// sum over partitions.
+    pub partitions: Vec<PartitionSpec>,
 }
 
 impl SystemConfig {
     pub fn total_cores(&self) -> Cores {
-        self.nodes * self.cores_per_node
+        if self.partitions.is_empty() {
+            self.nodes * self.cores_per_node
+        } else {
+            self.partitions.iter().map(|p| p.total_cores()).sum()
+        }
+    }
+
+    /// The machine's partition list with the single-partition default
+    /// materialized: the anonymous whole-machine partition has an empty
+    /// name, so estimator geometry keys on unpartitioned systems stay
+    /// exactly what they were before partitions existed.
+    pub fn resolved_partitions(&self) -> Vec<PartitionSpec> {
+        if self.partitions.is_empty() {
+            vec![PartitionSpec {
+                name: "",
+                nodes: self.nodes,
+                cores_per_node: self.cores_per_node,
+                max_time_limit: 0,
+                trace_share: 1.0,
+            }]
+        } else {
+            self.partitions.clone()
+        }
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len().max(1)
     }
 
     /// HPC2n: 602 nodes × 2×14-core Xeon E5 v4 = 28 cores/node.
@@ -66,6 +124,7 @@ impl SystemConfig {
             cores_per_node: 28,
             sched: slurm::SchedConfig::default(),
             workload: trace::WorkloadProfile::hpc2n(),
+            partitions: Vec::new(),
         }
     }
 
@@ -79,6 +138,47 @@ impl SystemConfig {
             cores_per_node: 20,
             sched: slurm::SchedConfig::default(),
             workload: trace::WorkloadProfile::uppmax(),
+            partitions: Vec::new(),
+        }
+    }
+
+    /// Two supercomputing centres as partitions of one scheduling domain —
+    /// the paper's Cori/Abisko-style split, where ASA's per-(centre,
+    /// geometry) learning is what makes wait estimates transferable. The
+    /// "cori" partition mirrors the HPC2n machine shape (small-job,
+    /// bursty), "abisko" the UPPMAX shape (large, sustained, with a QOS
+    /// wall-time cap); background arrivals split by capacity share and
+    /// fair-share stays account-global across both centres.
+    pub fn two_center() -> Self {
+        // Trace shares are exact capacity fractions (the same rule JSON
+        // configs apply when shares are omitted), so editing the node
+        // counts cannot silently skew the arrival split.
+        const CORI_CORES: f64 = (602 * 28) as f64;
+        const ABISKO_CORES: f64 = (486 * 20) as f64;
+        const TOTAL: f64 = CORI_CORES + ABISKO_CORES;
+        SystemConfig {
+            name: "two-center",
+            // Primary partition (first entry) — mirrored below.
+            nodes: 602,
+            cores_per_node: 28,
+            sched: slurm::SchedConfig::default(),
+            workload: trace::WorkloadProfile::two_center(),
+            partitions: vec![
+                PartitionSpec {
+                    name: "cori",
+                    nodes: 602,
+                    cores_per_node: 28,
+                    max_time_limit: 0,
+                    trace_share: CORI_CORES / TOTAL,
+                },
+                PartitionSpec {
+                    name: "abisko",
+                    nodes: 486,
+                    cores_per_node: 20,
+                    max_time_limit: 10 * 24 * 3600,
+                    trace_share: ABISKO_CORES / TOTAL,
+                },
+            ],
         }
     }
 
@@ -91,6 +191,35 @@ impl SystemConfig {
             cores_per_node,
             sched: slurm::SchedConfig::default(),
             workload: trace::WorkloadProfile::quiet(),
+            partitions: Vec::new(),
+        }
+    }
+
+    /// A two-partition test system: `regular` and `debug` partitions of
+    /// `nodes × cores_per_node` each (equal trace shares, no QOS caps).
+    pub fn testbed_partitioned(nodes: u32, cores_per_node: Cores) -> Self {
+        SystemConfig {
+            name: "testbed2",
+            nodes,
+            cores_per_node,
+            sched: slurm::SchedConfig::default(),
+            workload: trace::WorkloadProfile::quiet(),
+            partitions: vec![
+                PartitionSpec {
+                    name: "regular",
+                    nodes,
+                    cores_per_node,
+                    max_time_limit: 0,
+                    trace_share: 0.5,
+                },
+                PartitionSpec {
+                    name: "debug",
+                    nodes,
+                    cores_per_node,
+                    max_time_limit: 0,
+                    trace_share: 0.5,
+                },
+            ],
         }
     }
 
@@ -98,9 +227,12 @@ impl SystemConfig {
         match name {
             "hpc2n" => Some(Self::hpc2n()),
             "uppmax" => Some(Self::uppmax()),
+            // Two centres as partitions of one scheduling domain.
+            "two-center" => Some(Self::two_center()),
             // Small quiet system so campaign-shaped experiments can run in
             // unit tests without the production systems' simulation cost.
             "testbed" => Some(Self::testbed(64, 28)),
+            "testbed2" => Some(Self::testbed_partitioned(32, 28)),
             _ => None,
         }
     }
@@ -116,5 +248,31 @@ mod tests {
         assert_eq!(SystemConfig::uppmax().total_cores(), 486 * 20);
         assert!(SystemConfig::by_name("hpc2n").is_some());
         assert!(SystemConfig::by_name("lumi").is_none());
+    }
+
+    #[test]
+    fn unpartitioned_systems_resolve_to_one_anonymous_partition() {
+        let cfg = SystemConfig::hpc2n();
+        assert_eq!(cfg.partition_count(), 1);
+        let parts = cfg.resolved_partitions();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].name, "");
+        assert_eq!(parts[0].total_cores(), cfg.total_cores());
+        assert_eq!(parts[0].max_time_limit, 0);
+    }
+
+    #[test]
+    fn two_center_preset_sums_both_centres() {
+        let cfg = SystemConfig::two_center();
+        assert_eq!(cfg.partition_count(), 2);
+        assert_eq!(cfg.total_cores(), 602 * 28 + 486 * 20);
+        let parts = cfg.resolved_partitions();
+        assert_eq!(parts[0].name, "cori");
+        assert_eq!(parts[1].name, "abisko");
+        // Primary-partition invariant: nodes/cores_per_node mirror entry 0.
+        assert_eq!(cfg.nodes, parts[0].nodes);
+        assert_eq!(cfg.cores_per_node, parts[0].cores_per_node);
+        assert!(parts[1].max_time_limit > 0, "abisko carries a QOS cap");
+        assert!(SystemConfig::by_name("two-center").is_some());
     }
 }

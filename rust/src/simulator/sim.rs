@@ -17,7 +17,7 @@
 //! releases them with [`Simulator::retire`], so month-scale simulations run
 //! at constant memory instead of accumulating every job ever submitted.
 
-use crate::simulator::cluster::Cluster;
+use crate::simulator::cluster::Partitions;
 use crate::simulator::event::{EventKind, EventQueue};
 use crate::simulator::fairshare::FairShare;
 use crate::simulator::job::{Dependency, JobId, JobSpec, JobState};
@@ -25,10 +25,10 @@ use crate::simulator::metrics::Metrics;
 use crate::simulator::slurm::{schedule_pass_with, Candidate, PassScratch};
 use crate::simulator::store::{JobStore, JobView};
 use crate::simulator::trace::BackgroundWorkload;
-use crate::simulator::SystemConfig;
+use crate::simulator::{PartitionSpec, SystemConfig};
 use crate::util::hash::{FxHashMap, FxHashSet};
 use crate::util::rng::Rng;
-use crate::Time;
+use crate::{Cores, Time};
 use std::collections::BTreeSet;
 use std::collections::VecDeque;
 
@@ -123,14 +123,19 @@ pub struct Simulator {
     /// eagerly when the parked job is cancelled (and on promotion), so the
     /// set only ever holds live parked jobs.
     begin_set: BTreeSet<(Time, JobId)>,
-    cluster: Cluster,
+    /// The machine: one [`crate::simulator::cluster::Cluster`] per
+    /// partition; the scheduling pass and EASY shadow run per partition.
+    cluster: Partitions,
+    /// Partition descriptors in partition-id order (single anonymous entry
+    /// on unpartitioned systems), resolved once at construction.
+    parts_cfg: Vec<PartitionSpec>,
     fairshare: FairShare,
     trace: Option<BackgroundWorkload>,
     out: VecDeque<SimEvent>,
     pub metrics: Metrics,
     need_pass: bool,
-    /// Reusable candidate buffer for the scheduling pass.
-    cand_buf: Vec<Candidate>,
+    /// Reusable per-partition candidate buffers for the scheduling pass.
+    cand_bufs: Vec<Vec<Candidate>>,
     /// Reusable sort/merge buffers for the scheduling pass.
     scratch: PassScratch,
     /// Foreground users already seeded with pre-existing usage.
@@ -151,12 +156,19 @@ impl Simulator {
     pub fn new_with_engine(cfg: SystemConfig, seed: u64, engine: SchedEngine) -> Self {
         let mut rng = Rng::new(seed);
         let trace_rng = rng.fork(0x7ace);
+        let parts_cfg = cfg.resolved_partitions();
+        let caps: Vec<Cores> = parts_cfg.iter().map(|p| p.total_cores()).collect();
+        let trace_parts: Vec<(Cores, f64)> = parts_cfg
+            .iter()
+            .map(|p| (p.total_cores(), p.trace_share))
+            .collect();
         let mut sim = Simulator {
-            cluster: Cluster::new(cfg.total_cores()),
+            cluster: Partitions::new(&caps),
+            parts_cfg,
             fairshare: FairShare::new(cfg.sched.decay_half_life),
-            trace: Some(BackgroundWorkload::new(
+            trace: Some(BackgroundWorkload::new_partitioned(
                 cfg.workload.clone(),
-                cfg.total_cores(),
+                &trace_parts,
                 trace_rng,
             )),
             cfg,
@@ -171,7 +183,7 @@ impl Simulator {
             out: VecDeque::new(),
             metrics: Metrics::new(),
             need_pass: false,
-            cand_buf: Vec::new(),
+            cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
             seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
@@ -189,8 +201,11 @@ impl Simulator {
 
     /// [`Simulator::new_empty`] with an explicit scheduling-core engine.
     pub fn new_empty_with_engine(cfg: SystemConfig, engine: SchedEngine) -> Self {
+        let parts_cfg = cfg.resolved_partitions();
+        let caps: Vec<Cores> = parts_cfg.iter().map(|p| p.total_cores()).collect();
         Simulator {
-            cluster: Cluster::new(cfg.total_cores()),
+            cluster: Partitions::new(&caps),
+            parts_cfg,
             fairshare: FairShare::new(cfg.sched.decay_half_life),
             trace: None,
             cfg,
@@ -205,7 +220,7 @@ impl Simulator {
             out: VecDeque::new(),
             metrics: Metrics::new(),
             need_pass: false,
-            cand_buf: Vec::new(),
+            cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
             seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
@@ -226,13 +241,23 @@ impl Simulator {
         }
         let (running, backlog) = self.trace.as_mut().unwrap().prefill();
         for (spec, residual) in running {
-            let limit_left = residual + (spec.time_limit - spec.runtime).max(0);
             let id = self.register(spec, false);
+            // Read the limit back post-registration: the partition QOS cap
+            // may have clamped it, and the pre-existing load must respect
+            // the cap like any submitted job (residual included), or the
+            // EASY-shadow `by_end` index would plan around allocations that
+            // outlive the partition's MaxTime.
+            let (cores, part, limit) = {
+                let h = self.store.hot(id);
+                (h.cores, h.partition as usize, h.time_limit)
+            };
+            let runtime = self.store.cold(id).runtime;
+            let residual = residual.min(limit).max(1);
+            let limit_left = residual + (limit - runtime).max(0);
             // Start directly: bypass the queue for the pre-existing load.
-            let cores = self.store.hot(id).cores;
             self.store.hot_mut(id).state = JobState::Running;
             self.store.cold_mut(id).start_time = Some(0);
-            self.cluster.allocate(id, cores, 0, limit_left);
+            self.cluster.part_mut(part).allocate(id, cores, 0, limit_left);
             self.store.hot_mut(id).finish_at = Some(residual);
             self.events.push(residual, EventKind::Finish(id));
         }
@@ -264,8 +289,25 @@ impl Simulator {
         self.store.name(id)
     }
 
-    pub fn cluster(&self) -> &Cluster {
+    /// The machine's partitions (aggregate accessors mirror the old
+    /// single-cluster read API).
+    pub fn cluster(&self) -> &Partitions {
         &self.cluster
+    }
+
+    /// Partition descriptors in partition-id order. Unpartitioned systems
+    /// expose one anonymous (empty-named) whole-machine entry.
+    pub fn partition_specs(&self) -> &[PartitionSpec] {
+        &self.parts_cfg
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.parts_cfg.len()
+    }
+
+    /// Name of one partition (empty on unpartitioned systems).
+    pub fn partition_name(&self, p: usize) -> &'static str {
+        self.parts_cfg[p].name
     }
 
     /// Jobs currently queued (Pending), including dependency-held ones.
@@ -297,7 +339,11 @@ impl Simulator {
         self.store.bytes_estimate()
             + self.fairshare.bytes_estimate()
             + self.pending.capacity() * size_of::<JobId>()
-            + self.cand_buf.capacity() * size_of::<Candidate>()
+            + self
+                .cand_bufs
+                .iter()
+                .map(|b| b.capacity() * size_of::<Candidate>())
+                .sum::<usize>()
             + self.begin_set.len() * size_of::<(Time, JobId)>()
             + self
                 .dep_children
@@ -319,13 +365,26 @@ impl Simulator {
         )
     }
 
-    fn register(&mut self, spec: JobSpec, foreground: bool) -> JobId {
+    fn register(&mut self, mut spec: JobSpec, foreground: bool) -> JobId {
+        let p = spec.partition.index();
         assert!(
-            spec.cores >= 1 && spec.cores <= self.cluster.total_cores(),
-            "job cores {} outside machine capacity {}",
-            spec.cores,
-            self.cluster.total_cores()
+            p < self.parts_cfg.len(),
+            "unknown partition index {p} (machine has {})",
+            self.parts_cfg.len()
         );
+        let part_cap = self.cluster.part(p).total_cores();
+        assert!(
+            spec.cores >= 1 && spec.cores <= part_cap,
+            "job cores {} outside machine capacity {part_cap} of partition {:?}",
+            spec.cores,
+            self.parts_cfg[p].name
+        );
+        // QOS wall-time cap (Slurm `MaxTime`): clamp rather than reject so
+        // long submissions degrade into timeouts the driver can observe.
+        let qos = self.parts_cfg[p].max_time_limit;
+        if qos > 0 && spec.time_limit > qos {
+            spec.time_limit = qos;
+        }
         if foreground && !self.seeded_users.contains(&spec.user) {
             self.seeded_users.insert(spec.user);
             if let Some(trace) = self.trace.as_ref() {
@@ -525,7 +584,8 @@ impl Simulator {
                 }
             }
             JobState::Running => {
-                self.cluster.release(id);
+                let part = self.store.hot(id).partition as usize;
+                self.cluster.part_mut(part).release(id);
                 let start = self.store.cold(id).start_time.unwrap();
                 let h = self.store.hot(id);
                 let used = (self.now - start) as f64 * h.cores as f64;
@@ -663,8 +723,18 @@ impl Simulator {
         if self.cluster.free_cores() == 0 {
             return;
         }
-        let mut candidates = std::mem::take(&mut self.cand_buf);
-        candidates.clear();
+        // One scan of the eligible queue, bucketing candidates by
+        // partition; each partition then runs its own priority + EASY
+        // backfill pass against its own cluster. On a single-partition
+        // machine this is exactly the historical single pass.
+        let n_parts = self.cluster.len();
+        let mut bufs = std::mem::take(&mut self.cand_bufs);
+        if bufs.len() < n_parts {
+            bufs.resize_with(n_parts, Vec::new);
+        }
+        for buf in &mut bufs {
+            buf.clear();
+        }
         match self.engine {
             // Eligible set is maintained incrementally: every queued job is
             // a candidate, no dependency re-filtering. The hot rows are
@@ -672,7 +742,7 @@ impl Simulator {
             SchedEngine::Incremental => {
                 for &id in &self.pending {
                     let h = self.store.hot(id);
-                    candidates.push(Candidate {
+                    bufs[h.partition as usize].push(Candidate {
                         id,
                         fs: h.fs_idx,
                         cores: h.cores,
@@ -688,7 +758,7 @@ impl Simulator {
                         continue;
                     }
                     let h = self.store.hot(id);
-                    candidates.push(Candidate {
+                    bufs[h.partition as usize].push(Candidate {
                         id,
                         fs: h.fs_idx,
                         cores: h.cores,
@@ -712,30 +782,31 @@ impl Simulator {
                 }
             }
         }
-        if candidates.is_empty() {
-            self.cand_buf = candidates;
-            return;
+        for p in 0..n_parts {
+            if bufs[p].is_empty() || self.cluster.part(p).free_cores() == 0 {
+                continue;
+            }
+            let result = schedule_pass_with(
+                &self.cfg.sched,
+                self.cluster.part(p),
+                &mut self.fairshare,
+                &bufs[p],
+                self.now,
+                &mut self.scratch,
+            );
+            for id in result.start {
+                self.start_job(id);
+            }
         }
-        let result = schedule_pass_with(
-            &self.cfg.sched,
-            &self.cluster,
-            &mut self.fairshare,
-            &candidates,
-            self.now,
-            &mut self.scratch,
-        );
-        self.cand_buf = candidates;
-        for id in result.start {
-            self.start_job(id);
-        }
+        self.cand_bufs = bufs;
     }
 
     fn start_job(&mut self, id: JobId) {
         self.queue_remove(id);
         debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
-        let (cores, time_limit, submit_time, foreground) = {
+        let (cores, time_limit, submit_time, foreground, part) = {
             let h = self.store.hot(id);
-            (h.cores, h.time_limit, h.submit_time, h.foreground)
+            (h.cores, h.time_limit, h.submit_time, h.foreground, h.partition as usize)
         };
         let runtime = self.store.cold(id).runtime;
         self.store.hot_mut(id).state = JobState::Running;
@@ -743,7 +814,7 @@ impl Simulator {
         let wait = (self.now - submit_time) as f64;
         let runs_for = runtime.min(time_limit);
         let limit_end = self.now + time_limit;
-        self.cluster.allocate(id, cores, self.now, limit_end);
+        self.cluster.part_mut(part).allocate(id, cores, self.now, limit_end);
         let finish = self.now + runs_for;
         self.store.hot_mut(id).finish_at = Some(finish);
         self.events.push(finish, EventKind::Finish(id));
@@ -770,7 +841,8 @@ impl Simulator {
         {
             return;
         }
-        self.cluster.release(id);
+        let part = self.store.hot(id).partition as usize;
+        self.cluster.part_mut(part).release(id);
         let timed_out = self.store.cold(id).runtime > self.store.hot(id).time_limit;
         self.store.hot_mut(id).state = if timed_out {
             JobState::TimedOut
@@ -1323,6 +1395,114 @@ mod tests {
     fn oversized_job_rejected() {
         let mut sim = quiet_sim(4);
         sim.submit(JobSpec::new(1, "big", 5, 10));
+    }
+
+    #[test]
+    fn partitions_isolate_queues() {
+        use crate::simulator::job::PartitionId;
+        // Two 4-core partitions. A hog fills `regular`; a same-width job
+        // behind it queues, but a job submitted to `debug` starts at once.
+        let mut sim = Simulator::new_empty(SystemConfig::testbed_partitioned(1, 4));
+        let hog = sim.submit(JobSpec::new(1, "hog", 4, 100).with_limit(100));
+        let queued = sim.submit(JobSpec::new(2, "queued", 4, 50));
+        let debug = sim.submit(
+            JobSpec::new(3, "debug", 4, 50).with_partition(PartitionId(1)),
+        );
+        let mut starts: std::collections::HashMap<JobId, Time> = Default::default();
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, time } = ev {
+                starts.insert(id, time);
+            }
+        }
+        assert_eq!(starts[&hog], 0);
+        assert_eq!(starts[&debug], 0, "other partition must not contend");
+        assert_eq!(starts[&queued], 100, "same partition queues");
+        assert_eq!(sim.job(debug).partition, PartitionId(1));
+        assert_eq!(sim.partition_count(), 2);
+        assert_eq!(sim.partition_name(1), "debug");
+    }
+
+    #[test]
+    fn partition_qos_cap_clamps_time_limit() {
+        use crate::simulator::job::PartitionId;
+        let mut cfg = SystemConfig::testbed_partitioned(2, 4);
+        cfg.partitions[1].max_time_limit = 50;
+        let mut sim = Simulator::new_empty(cfg);
+        let long = sim.submit(
+            JobSpec::new(1, "long", 1, 500)
+                .with_limit(500)
+                .with_partition(PartitionId(1)),
+        );
+        let uncapped = sim.submit(JobSpec::new(1, "free", 1, 500).with_limit(500));
+        assert_eq!(sim.job(long).time_limit, 50, "QOS clamp applies");
+        assert_eq!(sim.job(uncapped).time_limit, 500, "partition 0 uncapped");
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(long).state, JobState::TimedOut);
+        assert_eq!(sim.job(uncapped).state, JobState::Completed);
+    }
+
+    #[test]
+    fn cross_partition_dependency_defers_start() {
+        use crate::simulator::job::PartitionId;
+        let mut sim = Simulator::new_empty(SystemConfig::testbed_partitioned(2, 4));
+        let a = sim.submit(JobSpec::new(1, "a", 4, 200));
+        let b = sim.submit(
+            JobSpec::new(1, "b", 4, 10)
+                .with_partition(PartitionId(1))
+                .with_dependency(Dependency::AfterOk(vec![a])),
+        );
+        let mut b_start = None;
+        while let Some(ev) = sim.step() {
+            if let SimEvent::Started { id, time } = ev {
+                if id == b {
+                    b_start = Some(time);
+                }
+            }
+        }
+        assert_eq!(b_start, Some(200), "dependency engine is partition-global");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown partition")]
+    fn bad_partition_index_rejected() {
+        use crate::simulator::job::PartitionId;
+        let mut sim = quiet_sim(4);
+        sim.submit(JobSpec::new(1, "x", 1, 10).with_partition(PartitionId(7)));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside machine capacity")]
+    fn oversized_for_partition_rejected() {
+        use crate::simulator::job::PartitionId;
+        // 2×4-core partitions: 8 cores fits the machine total but no
+        // single partition.
+        let mut sim = Simulator::new_empty(SystemConfig::testbed_partitioned(1, 4));
+        sim.submit(JobSpec::new(1, "wide", 8, 10).with_partition(PartitionId(1)));
+    }
+
+    #[test]
+    fn explicit_single_partition_matches_legacy_stream() {
+        // A config that *declares* one whole-machine partition must replay
+        // the anonymous-partition (legacy) event stream bit-identically,
+        // background trace included.
+        let run = |cfg: SystemConfig| -> (Vec<SimEvent>, u64, u64, u64) {
+            let mut sim = Simulator::new(cfg, 77);
+            sim.submit(JobSpec::new(1, "probe", 8, 120));
+            sim.run_until(6 * 3600);
+            let evs = sim.drain_events();
+            (evs, sim.metrics.started, sim.metrics.completed, sim.jobs_registered())
+        };
+        let mut legacy = SystemConfig::testbed(8, 4);
+        legacy.workload = oversubscribed_profile();
+        let mut explicit = legacy.clone();
+        explicit.partitions = vec![crate::simulator::PartitionSpec {
+            name: "all",
+            nodes: 8,
+            cores_per_node: 4,
+            max_time_limit: 0,
+            trace_share: 1.0,
+        }];
+        assert_eq!(run(legacy), run(explicit));
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //!   `&'static str` or recurring `format!` strings) stop allocating a
 //!   `String` per job.
 
-use crate::simulator::job::{Dependency, JobId, JobName, JobSpec, JobState, NameId};
+use crate::simulator::job::{
+    Dependency, JobId, JobName, JobSpec, JobState, NameId, PartitionId,
+};
 use crate::util::hash::FxHashMap;
 use crate::{Cores, Time};
 use std::sync::Arc;
@@ -89,6 +91,9 @@ pub struct HotJob {
     pub cores: Cores,
     pub time_limit: Time,
     pub submit_time: Time,
+    /// Partition index the job is bound to (validated at registration).
+    /// The scheduling pass buckets candidates by this field.
+    pub partition: u32,
     /// Global registration sequence number: the deterministic submission
     /// order that survives slot recycling (ids no longer order by age).
     pub seq: u64,
@@ -126,6 +131,8 @@ pub struct JobView {
     pub user: u32,
     pub cores: Cores,
     pub time_limit: Time,
+    /// Partition the job was submitted to.
+    pub partition: PartitionId,
     /// True service demand (test/driver observability; the simulated
     /// scheduler itself never reads it).
     pub runtime: Time,
@@ -208,6 +215,7 @@ impl JobStore {
             cores: spec.cores,
             time_limit: spec.time_limit,
             submit_time,
+            partition: spec.partition.0,
             seq,
             finish_at: None,
             queue_pos: None,
@@ -327,6 +335,7 @@ impl JobStore {
             user: h.user,
             cores: h.cores,
             time_limit: h.time_limit,
+            partition: PartitionId(h.partition),
             runtime: c.runtime,
             submit_time: h.submit_time,
             start_time: c.start_time,

@@ -13,7 +13,7 @@
 //! All sampling is driven by an explicit [`Rng`] so a whole campaign replays
 //! from its seed.
 
-use crate::simulator::job::JobSpec;
+use crate::simulator::job::{JobSpec, PartitionId};
 use crate::util::rng::Rng;
 use crate::{Cores, Time};
 
@@ -109,6 +109,31 @@ impl WorkloadProfile {
         }
     }
 
+    /// The two-centre scheduling domain: the HPC2n-style small/bursty mix
+    /// and the UPPMAX-style large/sustained mix combined, since arrivals
+    /// split across the `cori`/`abisko` partitions by trace share. Load and
+    /// regime knobs sit between the two source profiles.
+    pub fn two_center() -> Self {
+        let mut classes = Self::hpc2n().classes;
+        for mut c in Self::uppmax().classes {
+            // Re-weight the second centre's classes to its capacity share.
+            c.weight *= 0.6;
+            classes.push(c);
+        }
+        WorkloadProfile {
+            classes,
+            target_load: 1.08,
+            burstiness: 0.70,
+            regime_period: 8 * 3600,
+            regime_lo: 0.75,
+            regime_hi: 1.30,
+            user_pool: 220,
+            backlog_factor: 1.8,
+            initial_user_usage: 5.0e7,
+            max_queued_jobs: 50_000,
+        }
+    }
+
     /// Nearly idle profile for unit tests.
     pub fn quiet() -> Self {
         WorkloadProfile {
@@ -162,6 +187,15 @@ impl WorkloadProfile {
 pub struct BackgroundWorkload {
     profile: WorkloadProfile,
     total_cores: Cores,
+    /// `(capacity, trace share)` per partition. Arrivals are routed by
+    /// weighted share and sized within the chosen partition's capacity.
+    /// With a single partition no routing draw happens at all, so the RNG
+    /// stream — and with it the whole event stream — is bit-identical to
+    /// the pre-partition generator.
+    parts: Vec<(Cores, f64)>,
+    /// The share column of `parts`, pre-extracted so the per-arrival
+    /// weighted draw allocates nothing.
+    part_shares: Vec<f64>,
     regime_mult: f64,
     regime_until: Time,
     rng: Rng,
@@ -169,10 +203,25 @@ pub struct BackgroundWorkload {
 }
 
 impl BackgroundWorkload {
+    /// Single-partition generator: the whole machine is one pool.
     pub fn new(profile: WorkloadProfile, total_cores: Cores, rng: Rng) -> Self {
+        Self::new_partitioned(profile, &[(total_cores, 1.0)], rng)
+    }
+
+    /// Partitioned generator: `parts` is `(capacity, trace_share)` per
+    /// partition, in partition order. Total offered load is calibrated
+    /// against the summed capacity.
+    pub fn new_partitioned(
+        profile: WorkloadProfile,
+        parts: &[(Cores, f64)],
+        rng: Rng,
+    ) -> Self {
+        assert!(!parts.is_empty(), "workload needs >= 1 partition");
         BackgroundWorkload {
             profile,
-            total_cores,
+            total_cores: parts.iter().map(|&(c, _)| c).sum(),
+            parts: parts.to_vec(),
+            part_shares: parts.iter().map(|&(_, s)| s).collect(),
             regime_mult: 1.0,
             regime_until: 0,
             rng,
@@ -212,9 +261,17 @@ impl BackgroundWorkload {
         (self.rng.weibull(k, lambda).round() as Time).max(1)
     }
 
-    /// Draw one background job.
+    /// Draw one background job. On multi-partition machines the partition
+    /// is drawn first (weighted by trace share) and the job's width is
+    /// clamped to that partition's capacity.
     pub fn next_job(&mut self) -> JobSpec {
         self.generated += 1;
+        let part = if self.parts.len() > 1 {
+            self.rng.weighted(&self.part_shares)
+        } else {
+            0
+        };
+        let part_cores = self.parts[part].0;
         let weights: Vec<f64> = self.profile.classes.iter().map(|c| c.weight).collect();
         let class = &self.profile.classes[self.rng.weighted(&weights)];
         let lo = class.cores_lo.max(1) as f64;
@@ -224,31 +281,56 @@ impl BackgroundWorkload {
         } else {
             lo as Cores
         }
-        .clamp(1, self.total_cores);
+        .clamp(1, part_cores);
         let runtime = self
             .rng
             .lognormal(class.runtime_mu, class.runtime_sigma)
             .clamp(30.0, 7.0 * 24.0 * 3600.0) as Time;
         let user = 1000 + self.rng.range_u64(0, self.profile.user_pool as u64) as u32;
-        JobSpec::new(user, "bg", cores, runtime)
+        JobSpec::new(user, "bg", cores, runtime).with_partition(PartitionId(part as u32))
     }
 
     /// Jobs to pre-fill the machine to steady state at t=0:
     /// `(residual_runtime_jobs_running_now, pending_backlog)`.
     pub fn prefill(&mut self) -> (Vec<(JobSpec, Time)>, Vec<JobSpec>) {
         let mut running = Vec::new();
+        let mut used_by_part: Vec<f64> = vec![0.0; self.parts.len()];
         let mut used: f64 = 0.0;
-        let cap = self.total_cores as f64 * self.profile.target_load.min(0.97);
+        // Fill target counts only partitions arrivals can actually reach:
+        // a zero-trace-share partition never receives a job, so including
+        // its capacity would make the target unreachable and spin the
+        // guard loop through ~1M discarded draws. (Single-partition
+        // machines always have share 1.0, so this is the whole machine —
+        // the historical target — there.)
+        let reachable: f64 = self
+            .parts
+            .iter()
+            .map(|&(c, s)| if s > 0.0 { c as f64 } else { 0.0 })
+            .sum();
+        let cap = reachable * self.profile.target_load.min(0.97);
         // Fill running set; residual lifetime is uniform over the runtime
         // (inspection paradox ignored deliberately — limits pad it anyway).
+        // Each job must fit in its own partition's remaining capacity; for
+        // a single partition this is the historical whole-machine check.
+        // `misses` counts consecutive discarded draws: once routing keeps
+        // hitting saturated partitions (e.g. a tiny partition with an
+        // outsized trace share), the fill has converged as far as the
+        // share split allows and further draws are wasted — bail out
+        // instead of spinning the 1M guard down. Existing presets reach
+        // `cap` with misses never remotely approaching the bound.
         let mut guard = 0;
-        while used < cap && guard < 1_000_000 {
+        let mut misses = 0;
+        while used < cap && guard < 1_000_000 && misses < 10_000 {
             guard += 1;
             let spec = self.next_job();
-            if used + spec.cores as f64 > self.total_cores as f64 {
+            let p = spec.partition.index();
+            if used_by_part[p] + spec.cores as f64 > self.parts[p].0 as f64 {
+                misses += 1;
                 continue;
             }
+            misses = 0;
             let residual = (self.rng.f64() * spec.runtime as f64).max(1.0) as Time;
+            used_by_part[p] += spec.cores as f64;
             used += spec.cores as f64;
             running.push((spec, residual));
         }
@@ -361,6 +443,55 @@ mod tests {
         let used: u64 = running.iter().map(|(s, _)| s.cores as u64).sum();
         assert!(used as f64 <= 0.10 * total as f64);
         assert!(backlog.is_empty());
+    }
+
+    #[test]
+    fn partitioned_trace_routes_by_share_and_fits_partitions() {
+        let p = WorkloadProfile::two_center();
+        let parts = [(16856u32, 0.63f64), (9720, 0.37)];
+        let mut w = BackgroundWorkload::new_partitioned(p, &parts, Rng::new(9));
+        let mut counts = [0usize; 2];
+        for _ in 0..4000 {
+            let s = w.next_job();
+            let idx = s.partition.index();
+            assert!(idx < 2);
+            assert!(s.cores >= 1 && s.cores <= parts[idx].0, "fits its partition");
+            counts[idx] += 1;
+        }
+        let frac = counts[0] as f64 / 4000.0;
+        assert!((frac - 0.63).abs() < 0.05, "share ~0.63, got {frac}");
+    }
+
+    #[test]
+    fn partitioned_prefill_respects_per_partition_capacity() {
+        let p = WorkloadProfile::two_center();
+        let parts = [(16856u32, 0.63f64), (9720, 0.37)];
+        let mut w = BackgroundWorkload::new_partitioned(p, &parts, Rng::new(10));
+        let (running, _) = w.prefill();
+        let mut used = [0u64; 2];
+        for (s, _) in &running {
+            used[s.partition.index()] += s.cores as u64;
+        }
+        assert!(used[0] <= 16856 && used[1] <= 9720, "used={used:?}");
+        assert!(used[0] + used[1] > (26576_f64 * 0.85) as u64, "fills machine");
+    }
+
+    #[test]
+    fn single_partition_constructor_matches_legacy_stream() {
+        // `new` must be exactly `new_partitioned` with one whole-machine
+        // partition: same jobs, same gaps, partition always 0.
+        let p = WorkloadProfile::hpc2n();
+        let mut a = BackgroundWorkload::new(p.clone(), 16856, Rng::new(3));
+        let mut b = BackgroundWorkload::new_partitioned(p, &[(16856, 1.0)], Rng::new(3));
+        let mut now = 0;
+        for _ in 0..500 {
+            let (ja, jb) = (a.next_job(), b.next_job());
+            assert_eq!((ja.cores, ja.runtime, ja.user), (jb.cores, jb.runtime, jb.user));
+            assert_eq!(ja.partition.index(), 0);
+            let (ga, gb) = (a.next_gap(now), b.next_gap(now));
+            assert_eq!(ga, gb);
+            now += ga;
+        }
     }
 
     #[test]

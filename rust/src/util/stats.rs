@@ -34,7 +34,14 @@ impl Summary {
         s
     }
 
+    /// Add one observation. Non-finite inputs (NaN, ±∞) are ignored: a
+    /// single NaN would otherwise poison the running mean/variance
+    /// permanently, and `f64::min`/`max` silently drop NaN anyway, which
+    /// would leave min/max inconsistent with the moments.
     pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
         self.n += 1;
         self.total += x;
         let delta = x - self.mean;
@@ -89,7 +96,11 @@ impl Summary {
         self.total
     }
 
-    /// Merge another summary into this one (parallel reduction).
+    /// Merge another summary into this one (parallel reduction). Since
+    /// [`Summary::add`] filters non-finite inputs, both operands' moments
+    /// and min/max are finite whenever `n > 0`, so the merged min/max
+    /// cannot be contaminated by NaN (`f64::min(NaN, x)` returns `x`,
+    /// which would silently disagree with the merged moments).
     pub fn merge(&mut self, other: &Summary) {
         if other.n == 0 {
             return;
@@ -119,12 +130,18 @@ impl Summary {
 
 /// Percentile of a slice (linear interpolation, `q` in [0,1]).
 /// Sorts a copy; fine for report-sized data.
+///
+/// Non-finite values are filtered out before ranking: the previous
+/// `partial_cmp().unwrap()` comparator panicked on any NaN input, and a
+/// NaN/±∞ has no meaningful rank anyway. The comparison itself uses
+/// [`f64::total_cmp`], which is a total order and cannot panic. Returns
+/// `0.0` when no finite values remain, so the result is always NaN-free.
 pub fn percentile(values: &[f64], q: f64) -> f64 {
-    if values.is_empty() {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -194,5 +211,48 @@ mod tests {
     fn pm_formatting() {
         let s = Summary::of(&[1.0, 1.0, 1.0]);
         assert_eq!(s.pm(1), "1.0±0.0");
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_infinities() {
+        // The regression from the issue: this panicked in the sort.
+        let p = percentile(&[f64::NAN, 1.0], 0.5);
+        assert_eq!(p, 1.0);
+        assert!(!p.is_nan());
+        // Infinities are filtered too, not ranked.
+        assert_eq!(percentile(&[f64::INFINITY, 2.0, f64::NEG_INFINITY], 1.0), 2.0);
+        // All-non-finite input degrades to 0.0, never NaN.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_sizes() {
+        assert_eq!(percentile(&[], 0.5), 0.0, "empty input");
+        assert_eq!(percentile(&[7.5], 0.0), 7.5, "single element");
+        assert_eq!(percentile(&[7.5], 1.0), 7.5);
+        // q outside [0,1] clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], -3.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 42.0), 2.0);
+    }
+
+    #[test]
+    fn summary_ignores_non_finite_and_merges_clean() {
+        let mut s = Summary::new();
+        s.add(f64::NAN);
+        s.add(1.0);
+        s.add(f64::INFINITY);
+        s.add(3.0);
+        assert_eq!(s.count(), 2, "non-finite inputs dropped");
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!(s.std().is_finite());
+        // Merge path: NaN-fed summaries stay finite through min/max.
+        let mut left = Summary::of(&[f64::NAN, 5.0]);
+        let right = Summary::of(&[f64::NAN, 1.0]);
+        left.merge(&right);
+        assert_eq!(left.count(), 2);
+        assert_eq!((left.min(), left.max()), (1.0, 5.0));
+        assert!(left.mean().is_finite() && left.std().is_finite());
     }
 }

@@ -18,7 +18,7 @@
 use crate::coordinator::driver::{
     run_single, DriverCtx, DriverOutcome, DriverStatus, StrategyDriver,
 };
-use crate::simulator::{JobId, JobSpec, SimEvent, Simulator};
+use crate::simulator::{JobId, JobSpec, PartitionId, SimEvent, Simulator};
 use crate::workflow::spec::{StageRecord, WorkflowRun, WorkflowSpec};
 use crate::{Cores, Time};
 
@@ -28,6 +28,61 @@ use crate::{Cores, Time};
 /// stage jobs from trivially backfilling into any hole.
 pub fn stage_limit(d: crate::Time) -> crate::Time {
     (2 * d).max(3600)
+}
+
+/// The partitions that can host a request, as `(index, cores)` pairs.
+/// Both closures receive a partition's node size: `width_of` yields the
+/// request width (stage/peak cores) there, `limit_of` the wall-clock
+/// limit that would be requested. A partition qualifies when its capacity
+/// fits the width and its QOS cap (if any) admits the limit. This is the
+/// single eligibility definition shared by ASA's learned routing and the
+/// baselines' first-fit — the strategies must agree on *where a job can
+/// run* for their comparison to be meaningful.
+///
+/// The filters run on single-partition machines too: a request whose
+/// limit exceeds a lone partition's cap would otherwise be clamped at
+/// registration, time out mid-stage and hang the driver. The default
+/// whole-machine partition is uncapped, so legacy configs always yield
+/// exactly partition 0 at the machine-wide node size.
+pub fn eligible_partitions<'a>(
+    sim: &'a Simulator,
+    width_of: impl Fn(Cores) -> Cores + 'a,
+    limit_of: impl Fn(Cores) -> Time + 'a,
+) -> impl Iterator<Item = (usize, Cores)> + 'a {
+    sim.partition_specs()
+        .iter()
+        .enumerate()
+        .filter_map(move |(i, p)| {
+            let cores = width_of(p.cores_per_node);
+            if cores > p.total_cores() {
+                return None;
+            }
+            if p.max_time_limit > 0 && limit_of(p.cores_per_node) > p.max_time_limit {
+                return None;
+            }
+            Some((i, cores))
+        })
+}
+
+/// Partition-selection step for the non-learning baseline strategies:
+/// first-fit over [`eligible_partitions`]. Panics loudly when nothing
+/// fits — the silent alternative is a clamped limit and a hung driver.
+pub fn first_fit_partition(
+    sim: &Simulator,
+    width_of: impl Fn(Cores) -> Cores,
+    limit_of: impl Fn(Cores) -> Time,
+) -> (PartitionId, Cores) {
+    match eligible_partitions(sim, &width_of, limit_of).next() {
+        Some((i, cores)) => (PartitionId(i as u32), cores),
+        None => panic!(
+            "no partition fits the request (capacity or QOS cap); \
+             per-partition widths tried: {:?}",
+            sim.partition_specs()
+                .iter()
+                .map(|p| width_of(p.cores_per_node))
+                .collect::<Vec<_>>()
+        ),
+    }
 }
 
 /// Block until `id` starts; returns the start time.
@@ -112,8 +167,14 @@ impl StrategyDriver for BigJobDriver {
     }
 
     fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
-        let node_cores = sim.config().cores_per_node;
-        let peak = self.wf.peak_cores(self.scale, node_cores);
+        // First-fit partition for the monolithic request (partition 0 at
+        // the machine node size on unpartitioned systems).
+        let (part, peak) = first_fit_partition(
+            sim,
+            |node_cores| self.wf.peak_cores(self.scale, node_cores),
+            |node_cores| self.wf.total_exec(self.scale, node_cores) + 3600,
+        );
+        let node_cores = sim.partition_specs()[part.index()].cores_per_node;
         let total = self.wf.total_exec(self.scale, node_cores);
         let submitted_at = sim.now();
         // Big jobs are padded additively (users size the monolithic request
@@ -121,7 +182,8 @@ impl StrategyDriver for BigJobDriver {
         // which get the WMS's coarse hour-granularity padding.
         let job = sim.submit(
             JobSpec::new(self.user, format!("{}-bigjob", self.wf.name), peak, total)
-                .with_limit(total + 3600),
+                .with_limit(total + 3600)
+                .with_partition(part),
         );
         self.new_jobs.push(job);
         self.state = BigJobState::Queued { job, submitted_at };
@@ -155,7 +217,10 @@ impl StrategyDriver for BigJobDriver {
                 started,
             } => match ev {
                 SimEvent::Finished { id, time } if id == job => {
-                    let node_cores = sim.config().cores_per_node;
+                    // Node granularity of the partition the job ran in
+                    // (the machine-wide size on unpartitioned systems).
+                    let part = sim.job(id).partition.index();
+                    let node_cores = sim.partition_specs()[part].cores_per_node;
                     let peak = self.wf.peak_cores(self.scale, node_cores);
                     // Reconstruct per-stage boundaries inside the single
                     // allocation; every stage is charged at the peak width
@@ -259,9 +324,12 @@ impl PerStageDriver {
     }
 
     fn submit_stage(&mut self, sim: &mut Simulator, i: usize) {
-        let node_cores = sim.config().cores_per_node;
         let stage = &self.wf.stages[i];
-        let cores = stage.cores(self.scale, node_cores);
+        let (part, cores) = first_fit_partition(
+            sim,
+            |node_cores| stage.cores(self.scale, node_cores),
+            |node_cores| stage_limit(stage.duration(stage.cores(self.scale, node_cores))),
+        );
         let d = stage.duration(cores);
         let sub = sim.now();
         let job = sim.submit(
@@ -271,7 +339,8 @@ impl PerStageDriver {
                 cores,
                 d,
             )
-            .with_limit(stage_limit(d)),
+            .with_limit(stage_limit(d))
+            .with_partition(part),
         );
         self.new_jobs.push(job);
         self.state = PerStageState::Queued { stage: i, job, sub };
@@ -319,8 +388,9 @@ impl StrategyDriver for PerStageDriver {
                 start,
             } => match ev {
                 SimEvent::Finished { id, time } if id == job => {
-                    let node_cores = sim.config().cores_per_node;
-                    let cores = self.wf.stages[stage].cores(self.scale, node_cores);
+                    // The width actually allocated (partition node sizes
+                    // may differ from the machine-wide default).
+                    let cores = sim.job(id).cores;
                     self.records.push(StageRecord {
                         stage,
                         name: self.wf.stages[stage].name,
@@ -455,6 +525,60 @@ mod tests {
             assert!(w[1].started >= w[1].submitted);
         }
         assert_eq!(run.finished_at, run.stages.last().unwrap().finished);
+    }
+
+    #[test]
+    fn baselines_run_on_partitioned_machine() {
+        let mut s = Simulator::new_empty(SystemConfig::testbed_partitioned(64, 28));
+        let wf = apps::montage();
+        let big = run_big_job(&mut s, 1, &wf, 112);
+        let per = run_per_stage(&mut s, 2, &wf, 112);
+        assert_eq!(big.stages.len(), 9);
+        assert_eq!(per.stages.len(), 9);
+        assert_eq!(big.total_wait(), 0);
+        assert_eq!(per.total_wait(), 0);
+    }
+
+    #[test]
+    fn first_fit_skips_partitions_that_cannot_host_the_job() {
+        // Partition 0 is too small for the 112-core peak; partition 1 has
+        // a QOS cap admitting it. Big-Job must land on partition 1 — a
+        // wrong route would either panic at registration (capacity) or
+        // time out at the clamped limit (the driver panics on both).
+        let mut cfg = SystemConfig::testbed_partitioned(64, 28);
+        cfg.partitions[0].nodes = 1; // 28 cores: peak 112 cannot fit
+        let mut s = Simulator::new_empty(cfg);
+        let wf = apps::montage();
+        let run = run_big_job(&mut s, 1, &wf, 112);
+        assert_eq!(run.total_wait(), 0);
+        assert_eq!(run.makespan(), wf.total_exec(112, 28));
+
+        // QOS variant: partition 0 fits by capacity but caps wall time
+        // below the big-job request; first-fit must skip it.
+        let mut cfg = SystemConfig::testbed_partitioned(64, 28);
+        cfg.partitions[0].max_time_limit = 600;
+        let mut s = Simulator::new_empty(cfg);
+        let run = run_big_job(&mut s, 1, &wf, 112);
+        assert_eq!(run.makespan(), wf.total_exec(112, 28), "no timeout");
+    }
+
+    #[test]
+    #[should_panic(expected = "no partition fits")]
+    fn lone_capped_partition_fails_loudly_instead_of_hanging() {
+        // A single partition whose QOS cap cannot admit the big-job limit:
+        // routing must panic up front — the silent alternative is a
+        // clamped limit, a mid-stage timeout, and a driver that waits for
+        // a Finished event that never comes.
+        let mut cfg = SystemConfig::testbed(64, 28);
+        cfg.partitions = vec![crate::simulator::PartitionSpec {
+            name: "capped",
+            nodes: 64,
+            cores_per_node: 28,
+            max_time_limit: 600,
+            trace_share: 1.0,
+        }];
+        let mut s = Simulator::new_empty(cfg);
+        run_big_job(&mut s, 1, &apps::montage(), 112);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use asa::coordinator::pool::ResourcePool;
 use asa::experiments::campaign::Strategy;
 use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
 use asa::simulator::{
-    Dependency, JobId, JobSpec, SchedEngine, SimEvent, Simulator, SystemConfig,
+    Dependency, JobId, JobSpec, PartitionId, SchedEngine, SimEvent, Simulator, SystemConfig,
 };
 use asa::util::par::par_map;
 use asa::util::propcheck::check;
@@ -159,6 +159,7 @@ enum OracleAction {
         runtime: Time,
         limit: Time,
         dep: Option<ScriptDep>,
+        part: u32,
     },
     /// Submit at a future absolute time (offset applied when executed).
     SubmitAt {
@@ -166,6 +167,7 @@ enum OracleAction {
         user: u32,
         cores: u32,
         runtime: Time,
+        part: u32,
     },
     /// Cancel the job created by script submission `idx` (whatever state
     /// it is in — pending, held, running or already terminal).
@@ -193,10 +195,12 @@ fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimE
                 runtime,
                 limit,
                 dep,
+                part,
             } => {
                 let mut spec =
                     JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
-                        .with_limit(*limit);
+                        .with_limit(*limit)
+                        .with_partition(PartitionId(*part));
                 match dep {
                     Some(ScriptDep::AfterOk(parents)) => {
                         spec = spec.with_dependency(Dependency::AfterOk(
@@ -215,8 +219,10 @@ fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimE
                 user,
                 cores,
                 runtime,
+                part,
             } => {
-                let spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime);
+                let spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
+                    .with_partition(PartitionId(*part));
                 ids.push(sim.submit_at(sim.now() + delay, spec));
             }
             OracleAction::Cancel(idx) => {
@@ -232,6 +238,108 @@ fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimE
     events
 }
 
+/// Random workload script: dependencies, --begin constraints, future
+/// submissions and cancels at arbitrary moments. `part_cap` is the core
+/// capacity of each of the `n_parts` partitions; submissions pick a
+/// partition uniformly (always 0 for a single-partition machine).
+fn gen_oracle_script(
+    g: &mut asa::util::propcheck::Gen,
+    part_cap: u32,
+    n_parts: u32,
+) -> Vec<OracleAction> {
+    let n_actions = g.usize(3, 40);
+    let mut script: Vec<OracleAction> = Vec::new();
+    let mut t: Time = 0;
+    let mut n_submitted = 0usize;
+    for _ in 0..n_actions {
+        match g.usize(0, 9) {
+            0 | 1 | 2 | 3 => {
+                let dep = if n_submitted == 0 {
+                    None
+                } else {
+                    match g.usize(0, 5) {
+                        0 | 1 => {
+                            let k = g.usize(1, 3usize.min(n_submitted));
+                            let parents: Vec<usize> =
+                                (0..k).map(|_| g.usize(0, n_submitted - 1)).collect();
+                            Some(ScriptDep::AfterOk(parents))
+                        }
+                        2 => Some(ScriptDep::BeginDelay(g.i64(0, 800))),
+                        _ => None,
+                    }
+                };
+                let runtime = g.i64(1, 600);
+                // Limits may undershoot the runtime: exercises timeouts
+                // and the resulting dependency-cancellation cascades.
+                let limit = (runtime + g.i64(-300, 400)).max(1);
+                script.push(OracleAction::Submit {
+                    user: g.u32(1, 6),
+                    cores: g.u32(1, part_cap),
+                    runtime,
+                    limit,
+                    dep,
+                    part: g.u32(1, n_parts) - 1,
+                });
+                n_submitted += 1;
+            }
+            4 => {
+                script.push(OracleAction::SubmitAt {
+                    delay: g.i64(1, 500),
+                    user: g.u32(1, 6),
+                    cores: g.u32(1, part_cap),
+                    runtime: g.i64(1, 600),
+                    part: g.u32(1, n_parts) - 1,
+                });
+                n_submitted += 1;
+            }
+            5 if n_submitted > 0 => {
+                script.push(OracleAction::Cancel(g.usize(0, n_submitted - 1)));
+            }
+            _ => {
+                t += g.i64(1, 400);
+                script.push(OracleAction::RunUntil(t));
+            }
+        }
+    }
+    script
+}
+
+/// Observable stream + metrics fingerprint of one scripted run.
+type OracleFingerprint = (
+    Vec<SimEvent>,
+    u64,
+    u64,
+    u64,
+    u64,
+    u64,
+    u64,
+    u64,
+    usize,
+    u32,
+);
+
+fn run_oracle_script(
+    cfg: SystemConfig,
+    engine: SchedEngine,
+    script: &[OracleAction],
+) -> OracleFingerprint {
+    let mut sim = Simulator::new_empty_with_engine(cfg, engine);
+    let events = apply_oracle_script(&mut sim, script);
+    let m = &sim.metrics;
+    (
+        events,
+        m.started,
+        m.completed,
+        m.cancelled,
+        m.timed_out,
+        m.fg_wait.count(),
+        m.fg_wait.mean().to_bits(),
+        m.mean_utilization(sim.now().max(1)).to_bits(),
+        sim.queue_depth(),
+        sim.cluster().free_cores(),
+    )
+}
+
 #[test]
 fn prop_incremental_engine_matches_naive_oracle() {
     // The tentpole equivalence property: for any workload script (random
@@ -243,79 +351,65 @@ fn prop_incremental_engine_matches_naive_oracle() {
     check("incremental engine == naive oracle", 60, |g| {
         let nodes = g.u32(2, 10);
         let cpn = g.u32(1, 8);
-        let total = nodes * cpn;
-        let n_actions = g.usize(3, 40);
-        let mut script: Vec<OracleAction> = Vec::new();
-        let mut t: Time = 0;
-        let mut n_submitted = 0usize;
-        for _ in 0..n_actions {
-            match g.usize(0, 9) {
-                0 | 1 | 2 | 3 => {
-                    let dep = if n_submitted == 0 {
-                        None
-                    } else {
-                        match g.usize(0, 5) {
-                            0 | 1 => {
-                                let k = g.usize(1, 3usize.min(n_submitted));
-                                let parents: Vec<usize> =
-                                    (0..k).map(|_| g.usize(0, n_submitted - 1)).collect();
-                                Some(ScriptDep::AfterOk(parents))
-                            }
-                            2 => Some(ScriptDep::BeginDelay(g.i64(0, 800))),
-                            _ => None,
-                        }
-                    };
-                    let runtime = g.i64(1, 600);
-                    // Limits may undershoot the runtime: exercises timeouts
-                    // and the resulting dependency-cancellation cascades.
-                    let limit = (runtime + g.i64(-300, 400)).max(1);
-                    script.push(OracleAction::Submit {
-                        user: g.u32(1, 6),
-                        cores: g.u32(1, total),
-                        runtime,
-                        limit,
-                        dep,
-                    });
-                    n_submitted += 1;
-                }
-                4 => {
-                    script.push(OracleAction::SubmitAt {
-                        delay: g.i64(1, 500),
-                        user: g.u32(1, 6),
-                        cores: g.u32(1, total),
-                        runtime: g.i64(1, 600),
-                    });
-                    n_submitted += 1;
-                }
-                5 if n_submitted > 0 => {
-                    script.push(OracleAction::Cancel(g.usize(0, n_submitted - 1)));
-                }
-                _ => {
-                    t += g.i64(1, 400);
-                    script.push(OracleAction::RunUntil(t));
-                }
-            }
-        }
-        let run = |engine: SchedEngine| {
-            let mut sim =
-                Simulator::new_empty_with_engine(SystemConfig::testbed(nodes, cpn), engine);
-            let events = apply_oracle_script(&mut sim, &script);
-            let m = &sim.metrics;
-            (
-                events,
-                m.started,
-                m.completed,
-                m.cancelled,
-                m.timed_out,
-                m.fg_wait.count(),
-                m.fg_wait.mean().to_bits(),
-                m.mean_utilization(sim.now().max(1)).to_bits(),
-                sim.queue_depth(),
-                sim.cluster().free_cores(),
-            )
-        };
-        let inc = run(SchedEngine::Incremental);
-        let naive = run(SchedEngine::Naive);
+        let script = gen_oracle_script(g, nodes * cpn, 1);
+        let inc = run_oracle_script(
+            SystemConfig::testbed(nodes, cpn),
+            SchedEngine::Incremental,
+            &script,
+        );
+        let naive = run_oracle_script(
+            SystemConfig::testbed(nodes, cpn),
+            SchedEngine::Naive,
+            &script,
+        );
+        assert_eq!(inc, naive, "script: {script:?}");
+    });
+}
+
+#[test]
+fn prop_partitioned_engines_agree_and_single_partition_matches_legacy() {
+    // Two partition invariants at once:
+    // 1. On a two-partition machine, the incremental engine still emits
+    //    the naive oracle's exact event stream (per-partition passes
+    //    included).
+    // 2. A config *declaring* one whole-machine partition fingerprints
+    //    identically to the legacy anonymous-partition config on the same
+    //    script — the 1-partition configuration is bit-identical to the
+    //    pre-partition machine.
+    check("partitioned engine equivalence", 40, |g| {
+        let nodes = g.u32(2, 8);
+        let cpn = g.u32(1, 6);
+        // -- invariant 2: explicit single partition == legacy --
+        let single = gen_oracle_script(g, nodes * cpn, 1);
+        let legacy = run_oracle_script(
+            SystemConfig::testbed(nodes, cpn),
+            SchedEngine::Incremental,
+            &single,
+        );
+        let mut explicit_cfg = SystemConfig::testbed(nodes, cpn);
+        explicit_cfg.partitions = vec![asa::simulator::PartitionSpec {
+            name: "all",
+            nodes,
+            cores_per_node: cpn,
+            max_time_limit: 0,
+            trace_share: 1.0,
+        }];
+        let explicit =
+            run_oracle_script(explicit_cfg, SchedEngine::Incremental, &single);
+        assert_eq!(legacy, explicit, "explicit 1-partition must match legacy");
+
+        // -- invariant 1: two-partition incremental == naive oracle --
+        let script = gen_oracle_script(g, nodes * cpn, 2);
+        let inc = run_oracle_script(
+            SystemConfig::testbed_partitioned(nodes, cpn),
+            SchedEngine::Incremental,
+            &script,
+        );
+        let naive = run_oracle_script(
+            SystemConfig::testbed_partitioned(nodes, cpn),
+            SchedEngine::Naive,
+            &script,
+        );
         assert_eq!(inc, naive, "script: {script:?}");
     });
 }
@@ -510,6 +604,103 @@ fn prop_pool_core_conservation() {
         }
         assert_eq!(pool.running_tasks(), 0);
         assert_eq!(pool.free_cores(), total, "cores leaked");
+    });
+}
+
+#[test]
+fn prop_pool_survives_interleaved_cancel_fail_and_drain() {
+    // The pool panic-path regression (issue satellite): random
+    // interleavings of launch / complete / fail(retry) / cancel /
+    // allocation register+release must never panic — cancels leave stale
+    // queue ids that `drain_queue`/`place` used to unwrap on — and cores
+    // must be conserved throughout.
+    use asa::coordinator::pool::{TaskId, TaskState};
+    check("pool no-panic under cancel/fail interleavings", 150, |g| {
+        let mut pool = ResourcePool::new();
+        let mut next_alloc: u64 = 0;
+        let mut live_allocs: Vec<JobId> = Vec::new();
+        let mut tasks: Vec<TaskId> = Vec::new();
+        // Seed with one allocation so early launches can place.
+        pool.register_allocation(JobId(next_alloc), g.u32(1, 16));
+        live_allocs.push(JobId(next_alloc));
+        next_alloc += 1;
+        let steps = g.usize(5, 60);
+        for _ in 0..steps {
+            match g.usize(0, 9) {
+                // Launch a task (may queue).
+                0 | 1 | 2 => {
+                    tasks.push(pool.launch(g.u32(1, 12)));
+                }
+                // Cancel a random task in ANY state, stale ids included.
+                3 | 4 => {
+                    if !tasks.is_empty() {
+                        let tid = tasks[g.usize(0, tasks.len() - 1)];
+                        pool.cancel(tid);
+                    }
+                }
+                // Complete a running task.
+                5 => {
+                    let running: Vec<TaskId> = tasks
+                        .iter()
+                        .copied()
+                        .filter(|&t| pool.state(t) == Some(TaskState::Running))
+                        .collect();
+                    if !running.is_empty() {
+                        pool.complete(running[g.usize(0, running.len() - 1)]);
+                    }
+                }
+                // Fail a running task, sometimes with a retry relaunch.
+                6 => {
+                    let running: Vec<TaskId> = tasks
+                        .iter()
+                        .copied()
+                        .filter(|&t| pool.state(t) == Some(TaskState::Running))
+                        .collect();
+                    if !running.is_empty() {
+                        let tid = running[g.usize(0, running.len() - 1)];
+                        if let Some(retry) = pool.fail(tid, g.bool()) {
+                            tasks.push(retry);
+                        }
+                    }
+                }
+                // Register a fresh allocation (drains the queue).
+                7 => {
+                    pool.register_allocation(JobId(next_alloc), g.u32(1, 16));
+                    live_allocs.push(JobId(next_alloc));
+                    next_alloc += 1;
+                }
+                // Release an allocation (orphans + migrates its tasks).
+                _ => {
+                    if !live_allocs.is_empty() {
+                        let idx = g.usize(0, live_allocs.len() - 1);
+                        let job = live_allocs.swap_remove(idx);
+                        pool.release_allocation(job);
+                    }
+                }
+            }
+            // Invariant after every step: free never exceeds capacity.
+            assert!(pool.free_cores() <= pool.total_cores());
+        }
+        // Drain everything still running; the pool must settle with all
+        // registered capacity free again.
+        loop {
+            let running: Vec<TaskId> = tasks
+                .iter()
+                .copied()
+                .filter(|&t| pool.state(t) == Some(TaskState::Running))
+                .collect();
+            if running.is_empty() {
+                break;
+            }
+            for t in running {
+                // A task may have been completed via a retry alias; guard.
+                if pool.state(t) == Some(TaskState::Running) {
+                    pool.complete(t);
+                }
+            }
+        }
+        assert_eq!(pool.free_cores(), pool.total_cores(), "cores leaked");
+        assert_eq!(pool.running_tasks(), 0);
     });
 }
 
