@@ -56,6 +56,24 @@ fn dep_web() -> u64 {
     sim.metrics.completed
 }
 
+/// Same-tick batching: waves of identical jobs all start together and all
+/// finish at the same instant, so each wave's submissions and completions
+/// drain as single ticks (one scheduling pass each) instead of one pass
+/// per event.
+fn finish_storm() -> u64 {
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(64, 28));
+    for wave in 0..50i64 {
+        for j in 0..400u32 {
+            sim.submit_at(
+                wave * 1_000,
+                JobSpec::new(1 + j % 32, format!("w{wave}j{j}"), 4, 600),
+            );
+        }
+    }
+    sim.run_until(51_000);
+    sim.metrics.passes
+}
+
 fn background_churn(system: SystemConfig, horizon_secs: i64) -> u64 {
     let mut sim = Simulator::new(system, 42);
     sim.run_until(horizon_secs);
@@ -83,6 +101,7 @@ fn main() {
     b.case_throughput_of("sim: deep queue 1k dep-held, 2k churn", || deep_queue(1_000));
     b.case_throughput_of("sim: deep queue 10k dep-held, 2k churn", || deep_queue(10_000));
     b.case_throughput_of("sim: dep chain 300 + fanout 500", dep_web);
+    b.case_throughput_of("sim: same-tick finish storm", finish_storm);
 
     // 1c) Long-horizon churn: one week of HPC2n background load, with the
     // arena-boundedness gauges captured from the (seeded, reproducible)

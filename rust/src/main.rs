@@ -36,6 +36,7 @@ fn main() {
         "usage" => cmd_usage(args),
         "regret" => cmd_regret(args),
         "bench-diff" => cmd_bench_diff(args),
+        "bench-summary" => cmd_bench_summary(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -65,6 +66,8 @@ fn print_usage() {
            usage        Fig. 9: total resource usage per strategy\n\
            regret       Appendix A: measured regret vs Theorem-1 bound\n\
            bench-diff   compare two BENCH_*.json files (perf trajectory)\n\
+           bench-summary render BENCH_*.json runs as a markdown ns/op table\n\
+                        with deltas vs committed baselines (CI artifact)\n\
            info         artifact/runtime status\n\n\
          Systems: hpc2n, uppmax, two-center (two centres as partitions of\n\
          one scheduling domain with per-(partition, geometry) ASA\n\
@@ -601,6 +604,110 @@ fn cmd_bench_diff(argv: Vec<String>) -> i32 {
     } else {
         println!("no regressions beyond {warn_pct}%");
     }
+    0
+}
+
+/// `asa bench-summary`: render freshly generated `BENCH_<group>.json`
+/// files as one PR-comment-friendly markdown document — per-case ns/op
+/// (derived from `mean_ms / items`; ms/iter for cases without an item
+/// count) with the delta against the committed baseline of the same
+/// group. Pure JSON-to-markdown: no bench harness runs here, so CI can
+/// call it right after the smoke benches without another `cargo bench`.
+fn cmd_bench_summary(argv: Vec<String>) -> i32 {
+    let cli = asa::util::cli::Cli::new(
+        "asa bench-summary",
+        "markdown ns/op summary of bench JSON runs (positional: fresh \
+         BENCH_<group>.json files)",
+    )
+    .opt_default(
+        "baseline-dir",
+        ".",
+        "directory holding the committed BENCH_<group>.json baselines",
+    )
+    .opt_default("out", "perf-summary.md", "markdown output path");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    if a.positional.is_empty() {
+        eprintln!("bench-summary requires at least one fresh BENCH_<group>.json");
+        return 2;
+    }
+    // label → (mean_ms, items) for every case of one group document.
+    type Cases = Vec<(String, f64, Option<i64>)>;
+    let load = |path: &str| -> Option<(String, Cases)> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let doc = asa::util::json::Json::parse(&text).ok()?;
+        let group = doc.get("group")?.as_str()?.to_string();
+        let cases = doc
+            .get("results")?
+            .as_arr()?
+            .iter()
+            .filter_map(|c| {
+                Some((
+                    c.get("label")?.as_str()?.to_string(),
+                    c.get("mean_ms")?.as_f64()?,
+                    c.get("items").and_then(|v| v.as_i64()),
+                ))
+            })
+            .collect();
+        Some((group, cases))
+    };
+    // ns per work item when the case counts items, ms per iteration
+    // otherwise — the same quantity bench-diff guards, in PR-readable
+    // units.
+    let metric = |mean_ms: f64, items: Option<i64>| -> (f64, &'static str) {
+        match items {
+            Some(n) if n > 0 => (mean_ms * 1e6 / n as f64, "ns/op"),
+            _ => (mean_ms, "ms/iter"),
+        }
+    };
+    let mut md = String::from("## Perf summary\n");
+    let dir = a.get_or("baseline-dir", ".");
+    for fresh_path in &a.positional {
+        let Some((group, fresh)) = load(fresh_path) else {
+            eprintln!("bench-summary: cannot read bench JSON {fresh_path}");
+            return 2;
+        };
+        let base = load(&format!("{dir}/BENCH_{group}.json"))
+            .map(|(_, cases)| cases)
+            .unwrap_or_default();
+        md.push_str(&format!(
+            "\n### {group}\n\n| case | metric | baseline | this run | delta |\n\
+             |---|---|---:|---:|---:|\n"
+        ));
+        for (label, mean_ms, items) in &fresh {
+            let (fresh_v, unit) = metric(*mean_ms, *items);
+            let (base_cell, delta_cell) = match base
+                .iter()
+                .find(|(l, _, _)| l == label)
+                .map(|(_, m, n)| metric(*m, *n))
+            {
+                Some((base_v, base_unit)) if base_unit == unit && base_v > 0.0 => (
+                    format!("{base_v:.1}"),
+                    format!("{:+.1}%", (fresh_v / base_v - 1.0) * 100.0),
+                ),
+                _ => ("—".to_string(), "new".to_string()),
+            };
+            md.push_str(&format!(
+                "| {label} | {unit} | {base_cell} | {fresh_v:.1} | {delta_cell} |\n"
+            ));
+        }
+    }
+    md.push_str(
+        "\nDeltas compare against the committed `BENCH_<group>.json` \
+         baselines (lower is better).\n",
+    );
+    print!("{md}");
+    let out = a.get_or("out", "perf-summary.md");
+    if let Err(e) = std::fs::write(out, &md) {
+        eprintln!("bench-summary: cannot write {out}: {e}");
+        return 2;
+    }
+    println!("-> wrote {out}");
     0
 }
 

@@ -1,11 +1,15 @@
 //! Time-ordered event heap for the discrete-event engine.
 //!
 //! Ties are broken by insertion sequence so simulation replay is
-//! deterministic regardless of heap internals.
+//! deterministic regardless of heap internals. Deduplicated samples are
+//! *exactly* removed on retraction (lazy deletion plus periodic heap
+//! compaction), so neither the dedup index nor the heap accumulates
+//! tombstones under sustained submit/cancel churn.
 
+use crate::util::hash::{FxHashMap, FxHashSet};
 use crate::Time;
 use std::cmp::Ordering;
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::BinaryHeap;
 
 /// Internal engine events.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -51,15 +55,24 @@ impl Ord for Entry {
     }
 }
 
+/// Lazy-deletion compaction trigger: rebuild the heap once at least this
+/// many retracted entries linger *and* they make up half the heap.
+const COMPACT_MIN_DEAD: usize = 64;
+
 /// Deterministic min-heap of timed events.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Entry>,
     seq: u64,
-    /// Times with an outstanding deduplicated [`EventKind::Sample`] (see
+    /// Times with an outstanding deduplicated [`EventKind::Sample`],
+    /// mapped to the heap sequence number of the live entry (see
     /// [`EventQueue::push_sample_dedup`]); entries clear when the sample
-    /// pops.
-    sample_times: BTreeSet<Time>,
+    /// pops or is retracted.
+    sample_times: FxHashMap<Time, u64>,
+    /// Sequence numbers of retracted samples whose heap entry has not been
+    /// physically removed yet (lazy deletion). Every member names exactly
+    /// one entry still in `heap`.
+    dead_samples: FxHashSet<u64>,
 }
 
 impl EventQueue {
@@ -80,21 +93,45 @@ impl EventQueue {
     /// identical samples (one per pass) that all fire no-op passes at the
     /// same instant.
     pub fn push_sample_dedup(&mut self, time: Time) -> bool {
-        if !self.sample_times.insert(time) {
+        if self.sample_times.contains_key(&time) {
             return false;
         }
+        self.sample_times.insert(time, self.seq);
         self.push(time, EventKind::Sample);
         true
     }
 
     /// Withdraw an outstanding deduplicated sample time (the job that
-    /// wanted a wakeup at `time` was cancelled). The already-queued heap
-    /// entry still pops — firing a redundant scheduling pass is harmless
-    /// and keeps engine equivalence — but the dedup set stays pruned and
-    /// the time may be re-requested by a later submission. Returns whether
-    /// an entry was removed.
+    /// wanted a wakeup at `time` was cancelled). The queued heap entry is
+    /// marked dead and will never fire: it is skipped on pop/peek and
+    /// physically removed by the next compaction, so sustained
+    /// submit/cancel churn leaves neither index nor heap residue. Returns
+    /// whether an entry was removed.
     pub fn retract_sample(&mut self, time: Time) -> bool {
-        self.sample_times.remove(&time)
+        match self.sample_times.remove(&time) {
+            Some(seq) => {
+                self.dead_samples.insert(seq);
+                self.maybe_compact();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Rebuild the heap without dead entries once tombstones are both
+    /// numerous and a large fraction of it (amortized O(1) per retract).
+    fn maybe_compact(&mut self) {
+        if self.dead_samples.len() >= COMPACT_MIN_DEAD
+            && 2 * self.dead_samples.len() >= self.heap.len()
+        {
+            let dead = &self.dead_samples;
+            let live: Vec<Entry> = std::mem::take(&mut self.heap)
+                .into_iter()
+                .filter(|e| !dead.contains(&e.seq))
+                .collect();
+            self.heap = BinaryHeap::from(live);
+            self.dead_samples.clear();
+        }
     }
 
     /// Outstanding deduplicated sample times (observability for the
@@ -103,25 +140,74 @@ impl EventQueue {
         self.sample_times.len()
     }
 
+    /// Discard dead (retracted) samples sitting at the top of the heap.
+    fn purge_dead_top(&mut self) {
+        while let Some(e) = self.heap.peek() {
+            if matches!(e.kind, EventKind::Sample) && self.dead_samples.contains(&e.seq) {
+                let e = self.heap.pop().expect("peeked entry pops");
+                self.dead_samples.remove(&e.seq);
+            } else {
+                break;
+            }
+        }
+    }
+
     pub fn pop(&mut self) -> Option<(Time, EventKind)> {
+        self.purge_dead_top();
         self.heap.pop().map(|e| {
-            if matches!(e.kind, EventKind::Sample) {
+            // Clear the dedup slot only when this entry owns it: Samples
+            // may also be pushed plain (the naive engine's begin-wakeups
+            // bypass deduplication) and must not disturb the index.
+            if matches!(e.kind, EventKind::Sample)
+                && self.sample_times.get(&e.time) == Some(&e.seq)
+            {
                 self.sample_times.remove(&e.time);
             }
             (e.time, e.kind)
         })
     }
 
-    pub fn peek_time(&self) -> Option<Time> {
+    /// Drain every event scheduled at the earliest outstanding timestamp
+    /// into `out` (in insertion order) and return that timestamp. One call
+    /// corresponds to one simulation *tick*: the caller handles the whole
+    /// batch and then runs at most one scheduling pass. Events pushed at
+    /// the same timestamp *while the batch is being handled* are not part
+    /// of it — they carry later sequence numbers and form a follow-up
+    /// batch at the same time, exactly where one-at-a-time popping would
+    /// have processed them.
+    pub fn pop_batch_at(&mut self, out: &mut Vec<EventKind>) -> Option<Time> {
+        let (time, kind) = self.pop()?;
+        out.push(kind);
+        // `peek_time` purges dead samples first, so a tombstone at `time`
+        // can never smuggle a later-timestamp entry into this batch.
+        while self.peek_time() == Some(time) {
+            let (_, kind) = self.pop().expect("peeked entry pops");
+            out.push(kind);
+        }
+        Some(time)
+    }
+
+    /// Time of the next *live* event. Needs `&mut self` because retracted
+    /// samples at the top are physically discarded first — reporting a
+    /// dead entry's time could make `step_until` overshoot its deadline.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.purge_dead_top();
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Live entries (retracted-but-unpurged samples excluded).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.dead_samples.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
+    }
+
+    /// Physical heap entries including dead tombstones (boundedness tests).
+    #[cfg(test)]
+    fn physical_len(&self) -> usize {
+        self.heap.len()
     }
 }
 
@@ -173,13 +259,28 @@ mod tests {
         assert!(q.retract_sample(100));
         assert_eq!(q.outstanding_samples(), 0, "eagerly pruned");
         assert!(!q.retract_sample(100), "second retract is a no-op");
+        assert_eq!(q.len(), 0, "retracted entry no longer counts as live");
         // The time may be requested again by a later submission...
         assert!(q.push_sample_dedup(100));
-        // ...and the stale heap entry still fires (harmless extra pass).
-        assert_eq!(q.len(), 2);
+        assert_eq!(q.len(), 1);
+        // ...and only the live re-request fires; the retracted entry never
+        // does.
         assert_eq!(q.pop(), Some((100, EventKind::Sample)));
-        assert_eq!(q.pop(), Some((100, EventKind::Sample)));
+        assert_eq!(q.pop(), None);
         assert_eq!(q.outstanding_samples(), 0);
+    }
+
+    #[test]
+    fn retracted_sample_does_not_mask_peek_deadline() {
+        let mut q = EventQueue::new();
+        assert!(q.push_sample_dedup(50));
+        q.push(200, EventKind::TraceArrival);
+        assert!(q.retract_sample(50));
+        // The dead entry at t=50 must not be reported: a step_until(100)
+        // caller would otherwise advance into the t=200 event.
+        assert_eq!(q.peek_time(), Some(200));
+        assert_eq!(q.pop(), Some((200, EventKind::TraceArrival)));
+        assert!(q.pop().is_none());
     }
 
     #[test]
@@ -193,5 +294,66 @@ mod tests {
         // Once the sample fired, the same time may be scheduled again.
         assert!(q.push_sample_dedup(100));
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_batch_drains_exactly_one_timestamp() {
+        let mut q = EventQueue::new();
+        q.push(10, EventKind::Submit(JobId(1)));
+        q.push(10, EventKind::Finish(JobId(2)));
+        q.push(10, EventKind::TraceArrival);
+        q.push(20, EventKind::Submit(JobId(3)));
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch_at(&mut out), Some(10));
+        assert_eq!(
+            out,
+            vec![
+                EventKind::Submit(JobId(1)),
+                EventKind::Finish(JobId(2)),
+                EventKind::TraceArrival,
+            ],
+            "whole tick drained in insertion order"
+        );
+        assert_eq!(q.len(), 1, "later timestamp left for the next tick");
+        out.clear();
+        assert_eq!(q.pop_batch_at(&mut out), Some(20));
+        assert_eq!(out, vec![EventKind::Submit(JobId(3))]);
+        assert_eq!(q.pop_batch_at(&mut out), None);
+    }
+
+    #[test]
+    fn pop_batch_skips_dead_samples_without_leaking_later_events() {
+        let mut q = EventQueue::new();
+        q.push(10, EventKind::Submit(JobId(1)));
+        assert!(q.push_sample_dedup(10));
+        q.push(11, EventKind::Finish(JobId(2)));
+        assert!(q.retract_sample(10));
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch_at(&mut out), Some(10));
+        assert_eq!(
+            out,
+            vec![EventKind::Submit(JobId(1))],
+            "dead sample skipped; t=11 event must not join the t=10 batch"
+        );
+        out.clear();
+        assert_eq!(q.pop_batch_at(&mut out), Some(11));
+        assert_eq!(out, vec![EventKind::Finish(JobId(2))]);
+    }
+
+    #[test]
+    fn dedup_bookkeeping_stays_bounded_under_churn() {
+        let mut q = EventQueue::new();
+        for i in 0..10_000i64 {
+            assert!(q.push_sample_dedup(1_000 + i));
+            assert!(q.retract_sample(1_000 + i));
+            assert_eq!(q.outstanding_samples(), 0, "dedup index fully cleared");
+            assert_eq!(q.len(), 0, "no live residue");
+            assert!(
+                q.physical_len() <= 2 * COMPACT_MIN_DEAD,
+                "compaction bounds heap tombstones (len {} at iter {i})",
+                q.physical_len()
+            );
+        }
+        assert!(q.pop().is_none(), "nothing ever fires");
     }
 }

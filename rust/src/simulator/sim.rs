@@ -11,7 +11,7 @@
 //! jobs churn underneath without producing observable events, exactly as
 //! other users' jobs do on a real system.
 //!
-//! Jobs live in a recycling, generational, hot/cold-split arena
+//! Jobs live in a recycling, generational, scan/hot/cold-split arena
 //! ([`crate::simulator::store::JobStore`]): background jobs are retired the
 //! moment they reach a terminal state, foreground jobs when the caller
 //! releases them with [`Simulator::retire`], so month-scale simulations run
@@ -105,13 +105,16 @@ pub struct Simulator {
     engine: SchedEngine,
     now: Time,
     events: EventQueue,
-    /// Recycling generational job arena (hot/cold split; see `store`).
+    /// Recycling generational job arena (scan/hot/cold split; see `store`).
     store: JobStore,
-    /// Incremental engine: jobs eligible to schedule right now (dependency
-    /// satisfied). Naive oracle: every Pending job, dependency-held or not.
-    pending: Vec<JobId>,
+    /// Per-partition pending queues, indexed by partition id. Partition
+    /// membership is derived exactly once — when a job enters its queue —
+    /// so the scheduling pass never re-buckets candidates. Incremental
+    /// engine: jobs eligible to schedule right now (dependency satisfied).
+    /// Naive oracle: every Pending job, dependency-held or not.
+    queues: Vec<Vec<JobId>>,
     /// Number of dependency-parked jobs (incremental engine only; the
-    /// naive oracle keeps them inside `pending`).
+    /// naive oracle keeps them inside the partition queues).
     held_count: usize,
     /// Reverse-dependency index: parent → children waiting on its
     /// completion (one entry per dependency occurrence). Turns
@@ -138,6 +141,8 @@ pub struct Simulator {
     cand_bufs: Vec<Vec<Candidate>>,
     /// Reusable sort/merge buffers for the scheduling pass.
     scratch: PassScratch,
+    /// Reusable buffer for one tick's drained events (see `advance_tick`).
+    tick_batch: Vec<EventKind>,
     /// Foreground users already seeded with pre-existing usage.
     seeded_users: FxHashSet<u32>,
     usage_rng: Rng,
@@ -176,7 +181,7 @@ impl Simulator {
             now: 0,
             events: EventQueue::new(),
             store: JobStore::new(),
-            pending: Vec::new(),
+            queues: vec![Vec::new(); caps.len()],
             held_count: 0,
             dep_children: FxHashMap::default(),
             begin_set: BTreeSet::new(),
@@ -185,6 +190,7 @@ impl Simulator {
             need_pass: false,
             cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
+            tick_batch: Vec::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
         };
@@ -213,7 +219,7 @@ impl Simulator {
             now: 0,
             events: EventQueue::new(),
             store: JobStore::new(),
-            pending: Vec::new(),
+            queues: vec![Vec::new(); caps.len()],
             held_count: 0,
             dep_children: FxHashMap::default(),
             begin_set: BTreeSet::new(),
@@ -222,6 +228,7 @@ impl Simulator {
             need_pass: false,
             cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
+            tick_batch: Vec::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
         }
@@ -248,8 +255,8 @@ impl Simulator {
             // EASY-shadow `by_end` index would plan around allocations that
             // outlive the partition's MaxTime.
             let (cores, part, limit) = {
-                let h = self.store.hot(id);
-                (h.cores, h.partition as usize, h.time_limit)
+                let sc = self.store.scan(id);
+                (sc.cores, sc.partition as usize, sc.time_limit)
             };
             let runtime = self.store.cold(id).runtime;
             let residual = residual.min(limit).max(1);
@@ -312,7 +319,7 @@ impl Simulator {
 
     /// Jobs currently queued (Pending), including dependency-held ones.
     pub fn queue_depth(&self) -> usize {
-        self.pending.len() + self.held_count
+        self.queues.iter().map(Vec::len).sum::<usize>() + self.held_count
     }
 
     /// Jobs currently held live in the arena (pending + running +
@@ -338,7 +345,11 @@ impl Simulator {
         use std::mem::size_of;
         self.store.bytes_estimate()
             + self.fairshare.bytes_estimate()
-            + self.pending.capacity() * size_of::<JobId>()
+            + self
+                .queues
+                .iter()
+                .map(|q| q.capacity() * size_of::<JobId>())
+                .sum::<usize>()
             + self
                 .cand_bufs
                 .iter()
@@ -465,24 +476,28 @@ impl Simulator {
         }
     }
 
-    /// Append `id` to the pending queue, recording its position.
+    /// Append `id` to its partition's pending queue, recording its
+    /// position. This is the one place partition membership is resolved —
+    /// the scheduling pass consumes the queues as-is.
     fn queue_push(&mut self, id: JobId) {
         debug_assert!(self.store.hot(id).queue_pos.is_none());
-        self.store.hot_mut(id).queue_pos = Some(self.pending.len() as u32);
-        self.pending.push(id);
+        let p = self.store.scan(id).partition as usize;
+        self.store.hot_mut(id).queue_pos = Some(self.queues[p].len() as u32);
+        self.queues[p].push(id);
     }
 
-    /// Remove `id` from the pending queue in O(1) via its recorded
-    /// position (no-op when the job is not queued). The queue is unordered
-    /// storage — the scheduling pass imposes its own total order — so a
-    /// swap-remove is safe.
+    /// Remove `id` from its partition's pending queue in O(1) via its
+    /// recorded position (no-op when the job is not queued). The queue is
+    /// unordered storage — the scheduling pass imposes its own total order
+    /// — so a swap-remove is safe.
     fn queue_remove(&mut self, id: JobId) {
         let Some(pos) = self.store.hot_mut(id).queue_pos.take() else {
             return;
         };
         let pos = pos as usize;
-        self.pending.swap_remove(pos);
-        if let Some(&moved) = self.pending.get(pos) {
+        let p = self.store.scan(id).partition as usize;
+        self.queues[p].swap_remove(pos);
+        if let Some(&moved) = self.queues[p].get(pos) {
             self.store.hot_mut(moved).queue_pos = Some(pos as u32);
         }
     }
@@ -499,7 +514,7 @@ impl Simulator {
     pub fn submit_at(&mut self, at: Time, spec: JobSpec) -> JobId {
         assert!(at >= self.now, "submit_at in the past ({at} < {})", self.now);
         let id = self.register(spec, true);
-        self.store.hot_mut(id).submit_time = at;
+        self.store.scan_mut(id).submit_time = at;
         self.events.push(at, EventKind::Submit(id));
         id
     }
@@ -512,7 +527,7 @@ impl Simulator {
 
     fn enqueue(&mut self, id: JobId) {
         debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
-        self.store.hot_mut(id).submit_time = self.now;
+        self.store.scan_mut(id).submit_time = self.now;
         self.admit(id);
         // A pass runs even for a held submission: the naive engine always
         // re-ran the pass on submit, and a pass at a new `now` can change
@@ -584,12 +599,11 @@ impl Simulator {
                 }
             }
             JobState::Running => {
-                let part = self.store.hot(id).partition as usize;
-                self.cluster.part_mut(part).release(id);
+                let sc = *self.store.scan(id);
+                self.cluster.part_mut(sc.partition as usize).release(id);
                 let start = self.store.cold(id).start_time.unwrap();
-                let h = self.store.hot(id);
-                let used = (self.now - start) as f64 * h.cores as f64;
-                let user = h.user;
+                let used = (self.now - start) as f64 * sc.cores as f64;
+                let user = self.store.hot(id).user;
                 self.fairshare.charge(user, used, self.now);
                 self.store.hot_mut(id).finish_at = None;
             }
@@ -633,8 +647,9 @@ impl Simulator {
                 })
                 .unwrap_or_default(),
             SchedEngine::Naive => self
-                .pending
+                .queues
                 .iter()
+                .flatten()
                 .copied()
                 .filter(|&p| match &self.store.cold(p).dependency {
                     Some(Dependency::AfterOk(deps)) => deps.iter().any(|&d| {
@@ -654,7 +669,7 @@ impl Simulator {
         // sequence number. (A child listing the same parent twice appears
         // twice in the index — dedup so it is cancelled once, like the
         // naive scan; duplicates share a seq, so they sort adjacent.)
-        broken.sort_unstable_by_key(|&c| self.store.hot(c).seq);
+        broken.sort_unstable_by_key(|&c| self.store.scan(c).seq);
         broken.dedup();
         for id in broken {
             self.cancel(id);
@@ -674,8 +689,9 @@ impl Simulator {
     /// Earliest future time a `BeginAt` dependency unblocks (to re-trigger
     /// scheduling without polling) — naive oracle's full scan.
     fn next_begin_at_scan(&self) -> Option<Time> {
-        self.pending
+        self.queues
             .iter()
+            .flatten()
             .filter_map(|&p| match &self.store.cold(p).dependency {
                 Some(Dependency::BeginAt(t)) if *t > self.now => Some(*t),
                 _ => None,
@@ -723,52 +739,6 @@ impl Simulator {
         if self.cluster.free_cores() == 0 {
             return;
         }
-        // One scan of the eligible queue, bucketing candidates by
-        // partition; each partition then runs its own priority + EASY
-        // backfill pass against its own cluster. On a single-partition
-        // machine this is exactly the historical single pass.
-        let n_parts = self.cluster.len();
-        let mut bufs = std::mem::take(&mut self.cand_bufs);
-        if bufs.len() < n_parts {
-            bufs.resize_with(n_parts, Vec::new);
-        }
-        for buf in &mut bufs {
-            buf.clear();
-        }
-        match self.engine {
-            // Eligible set is maintained incrementally: every queued job is
-            // a candidate, no dependency re-filtering. The hot rows are
-            // dense, so this scan stays in cache.
-            SchedEngine::Incremental => {
-                for &id in &self.pending {
-                    let h = self.store.hot(id);
-                    bufs[h.partition as usize].push(Candidate {
-                        id,
-                        fs: h.fs_idx,
-                        cores: h.cores,
-                        time_limit: h.time_limit,
-                        submit_time: h.submit_time,
-                        seq: h.seq,
-                    });
-                }
-            }
-            SchedEngine::Naive => {
-                for &id in &self.pending {
-                    if !self.dependency_ready(id) {
-                        continue;
-                    }
-                    let h = self.store.hot(id);
-                    bufs[h.partition as usize].push(Candidate {
-                        id,
-                        fs: h.fs_idx,
-                        cores: h.cores,
-                        time_limit: h.time_limit,
-                        submit_time: h.submit_time,
-                        seq: h.seq,
-                    });
-                }
-            }
-        }
         // Wake the scheduler when a --begin job becomes eligible.
         match self.engine {
             SchedEngine::Incremental => {
@@ -782,8 +752,57 @@ impl Simulator {
                 }
             }
         }
+        // Each partition runs its own priority + EASY backfill pass over
+        // its own queue: membership was resolved once at `queue_push`, so
+        // there is no per-pass bucketing scan. The candidate build is a
+        // linear walk over the dense 40-byte `ScanJob` rows. On a
+        // single-partition machine this is exactly the historical single
+        // pass.
+        let n_parts = self.cluster.len();
+        let mut bufs = std::mem::take(&mut self.cand_bufs);
+        if bufs.len() < n_parts {
+            bufs.resize_with(n_parts, Vec::new);
+        }
         for p in 0..n_parts {
-            if bufs[p].is_empty() || self.cluster.part(p).free_cores() == 0 {
+            let buf = &mut bufs[p];
+            buf.clear();
+            if self.queues[p].is_empty() || self.cluster.part(p).free_cores() == 0 {
+                continue;
+            }
+            match self.engine {
+                // Eligible set is maintained incrementally: every queued
+                // job is a candidate, no dependency re-filtering.
+                SchedEngine::Incremental => {
+                    buf.extend(self.queues[p].iter().map(|&id| {
+                        let sc = self.store.scan_slot(id.slot());
+                        Candidate {
+                            id,
+                            fs: sc.fs_idx,
+                            cores: sc.cores,
+                            time_limit: sc.time_limit,
+                            submit_time: sc.submit_time,
+                            seq: sc.seq,
+                        }
+                    }));
+                }
+                SchedEngine::Naive => {
+                    for &id in &self.queues[p] {
+                        if !self.dependency_ready(id) {
+                            continue;
+                        }
+                        let sc = self.store.scan_slot(id.slot());
+                        buf.push(Candidate {
+                            id,
+                            fs: sc.fs_idx,
+                            cores: sc.cores,
+                            time_limit: sc.time_limit,
+                            submit_time: sc.submit_time,
+                            seq: sc.seq,
+                        });
+                    }
+                }
+            }
+            if bufs[p].is_empty() {
                 continue;
             }
             let result = schedule_pass_with(
@@ -804,10 +823,11 @@ impl Simulator {
     fn start_job(&mut self, id: JobId) {
         self.queue_remove(id);
         debug_assert_eq!(self.store.hot(id).state, JobState::Pending);
-        let (cores, time_limit, submit_time, foreground, part) = {
-            let h = self.store.hot(id);
-            (h.cores, h.time_limit, h.submit_time, h.foreground, h.partition as usize)
+        let (cores, time_limit, submit_time, part) = {
+            let sc = self.store.scan(id);
+            (sc.cores, sc.time_limit, sc.submit_time, sc.partition as usize)
         };
+        let foreground = self.store.hot(id).foreground;
         let runtime = self.store.cold(id).runtime;
         self.store.hot_mut(id).state = JobState::Running;
         self.store.cold_mut(id).start_time = Some(self.now);
@@ -841,9 +861,9 @@ impl Simulator {
         {
             return;
         }
-        let part = self.store.hot(id).partition as usize;
+        let part = self.store.scan(id).partition as usize;
         self.cluster.part_mut(part).release(id);
-        let timed_out = self.store.cold(id).runtime > self.store.hot(id).time_limit;
+        let timed_out = self.store.cold(id).runtime > self.store.scan(id).time_limit;
         self.store.hot_mut(id).state = if timed_out {
             JobState::TimedOut
         } else {
@@ -932,57 +952,70 @@ impl Simulator {
         true
     }
 
-    /// Process exactly one internal event. Returns false when the event heap
-    /// is exhausted.
-    fn advance_one(&mut self) -> bool {
-        let Some((time, kind)) = self.events.pop() else {
+    /// Process one simulation *tick*: drain every internal event at the
+    /// earliest outstanding timestamp, handle them in order, then run at
+    /// most one scheduling pass for the whole batch — instead of one pass
+    /// per event as the old `advance_one` did. Events pushed at the same
+    /// timestamp during handling (e.g. a promoted child's Finish) form a
+    /// follow-up tick at the same time, exactly where one-at-a-time
+    /// popping would have processed them. Returns false when the event
+    /// heap is exhausted.
+    fn advance_tick(&mut self) -> bool {
+        let mut batch = std::mem::take(&mut self.tick_batch);
+        debug_assert!(batch.is_empty());
+        let Some(time) = self.events.pop_batch_at(&mut batch) else {
+            self.tick_batch = batch;
             return false;
         };
         debug_assert!(time >= self.now, "time went backwards");
         self.now = time;
-        self.metrics.events += 1;
-        match kind {
-            EventKind::Submit(id) => {
-                // A submit_at job cancelled before its submission time
-                // stays cancelled (jobs register as Pending, so anything
-                // non-Pending — or already retired — here is terminal;
-                // don't resurrect).
-                if self.store.state_of(id) == Some(JobState::Pending) {
-                    self.enqueue(id);
-                }
-            }
-            EventKind::Finish(id) => self.finish_job(id),
-            EventKind::TraceArrival => {
-                if self.trace.is_some() {
-                    let (spec, gap, cap) = {
-                        let trace = self.trace.as_mut().unwrap();
-                        let spec = trace.next_job();
-                        let gap = trace.next_gap(self.now);
-                        (spec, gap, trace.profile().max_queued_jobs)
-                    };
-                    if cap > 0 && self.queue_depth() >= cap {
-                        // Admission control (Slurm MaxJobCount): drop the
-                        // arrival instead of growing the queue without
-                        // bound. The generator state advanced identically,
-                        // so engine equivalence is preserved.
-                        self.metrics.rejected += 1;
-                    } else {
-                        let id = self.register(spec, false);
+        self.metrics.events += batch.len() as u64;
+        for kind in batch.drain(..) {
+            match kind {
+                EventKind::Submit(id) => {
+                    // A submit_at job cancelled before its submission time
+                    // stays cancelled (jobs register as Pending, so anything
+                    // non-Pending — or already retired — here is terminal;
+                    // don't resurrect).
+                    if self.store.state_of(id) == Some(JobState::Pending) {
                         self.enqueue(id);
                     }
-                    self.events.push(self.now + gap, EventKind::TraceArrival);
+                }
+                EventKind::Finish(id) => self.finish_job(id),
+                EventKind::TraceArrival => {
+                    if self.trace.is_some() {
+                        let (spec, gap, cap) = {
+                            let trace = self.trace.as_mut().unwrap();
+                            let spec = trace.next_job();
+                            let gap = trace.next_gap(self.now);
+                            (spec, gap, trace.profile().max_queued_jobs)
+                        };
+                        if cap > 0 && self.queue_depth() >= cap {
+                            // Admission control (Slurm MaxJobCount): drop
+                            // the arrival instead of growing the queue
+                            // without bound. The generator state advanced
+                            // identically, so engine equivalence is
+                            // preserved.
+                            self.metrics.rejected += 1;
+                        } else {
+                            let id = self.register(spec, false);
+                            self.enqueue(id);
+                        }
+                        self.events.push(self.now + gap, EventKind::TraceArrival);
+                    }
+                }
+                EventKind::Sample => {
+                    self.need_pass = true;
+                }
+                EventKind::Wake(tag) => {
+                    self.out.push_back(SimEvent::Wake {
+                        tag,
+                        time: self.now,
+                    });
                 }
             }
-            EventKind::Sample => {
-                self.need_pass = true;
-            }
-            EventKind::Wake(tag) => {
-                self.out.push_back(SimEvent::Wake {
-                    tag,
-                    time: self.now,
-                });
-            }
         }
+        self.tick_batch = batch;
         if self.need_pass {
             self.run_scheduling_pass();
         }
@@ -1008,7 +1041,7 @@ impl Simulator {
             }
             match self.events.peek_time() {
                 Some(t) if t <= deadline => {
-                    self.advance_one();
+                    self.advance_tick();
                 }
                 _ => return None,
             }
@@ -1023,7 +1056,7 @@ impl Simulator {
             if let Some(ev) = self.out.pop_front() {
                 return Some(ev);
             }
-            if !self.advance_one() {
+            if !self.advance_tick() {
                 return None;
             }
         }
@@ -1033,7 +1066,7 @@ impl Simulator {
     pub fn run_until(&mut self, t: Time) {
         self.flush_pass();
         while matches!(self.events.peek_time(), Some(et) if et <= t) {
-            self.advance_one();
+            self.advance_tick();
         }
         if self.now < t {
             self.now = t;

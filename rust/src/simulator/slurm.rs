@@ -59,7 +59,13 @@ pub struct Candidate {
 }
 
 /// Priority of one candidate (higher runs first).
-pub fn priority(cfg: &SchedConfig, fs_factor: f64, cand: &Candidate, now: Time, total_cores: Cores) -> f64 {
+pub fn priority(
+    cfg: &SchedConfig,
+    fs_factor: f64,
+    cand: &Candidate,
+    now: Time,
+    total_cores: Cores,
+) -> f64 {
     let age = ((now - cand.submit_time).max(0) as f64 / cfg.max_age as f64).min(1.0);
     // Slurm's default size factor favours *larger* jobs (they are hardest to
     // start and would starve otherwise).
@@ -76,19 +82,32 @@ pub struct PassResult {
     pub reservation: Option<(JobId, Time)>,
 }
 
-/// Sort key of one candidate within a pass: `(priority, submit_time, seq,
-/// index into the candidate slice)` — self-contained so the sort never
-/// chases back into the candidate array during comparisons.
-type OrderKey = (f64, Time, u64, u32);
+/// Sort key of one candidate within a pass: `(packed priority+submit,
+/// seq, index into the candidate slice)` — self-contained so the sort
+/// never chases back into the candidate array during comparisons, and
+/// fully integer so every comparison is branchless (no `partial_cmp`
+/// float compare, no tuple short-circuit chain on the hot fields).
+///
+/// The `u128` packs the descending-priority float and the ascending
+/// submit time (see [`pack_key`]); `seq` breaks exact ties by
+/// registration order. Plain derived lexicographic `Ord` — ascending —
+/// yields the scheduling order.
+type OrderKey = (u128, u64, u32);
 
-/// Priority-descending comparator with the deterministic tie-break
-/// (earlier submit, then earlier registration).
+/// Build the packed [`OrderKey`]. The priority float is mapped to its
+/// IEEE-754 total order: flip all bits of negative values, flip only the
+/// sign bit of non-negative ones (`bits ^ ((bits as i64 >> 63) as u64 |
+/// MSB)`), then complemented so *higher* priority sorts *first*. The
+/// signed submit time gets a sign-bias so its `u64` image preserves `i64`
+/// order. Priorities here are finite and non-negative (weighted sums of
+/// factors in `[0, 1]`), so this order matches the old
+/// `partial_cmp`-based comparator exactly.
 #[inline]
-fn key_cmp(a: &OrderKey, b: &OrderKey) -> std::cmp::Ordering {
-    b.0.partial_cmp(&a.0)
-        .unwrap()
-        .then_with(|| a.1.cmp(&b.1))
-        .then_with(|| a.2.cmp(&b.2))
+fn pack_key(prio: f64, submit: Time, seq: u64, idx: u32) -> OrderKey {
+    let bits = prio.to_bits();
+    let total = bits ^ ((((bits as i64) >> 63) as u64) | 0x8000_0000_0000_0000);
+    let submit_biased = (submit as u64) ^ 0x8000_0000_0000_0000;
+    ((((!total) as u128) << 64) | submit_biased as u128, seq, idx)
 }
 
 /// Reusable buffers for [`schedule_pass_with`]. The simulator owns one so
@@ -192,7 +211,7 @@ pub fn schedule_pass_with(
     order.clear();
     order.extend(candidates.iter().enumerate().map(|(i, c)| {
         let fsf = fairshare.factor_idx(c.fs, now);
-        (priority(cfg, fsf, c, now, total), c.submit_time, c.seq, i as u32)
+        pack_key(priority(cfg, fsf, c, now, total), c.submit_time, c.seq, i as u32)
     }));
 
     // Fast path: when no candidate fits in the free cores, the pass cannot
@@ -202,31 +221,22 @@ pub fn schedule_pass_with(
     // result is identical to the sorted path's.
     let min_cores = candidates.iter().map(|c| c.cores).min().unwrap();
     if min_cores > free {
-        let head_key = order
-            .iter()
-            .copied()
-            .reduce(|best, e| {
-                if key_cmp(&e, &best) == std::cmp::Ordering::Less {
-                    e
-                } else {
-                    best
-                }
-            })
-            .unwrap();
-        let head = &candidates[head_key.3 as usize];
+        let head_key = order.iter().copied().min().unwrap();
+        let head = &candidates[head_key.2 as usize];
         let (shadow, _) = earliest_fit(cluster, &[], now, free, head.cores);
         result.reservation = Some((head.id, shadow));
         return result;
     }
 
-    // Priority ordering (desc), deterministic tie-break on submit order.
-    order.sort_unstable_by(key_cmp);
+    // Priority ordering (desc — packed keys sort ascending), deterministic
+    // tie-break on submit order.
+    order.sort_unstable();
 
     let mut i = 0;
 
     // FCFS phase: start head jobs while they fit.
     while i < order.len() {
-        let cand = &candidates[order[i].3 as usize];
+        let cand = &candidates[order[i].2 as usize];
         if cand.cores > free {
             break;
         }
@@ -244,13 +254,13 @@ pub fn schedule_pass_with(
     // `(limit_end, cores)` from the cluster's end-time index; only the
     // pass's own tentative starts need sorting, and the merge stops as
     // soon as enough cores have freed up.
-    let head = &candidates[order[i].3 as usize];
+    let head = &candidates[order[i].2 as usize];
     let tent = &mut scratch.tent;
     tent.clear();
     tent.extend(
         order[..i]
             .iter()
-            .map(|k| &candidates[k.3 as usize])
+            .map(|k| &candidates[k.2 as usize])
             .map(|c| (now + c.time_limit, c.cores)),
     );
     tent.sort_unstable();
@@ -260,7 +270,7 @@ pub fn schedule_pass_with(
     // Backfill phase: lower-priority jobs that cannot delay the reservation.
     let mut extra = extra;
     for key in order[i + 1..].iter().take(cfg.backfill_depth) {
-        let cand = &candidates[key.3 as usize];
+        let cand = &candidates[key.2 as usize];
         if cand.cores > free {
             continue;
         }
@@ -447,6 +457,42 @@ mod tests {
             1,
         );
         assert_eq!(r.start, vec![JobId::from_parts(0, 3)], "lower seq first");
+    }
+
+    #[test]
+    fn packed_key_matches_float_tuple_order() {
+        // The branchless packed key must induce exactly the order the old
+        // float-tuple comparator did: priority descending, then submit
+        // ascending, then seq ascending — including exact float ties and
+        // negative submit times.
+        let probe: &[(f64, Time, u64)] = &[
+            (0.0, 0, 0),
+            (0.0, 0, 1),
+            (0.0, 5, 0),
+            (1.5, -10, 8),
+            (1.5, -10, 7),
+            (1.5, 3, 2),
+            (12_000.25, 100, 9),
+            (1e-300, 0, 3),
+            (9e9, -100_000, 1),
+        ];
+        let mut packed: Vec<OrderKey> = probe
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, s, q))| pack_key(p, s, q, i as u32))
+            .collect();
+        packed.sort_unstable();
+        let mut tuple: Vec<u32> = (0..probe.len() as u32).collect();
+        tuple.sort_by(|&a, &b| {
+            let (pa, sa, qa) = probe[a as usize];
+            let (pb, sb, qb) = probe[b as usize];
+            pb.partial_cmp(&pa)
+                .unwrap()
+                .then(sa.cmp(&sb))
+                .then(qa.cmp(&qb))
+        });
+        let packed_idx: Vec<u32> = packed.iter().map(|k| k.2).collect();
+        assert_eq!(packed_idx, tuple);
     }
 
     #[test]

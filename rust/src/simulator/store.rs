@@ -8,12 +8,15 @@
 //!   each slot carries a generation, bumped on retirement, so a recycled
 //!   slot issues a fresh [`JobId`] and stale handles are detected instead
 //!   of aliasing a new job.
-//! * **Hot/cold split** — the fields the scheduling pass scans on every
-//!   event ([`HotJob`]: state, user, cores, limit, submit time, queue
-//!   bookkeeping) live in one dense array; everything touched only at
-//!   lifecycle transitions ([`ColdJob`]: name, dependency, true runtime,
-//!   start/end times) lives in a parallel side table, keeping the hot scan
-//!   tight.
+//! * **Scan/hot/cold split (struct-of-arrays)** — the exact fields one
+//!   scheduling pass reads per candidate ([`ScanJob`]: fair-share index,
+//!   cores, limit, submit time, partition, seq) live in their own dense
+//!   `Copy` array the candidate build walks linearly; per-event lifecycle
+//!   bookkeeping ([`HotJob`]: state, user, finish guard, queue position,
+//!   dependency counters) sits in a second array; everything touched only
+//!   at submit/start/finish ([`ColdJob`]: name, dependency, true runtime,
+//!   start/end times) lives in a cold side table. The pass never pulls
+//!   lifecycle or cold bytes through the cache.
 //! * **Name interning** — job names are [`NameId`]s into a per-store
 //!   symbol table; background-trace and workflow-stage submissions (all
 //!   `&'static str` or recurring `format!` strings) stop allocating a
@@ -78,13 +81,13 @@ impl NameInterner {
     }
 }
 
-/// Scheduler-hot job fields: everything the scheduling pass and the
-/// dependency engine touch per event, packed for a dense sequential scan.
-#[derive(Clone, Debug)]
-pub struct HotJob {
-    pub state: JobState,
-    /// Owning user (fair-share account id).
-    pub user: u32,
+/// Scan-hot job fields: exactly what one scheduling pass reads per
+/// candidate (the priority inputs plus partition routing), split into
+/// their own dense parallel array so the per-pass candidate build is a
+/// linear walk over 40 packed bytes per job — no lifecycle bookkeeping
+/// pulled through the cache alongside.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanJob {
     /// Dense fair-share account index (resolved once at registration so
     /// the pass never hashes user ids).
     pub fs_idx: u32,
@@ -92,11 +95,21 @@ pub struct HotJob {
     pub time_limit: Time,
     pub submit_time: Time,
     /// Partition index the job is bound to (validated at registration).
-    /// The scheduling pass buckets candidates by this field.
+    /// Candidates are routed to per-partition queues by this field.
     pub partition: u32,
     /// Global registration sequence number: the deterministic submission
     /// order that survives slot recycling (ids no longer order by age).
     pub seq: u64,
+}
+
+/// Lifecycle-hot job fields: state transitions, queue bookkeeping and the
+/// dependency engine — touched per event but *not* per pass candidate
+/// (those fields live in [`ScanJob`]).
+#[derive(Clone, Debug)]
+pub struct HotJob {
+    pub state: JobState,
+    /// Owning user (fair-share account id).
+    pub user: u32,
     /// Expected finish event time; guards against stale Finish events
     /// after a cancel.
     pub finish_at: Option<Time>,
@@ -168,6 +181,7 @@ impl JobView {
 /// The recycling job arena (see module docs).
 #[derive(Debug, Default)]
 pub struct JobStore {
+    scan: Vec<ScanJob>,
     hot: Vec<HotJob>,
     cold: Vec<ColdJob>,
     gen: Vec<u32>,
@@ -208,15 +222,17 @@ impl JobStore {
         };
         let seq = self.next_seq;
         self.next_seq += 1;
-        let hot = HotJob {
-            state: JobState::Pending,
-            user: spec.user,
+        let scan = ScanJob {
             fs_idx,
             cores: spec.cores,
             time_limit: spec.time_limit,
             submit_time,
             partition: spec.partition.0,
             seq,
+        };
+        let hot = HotJob {
+            state: JobState::Pending,
+            user: spec.user,
             finish_at: None,
             queue_pos: None,
             unmet_deps: 0,
@@ -233,6 +249,7 @@ impl JobStore {
         self.live += 1;
         if let Some(slot) = self.free.pop() {
             let s = slot as usize;
+            self.scan[s] = scan;
             self.hot[s] = hot;
             self.cold[s] = cold;
             self.occupied[s] = true;
@@ -240,6 +257,7 @@ impl JobStore {
             JobId::from_parts(slot, self.gen[s])
         } else {
             let slot = self.hot.len() as u32;
+            self.scan.push(scan);
             self.hot.push(hot);
             self.cold.push(cold);
             self.gen.push(0);
@@ -306,6 +324,18 @@ impl JobStore {
     }
 
     #[inline]
+    pub fn scan(&self, id: JobId) -> &ScanJob {
+        self.check(id);
+        &self.scan[id.slot()]
+    }
+
+    #[inline]
+    pub fn scan_mut(&mut self, id: JobId) -> &mut ScanJob {
+        self.check(id);
+        &mut self.scan[id.slot()]
+    }
+
+    #[inline]
     pub fn cold(&self, id: JobId) -> &ColdJob {
         self.check(id);
         &self.cold[id.slot()]
@@ -324,20 +354,27 @@ impl JobStore {
         &self.hot[slot]
     }
 
+    /// Scan row by raw slot (see [`JobStore::hot_slot`]): the per-pass
+    /// candidate build walks the per-partition queue's slots directly.
+    #[inline]
+    pub fn scan_slot(&self, slot: usize) -> &ScanJob {
+        &self.scan[slot]
+    }
+
     /// Assembled external view of one job (panics on stale handles).
     pub fn view(&self, id: JobId) -> JobView {
         self.check(id);
         let s = id.slot();
-        let (h, c) = (&self.hot[s], &self.cold[s]);
+        let (sc, h, c) = (&self.scan[s], &self.hot[s], &self.cold[s]);
         JobView {
             id,
             state: h.state,
             user: h.user,
-            cores: h.cores,
-            time_limit: h.time_limit,
-            partition: PartitionId(h.partition),
+            cores: sc.cores,
+            time_limit: sc.time_limit,
+            partition: PartitionId(sc.partition),
             runtime: c.runtime,
-            submit_time: h.submit_time,
+            submit_time: sc.submit_time,
             start_time: c.start_time,
             end_time: c.end_time,
         }
@@ -372,7 +409,8 @@ impl JobStore {
     /// `Vec`s are counted at their live lengths.
     pub fn bytes_estimate(&self) -> usize {
         use std::mem::size_of;
-        let per_slot = size_of::<HotJob>()
+        let per_slot = size_of::<ScanJob>()
+            + size_of::<HotJob>()
             + size_of::<ColdJob>()
             + size_of::<u32>()
             + size_of::<bool>();
@@ -510,6 +548,6 @@ mod tests {
         let c = st.insert(spec(1, "c", 1, 10), 0, false, 0);
         // c recycled b's slot, so its id is NOT ordered after a's by value,
         // but seq still orders registration.
-        assert!(st.hot(c).seq > st.hot(a).seq);
+        assert!(st.scan(c).seq > st.scan(a).seq);
     }
 }

@@ -415,6 +415,94 @@ fn prop_partitioned_engines_agree_and_single_partition_matches_legacy() {
 }
 
 #[test]
+fn prop_saturated_partition_matches_naive_oracle() {
+    // Nothing-fits fast path under multi-partition configs: partition 0
+    // ("regular") is pinned at zero free cores by a full-width hog while
+    // wide jobs pile up behind it; partition 1 ("debug") keeps absorbing
+    // small jobs. The incremental pass skips saturated partitions outright
+    // (free_cores == 0 → no candidate collection, no sort); that skip must
+    // be unobservable — bit-identical event stream and metrics against the
+    // naive rebuild oracle — and must not starve the partition that still
+    // has capacity.
+    check("saturated partition == naive oracle", 30, |g| {
+        let nodes = g.u32(1, 6);
+        let cpn = g.u32(1, 6);
+        let cap = nodes * cpn;
+        let hog_len = g.i64(2_000, 6_000);
+        let mut script = vec![
+            // Saturate partition 0 from t=0 for the whole scripted window.
+            OracleAction::Submit {
+                user: 1,
+                cores: cap,
+                runtime: hog_len,
+                limit: hog_len + 10,
+                dep: None,
+                part: 0,
+            },
+            // Liveness probe: partition 1 must run this immediately even
+            // though partition 0 is full.
+            OracleAction::Submit {
+                user: 2,
+                cores: 1,
+                runtime: g.i64(10, 200),
+                limit: 300,
+                dep: None,
+                part: 1,
+            },
+        ];
+        let mut t = 0;
+        for _ in 0..g.usize(4, 24) {
+            match g.usize(0, 3) {
+                // Wide job parked behind the hog on the full partition.
+                0 => script.push(OracleAction::Submit {
+                    user: g.u32(1, 4),
+                    cores: g.u32(cap.div_ceil(2), cap),
+                    runtime: g.i64(10, 300),
+                    limit: 400,
+                    dep: None,
+                    part: 0,
+                }),
+                // Small jobs on the partition with headroom.
+                1 | 2 => script.push(OracleAction::Submit {
+                    user: g.u32(1, 4),
+                    cores: g.u32(1, cap.div_ceil(2)),
+                    runtime: g.i64(10, 300),
+                    limit: 400,
+                    dep: None,
+                    part: 1,
+                }),
+                _ => {
+                    t += g.i64(50, 400);
+                    script.push(OracleAction::RunUntil(t));
+                }
+            }
+        }
+        let inc = run_oracle_script(
+            SystemConfig::testbed_partitioned(nodes, cpn),
+            SchedEngine::Incremental,
+            &script,
+        );
+        let naive = run_oracle_script(
+            SystemConfig::testbed_partitioned(nodes, cpn),
+            SchedEngine::Naive,
+            &script,
+        );
+        assert_eq!(inc, naive, "script: {script:?}");
+        // Both the hog and the partition-1 probe start at t=0: skipping
+        // the saturated partition never delays the one with capacity.
+        let starts_at_zero = inc
+            .0
+            .iter()
+            .filter(|ev| matches!(ev, SimEvent::Started { time: 0, .. }))
+            .count();
+        assert!(
+            starts_at_zero >= 2,
+            "expected hog + debug probe to start at t=0, saw {starts_at_zero}"
+        );
+    });
+}
+
+#[test]
 fn prop_incremental_engine_matches_oracle_under_background_trace() {
     // Same equivalence with a live background workload: trace arrivals,
     // prefill backlog and foreground probes must interleave identically.
