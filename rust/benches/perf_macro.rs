@@ -15,6 +15,7 @@
 
 use asa::experiments::campaign::Strategy;
 use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
+use asa::experiments::fleet::{run_fleet, FleetOpts};
 use asa::simulator::{Simulator, SystemConfig};
 use asa::util::bench::Bench;
 use asa::Time;
@@ -157,6 +158,40 @@ fn main() {
     b.meta("campaign_live_jobs_peak", report.live_jobs_peak as i64);
     b.meta("campaign_jobs_registered", report.total_registered as i64);
     b.meta("campaign_memory_bytes", report.memory_bytes);
+
+    // 5) Fleet month soak: two federated centres (hpc2n + uppmax) each
+    // running their own background trace over the macro horizon, with 24
+    // routed workflows spread across the window and completed workflows
+    // retired. The headline gauges are the fleet-wide live-job peak and
+    // state-bytes estimate — both must stay flat in the horizon, not grow
+    // with the ~10^6 total jobs registered across the fleet.
+    let fopts = FleetOpts {
+        centers: 2,
+        systems: vec!["hpc2n".to_string(), "uppmax".to_string()],
+        workflows: 24,
+        scale: 112,
+        strategy: Strategy::Asa,
+        seed: 42,
+        settle: 0,
+        horizon,
+        epochs: 6,
+        retire: true,
+        ..FleetOpts::default()
+    };
+    let mut freport = None;
+    b.case_throughput_of("fleet: month-horizon 2-center soak", || {
+        let r = run_fleet(&fopts);
+        let events = r.sim_events;
+        freport.get_or_insert(r);
+        events
+    });
+    let freport = freport.take().expect("warmup ran");
+    b.meta("fleet_live_jobs_peak", freport.live_jobs_peak as i64);
+    b.meta("fleet_jobs_registered", freport.total_registered as i64);
+    b.meta("fleet_memory_bytes", freport.memory_bytes);
+    for c in &freport.centers {
+        b.meta(&format!("fleet_{}_routed", c.tag), c.routed as i64);
+    }
 
     b.finish();
 }

@@ -5,7 +5,7 @@
 //! PRs can diff the perf trajectory.
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
-use asa::simulator::{Dependency, JobSpec, Simulator, SystemConfig};
+use asa::simulator::{Dependency, JobSpec, PartitionId, Simulator, SystemConfig};
 use asa::util::bench::Bench;
 use asa::util::rng::Rng;
 
@@ -74,6 +74,34 @@ fn finish_storm() -> u64 {
     sim.metrics.passes
 }
 
+/// Thread-scaling probe: two saturated partitions, each with a 600-deep
+/// eligible queue (well past the parallel-pass candidate threshold), and a
+/// churn stream forcing a scheduling pass per tick. With `threads > 1` the
+/// per-partition priority+EASY passes run concurrently; the committed
+/// event stream is bit-identical either way (proptest-pinned), so the
+/// returned pass count matches across thread counts.
+fn partitioned_pass(threads: usize) -> u64 {
+    let mut sim = Simulator::new_empty(SystemConfig::testbed_partitioned(64, 28));
+    sim.set_pass_threads(threads);
+    for p in 0..2usize {
+        for i in 0..600u32 {
+            sim.submit(
+                JobSpec::new(1 + i % 50, format!("p{p}q{i}"), 56, 3_000)
+                    .with_partition(PartitionId(p as u32)),
+            );
+        }
+    }
+    for k in 0..400u32 {
+        sim.submit_at(
+            k as i64 * 30,
+            JobSpec::new(60 + k % 20, format!("c{k}"), 4, 25)
+                .with_partition(PartitionId(k % 2)),
+        );
+    }
+    sim.run_until(400 * 30);
+    sim.metrics.passes
+}
+
 fn background_churn(system: SystemConfig, horizon_secs: i64) -> u64 {
     let mut sim = Simulator::new(system, 42);
     sim.run_until(horizon_secs);
@@ -102,6 +130,15 @@ fn main() {
     b.case_throughput_of("sim: deep queue 10k dep-held, 2k churn", || deep_queue(10_000));
     b.case_throughput_of("sim: dep chain 300 + fanout 500", dep_web);
     b.case_throughput_of("sim: same-tick finish storm", finish_storm);
+
+    // 1b') Thread scaling: the same two-partition deep-queue scenario at
+    // 1 thread vs N — `asa bench-summary` pairs the `[1 thread]` /
+    // `[N threads]` labels into a speedup-vs-1-thread column.
+    let n_threads = asa::util::par::default_threads().max(2);
+    b.case_throughput_of("sim: two-center pass [1 thread]", || partitioned_pass(1));
+    b.case_throughput_of(&format!("sim: two-center pass [{n_threads} threads]"), || {
+        partitioned_pass(n_threads)
+    });
 
     // 1c) Long-horizon churn: one week of HPC2n background load, with the
     // arena-boundedness gauges captured from the (seeded, reproducible)

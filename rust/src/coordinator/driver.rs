@@ -73,7 +73,11 @@ pub struct DriverOutcome {
 /// 3. Events for owned jobs arrive via `on_event` until the driver returns
 ///    [`DriverStatus::Done`], after which [`StrategyDriver::take_outcome`]
 ///    yields the completed run.
-pub trait StrategyDriver {
+///
+/// Drivers are `Send`: a whole center (simulator + orchestrator + its
+/// boxed drivers) can move across the worker threads of a fleet
+/// (`experiments::fleet`) epoch.
+pub trait StrategyDriver: Send {
     /// Strategy label (also used as the `WorkflowRun::strategy` tag).
     fn name(&self) -> &'static str;
 
@@ -374,7 +378,7 @@ mod tests {
         new_jobs: Vec<JobId>,
         outcome: Option<DriverOutcome>,
         wake_at: Option<Time>,
-        wakes_seen: std::rc::Rc<std::cell::Cell<u32>>,
+        wakes_seen: std::sync::Arc<std::sync::atomic::AtomicU32>,
     }
 
     impl ToyDriver {
@@ -456,7 +460,8 @@ mod tests {
             _ctx: &mut DriverCtx,
             _now: Time,
         ) -> DriverStatus {
-            self.wakes_seen.set(self.wakes_seen.get() + 1);
+            self.wakes_seen
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             DriverStatus::Running
         }
 
@@ -544,7 +549,7 @@ mod tests {
         let wakes = driver.wakes_seen.clone();
         orch.spawn(&mut sim, &mut ctx, Box::new(driver));
         orch.run(&mut sim, &mut ctx);
-        assert_eq!(wakes.get(), 1);
+        assert_eq!(wakes.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Federated multi-center routing (`asa campaign --fleet <n>`).
+//!
+//! The ROADMAP's north star is ASA as fleet-scale infrastructure: many
+//! *independent* computing centers, each with its own scheduler, queue and
+//! background population, with workflows routed to whichever center a
+//! learned wait model currently expects to serve them fastest. This module
+//! drives N centers — each a full [`Simulator`] + [`Orchestrator`] session —
+//! and generalizes PR 5's partition selection
+//! ([`crate::coordinator::contextual::select_partition`]) from partitions
+//! of one machine to whole centers of a federation: the router keeps one
+//! fleet-level [`AsaStore`] keyed per center, scores candidates by
+//! `expected_wait_or_prior` (cold-prior optimism drives exploration of
+//! untouched centers), and feeds realized per-workflow waits back through
+//! the estimator's own sample/observe protocol.
+//!
+//! Centers are embarrassingly parallel between routing decisions: each
+//! epoch's spawned workflows run to completion on
+//! [`crate::util::par::par_map_threads`] (centers move onto worker threads
+//! and back), then the join — always in center order — updates the router
+//! serially. Routing therefore depends only on prior-epoch results, never
+//! on thread scheduling: identical seeds produce identical cross-center
+//! routing and totals at any worker count.
+
+use crate::coordinator::asa::AsaConfig;
+use crate::coordinator::contextual::{select_partition, PartitionOption};
+use crate::coordinator::driver::{DriverCtx, DriverId, Orchestrator};
+use crate::coordinator::kernel::PureRustKernel;
+use crate::coordinator::policy::Policy;
+use crate::coordinator::state::{AsaStore, GeometryKey};
+use crate::experiments::campaign::Strategy;
+use crate::experiments::concurrent::WF_ROTATION;
+use crate::simulator::{Simulator, SystemConfig};
+use crate::util::json::Json;
+use crate::util::par::{default_threads, par_map_threads};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workflow::apps;
+use crate::workflow::spec::WorkflowRun;
+use crate::{Cores, Time};
+
+/// Scenario knobs for one fleet session.
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// Number of independent centers.
+    pub centers: u32,
+    /// System presets the centers rotate through (`by_name` names); a
+    /// heterogeneous fleet alternates e.g. hpc2n-shaped and uppmax-shaped
+    /// centers.
+    pub systems: Vec<String>,
+    /// Total workflows routed across the fleet.
+    pub workflows: u32,
+    /// Mean Poisson inter-arrival gap between workflow submissions (s);
+    /// overridden by `horizon`.
+    pub mean_gap: Time,
+    /// Per-workflow scaling (cores) — also the router's geometry key.
+    pub scale: Cores,
+    /// Strategy every routed workflow is driven with.
+    pub strategy: Strategy,
+    pub seed: u64,
+    /// Settling time before the first arrival (steady-state machines).
+    pub settle: Time,
+    /// Month-scale soak: when > 0, arrivals spread over this many seconds
+    /// (`mean_gap` becomes `horizon / workflows`).
+    pub horizon: Time,
+    /// Routing epochs: the plan is split into this many batches; realized
+    /// waits of batch *k* steer the routing of batch *k+1*.
+    pub epochs: u32,
+    /// Retire completed drivers' jobs from each center's arena (what keeps
+    /// a month soak at flat memory).
+    pub retire: bool,
+    /// Worker threads for the per-epoch center fan-out AND each center's
+    /// intra-pass parallelism; `0` = machine default. Results are
+    /// bit-identical at any value.
+    pub threads: usize,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            centers: 2,
+            systems: vec!["hpc2n".into(), "uppmax".into()],
+            workflows: 12,
+            mean_gap: 600,
+            scale: 112,
+            strategy: Strategy::Asa,
+            seed: 42,
+            settle: 6 * 3600,
+            horizon: 0,
+            epochs: 4,
+            retire: false,
+            threads: 0,
+        }
+    }
+}
+
+/// One routed workflow's outcome.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    /// Index in the arrival plan.
+    pub index: u32,
+    /// Center the router picked.
+    pub center: usize,
+    /// The center's router tag (`c0`, `c1`, …).
+    pub center_tag: String,
+    pub user: u32,
+    /// Planned arrival; the actual spawn clamps to the center's clock.
+    pub arrival: Time,
+    pub run: WorkflowRun,
+    /// Realized mean per-stage wait — what the router observed.
+    pub observed_wait: Time,
+}
+
+/// Session-end summary of one center.
+#[derive(Clone, Debug)]
+pub struct FleetCenterSummary {
+    /// Router tag (`c0`, `c1`, …).
+    pub tag: String,
+    /// System preset the center was built from.
+    pub system: &'static str,
+    pub total_cores: Cores,
+    /// Workflows the router sent here.
+    pub routed: u32,
+    /// Mean realized per-stage wait of those workflows (s).
+    pub mean_wait: f64,
+    pub mean_makespan: f64,
+    /// Router estimator state for this center.
+    pub expected_wait: f64,
+    pub observations: u64,
+    /// Per-center boundedness gauges.
+    pub live_jobs_peak: u64,
+    pub total_registered: u64,
+    pub sim_events: u64,
+    pub memory_bytes: usize,
+}
+
+/// The full federation outcome: per-workflow cells, per-center summaries
+/// and cross-center aggregates.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub cells: Vec<FleetCell>,
+    pub centers: Vec<FleetCenterSummary>,
+    /// Max over centers (each center's arena is bounded independently).
+    pub live_jobs_peak: u64,
+    /// Sums over centers.
+    pub total_registered: u64,
+    pub sim_events: u64,
+    pub memory_bytes: usize,
+}
+
+/// One center's full mutable state, moved onto a worker thread each epoch.
+struct CenterState {
+    tag: String,
+    system: &'static str,
+    total_cores: Cores,
+    sim: Simulator,
+    orch: Orchestrator,
+    store: AsaStore,
+    kernel: PureRustKernel,
+    rng: Rng,
+}
+
+struct PlanItem {
+    index: u32,
+    at: Time,
+    user: u32,
+    wf: &'static str,
+}
+
+/// Run the federation: route `opts.workflows` workflows across
+/// `opts.centers` centers by learned expected wait, epoch by epoch.
+pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
+    assert!(opts.centers >= 1 && opts.workflows >= 1 && opts.epochs >= 1);
+    assert!(!opts.systems.is_empty(), "need at least one system preset");
+    let threads = if opts.threads == 0 {
+        default_threads()
+    } else {
+        opts.threads
+    };
+
+    let mut centers: Vec<CenterState> = (0..opts.centers)
+        .map(|i| {
+            let preset = &opts.systems[i as usize % opts.systems.len()];
+            let system = SystemConfig::by_name(preset)
+                .unwrap_or_else(|| panic!("unknown system preset {preset:?}"));
+            let name = system.name;
+            let total_cores = system.total_cores();
+            let seed = opts.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64 + 1));
+            let mut sim = Simulator::new(system, seed);
+            if opts.threads > 0 {
+                sim.set_pass_threads(opts.threads);
+            }
+            sim.run_until(opts.settle);
+            let mut orch = Orchestrator::new();
+            orch.set_retire_owned(opts.retire);
+            CenterState {
+                tag: format!("c{i}"),
+                system: name,
+                total_cores,
+                sim,
+                orch,
+                store: AsaStore::new(AsaConfig {
+                    policy: Policy::Tuned { rep: 50 },
+                    ..AsaConfig::default()
+                }),
+                kernel: PureRustKernel,
+                rng: Rng::new(seed ^ 0xba5e),
+            }
+        })
+        .collect();
+
+    // Fleet-level router state: one estimator per center, plus its own
+    // RNG/kernel so routing draws never perturb any center's stream.
+    let mut router = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    let mut router_kernel = PureRustKernel;
+    let mut router_rng = Rng::new(opts.seed ^ 0xf1ee7);
+
+    // Arrival plan (workflow rotation, Poisson gaps, horizon spread).
+    let mut arrivals = Rng::new(opts.seed ^ 0xa771);
+    let gap_mean = if opts.horizon > 0 {
+        (opts.horizon / opts.workflows.max(1) as Time).max(1)
+    } else {
+        opts.mean_gap.max(1)
+    };
+    let mut plan: Vec<PlanItem> = Vec::with_capacity(opts.workflows as usize);
+    let mut at = opts.settle;
+    for k in 0..opts.workflows {
+        at += arrivals.exponential(1.0 / gap_mean as f64).ceil() as Time;
+        plan.push(PlanItem {
+            index: k,
+            at,
+            user: 100 + (k % 8),
+            wf: WF_ROTATION[k as usize % WF_ROTATION.len()],
+        });
+    }
+
+    let chunk_len = (plan.len() as u32).div_ceil(opts.epochs).max(1) as usize;
+    let mut cells: Vec<FleetCell> = Vec::with_capacity(plan.len());
+    for chunk in plan.chunks(chunk_len) {
+        // Route this epoch's arrivals (serial; pure function of the router
+        // state the previous epochs produced).
+        let mut spawned: Vec<(usize, usize, DriverId)> = Vec::with_capacity(chunk.len());
+        for item in chunk {
+            let options: Vec<PartitionOption> = centers
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| PartitionOption {
+                    index: ci,
+                    key: GeometryKey::new(&c.tag, opts.scale),
+                    cores: opts.scale,
+                })
+                .collect();
+            let pick = select_partition(&router, &options);
+            let key = options[pick].key.clone();
+            // Draw the estimator's own action for this submission so the
+            // completion observation follows the sample→observe protocol
+            // the ASA driver itself uses.
+            let (action, _) = router.estimator(&key).sample_wait(&mut router_rng);
+            let c = &mut centers[pick];
+            let wf = apps::by_name(item.wf).expect("rotation workflow exists");
+            let spawn_at = item.at.max(c.sim.now());
+            let id = c.orch.spawn_at(
+                &mut c.sim,
+                spawn_at,
+                opts.strategy.driver(item.user, wf, opts.scale),
+            );
+            spawned.push((pick, action, id));
+        }
+        // Run every center through the epoch in parallel: each worker owns
+        // its whole center; the input-ordered join puts them back in
+        // center order.
+        centers = par_map_threads(threads, centers, |mut c| {
+            let CenterState {
+                sim,
+                orch,
+                store,
+                kernel,
+                rng,
+                ..
+            } = &mut c;
+            if orch.active() > 0 {
+                let mut ctx = DriverCtx { store, kernel, rng };
+                orch.run(sim, &mut ctx);
+            }
+            c
+        });
+        // Feed realized waits back into the router, in plan order.
+        for (item, &(pick, action, id)) in chunk.iter().zip(&spawned) {
+            let c = &mut centers[pick];
+            let out = c.orch.outcome(id).expect("fleet driver completed");
+            let stages = out.run.stages.len().max(1) as Time;
+            let observed_wait = out.run.total_wait() / stages;
+            let key = GeometryKey::new(&c.tag, opts.scale);
+            router
+                .estimator(&key)
+                .observe(action, observed_wait, &mut router_kernel, &mut router_rng);
+            cells.push(FleetCell {
+                index: item.index,
+                center: pick,
+                center_tag: c.tag.clone(),
+                user: item.user,
+                arrival: item.at,
+                run: out.run,
+                observed_wait,
+            });
+        }
+    }
+
+    let summaries: Vec<FleetCenterSummary> = centers
+        .iter()
+        .enumerate()
+        .map(|(ci, c)| {
+            let mine: Vec<&FleetCell> = cells.iter().filter(|cell| cell.center == ci).collect();
+            let n = mine.len().max(1) as f64;
+            let key = GeometryKey::new(&c.tag, opts.scale);
+            let (expected_wait, observations) = match router.get(&key) {
+                Some(est) => (est.expected_wait(), est.observations()),
+                None => (router.expected_wait_or_prior(&key), 0),
+            };
+            FleetCenterSummary {
+                tag: c.tag.clone(),
+                system: c.system,
+                total_cores: c.total_cores,
+                routed: mine.len() as u32,
+                mean_wait: mine.iter().map(|m| m.observed_wait as f64).sum::<f64>() / n,
+                mean_makespan: mine.iter().map(|m| m.run.makespan() as f64).sum::<f64>() / n,
+                expected_wait,
+                observations,
+                live_jobs_peak: c.sim.metrics.live_jobs_peak,
+                total_registered: c.sim.jobs_registered(),
+                sim_events: c.sim.metrics.events,
+                memory_bytes: c.sim.memory_bytes_estimate(),
+            }
+        })
+        .collect();
+    FleetReport {
+        live_jobs_peak: summaries.iter().map(|s| s.live_jobs_peak).max().unwrap_or(0),
+        total_registered: summaries.iter().map(|s| s.total_registered).sum(),
+        sim_events: summaries.iter().map(|s| s.sim_events).sum(),
+        memory_bytes: summaries.iter().map(|s| s.memory_bytes).sum(),
+        cells,
+        centers: summaries,
+    }
+}
+
+/// Per-center routing and load summary.
+pub fn center_table(report: &FleetReport) -> Table {
+    let mut t = Table::new([
+        "center",
+        "system",
+        "cores",
+        "routed",
+        "mean wait (s)",
+        "mean makespan (s)",
+        "router E[wait] (s)",
+        "obs",
+        "live peak",
+        "registered",
+        "mem (MB)",
+    ]);
+    for c in &report.centers {
+        t.row([
+            c.tag.clone(),
+            c.system.to_string(),
+            format!("{}", c.total_cores),
+            format!("{}", c.routed),
+            format!("{:.0}", c.mean_wait),
+            format!("{:.0}", c.mean_makespan),
+            format!("{:.0}", c.expected_wait),
+            format!("{}", c.observations),
+            format!("{}", c.live_jobs_peak),
+            format!("{}", c.total_registered),
+            format!("{:.1}", c.memory_bytes as f64 / 1e6),
+        ]);
+    }
+    t
+}
+
+/// Per-workflow routing decisions and outcomes.
+pub fn table(report: &FleetReport) -> Table {
+    let mut t = Table::new([
+        "#", "center", "workflow", "arrival (s)", "wait (s)", "makespan (s)", "CH (h)",
+    ]);
+    for c in &report.cells {
+        t.row([
+            format!("{}", c.index),
+            c.center_tag.clone(),
+            c.run.workflow.to_string(),
+            format!("{}", c.arrival),
+            format!("{}", c.observed_wait),
+            format!("{}", c.run.makespan()),
+            format!("{:.1}", c.run.core_hours()),
+        ]);
+    }
+    t
+}
+
+/// JSON dump (for external plotting / the campaign artifact).
+pub fn to_json(report: &FleetReport) -> Json {
+    let centers: Vec<Json> = report
+        .centers
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .with("center", c.tag.as_str())
+                .with("system", c.system)
+                .with("total_cores", c.total_cores)
+                .with("routed", c.routed)
+                .with("mean_wait", c.mean_wait)
+                .with("mean_makespan", c.mean_makespan)
+                .with("router_expected_wait", c.expected_wait)
+                .with("router_observations", c.observations as i64)
+                .with("live_jobs_peak", c.live_jobs_peak as i64)
+                .with("total_registered", c.total_registered as i64)
+                .with("sim_events", c.sim_events as i64)
+                .with("memory_bytes", c.memory_bytes as i64)
+        })
+        .collect();
+    let cells: Vec<Json> = report
+        .cells
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .with("index", c.index)
+                .with("center", c.center_tag.as_str())
+                .with("workflow", c.run.workflow)
+                .with("user", c.user)
+                .with("arrival", c.arrival)
+                .with("observed_wait", c.observed_wait)
+                .with("makespan", c.run.makespan())
+                .with("total_wait", c.run.total_wait())
+                .with("core_hours", c.run.core_hours())
+        })
+        .collect();
+    Json::obj()
+        .with("centers", Json::Arr(centers))
+        .with("live_jobs_peak", report.live_jobs_peak as i64)
+        .with("total_registered", report.total_registered as i64)
+        .with("sim_events", report.sim_events as i64)
+        .with("memory_bytes", report.memory_bytes as i64)
+        .with("cells", Json::Arr(cells))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_opts() -> FleetOpts {
+        FleetOpts {
+            centers: 2,
+            systems: vec!["testbed".into()],
+            workflows: 6,
+            mean_gap: 300,
+            scale: 56,
+            strategy: Strategy::PerStage,
+            seed: 11,
+            settle: 0,
+            horizon: 0,
+            epochs: 3,
+            retire: false,
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn fleet_routes_and_completes_every_workflow() {
+        let report = run_fleet(&quiet_opts());
+        assert_eq!(report.cells.len(), 6);
+        assert_eq!(report.centers.len(), 2);
+        let routed: u32 = report.centers.iter().map(|c| c.routed).sum();
+        assert_eq!(routed, 6);
+        for cell in &report.cells {
+            assert!(!cell.run.stages.is_empty());
+            assert!(cell.run.makespan() > 0);
+            assert!(cell.center < 2);
+        }
+        // Cold start: identical priors tie-break to the earlier center.
+        assert_eq!(report.cells[0].center, 0);
+        // Aggregates cover both centers.
+        assert!(report.total_registered >= 6);
+        assert!(report.memory_bytes > 0);
+        assert!(report.sim_events > 0);
+        let rendered = center_table(&report).render();
+        assert!(rendered.contains("c0") && rendered.contains("c1"));
+        assert!(table(&report).render().contains("montage"));
+        assert!(to_json(&report).to_string().contains("live_jobs_peak"));
+    }
+
+    #[test]
+    fn fleet_is_deterministic_across_thread_counts() {
+        // Same seeds ⇒ same cross-center routing and totals whether the
+        // epoch fan-out (and each center's scheduling pass) runs on 1
+        // worker or 4.
+        let fingerprint = |threads: usize| -> Vec<(u32, usize, Time, Time, Time)> {
+            let opts = FleetOpts {
+                threads,
+                ..quiet_opts()
+            };
+            run_fleet(&opts)
+                .cells
+                .iter()
+                .map(|c| {
+                    (
+                        c.index,
+                        c.center,
+                        c.observed_wait,
+                        c.run.makespan(),
+                        c.run.total_wait(),
+                    )
+                })
+                .collect()
+        };
+        let serial = fingerprint(1);
+        let parallel = fingerprint(4);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn router_observations_accumulate_per_center() {
+        let report = run_fleet(&quiet_opts());
+        let obs: u64 = report.centers.iter().map(|c| c.observations).sum();
+        assert_eq!(obs, 6, "every routed workflow observed exactly once");
+        for c in &report.centers {
+            if c.routed > 0 {
+                assert_eq!(c.observations, c.routed as u64);
+                assert!(c.expected_wait.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_rotates_presets() {
+        let opts = FleetOpts {
+            centers: 3,
+            systems: vec!["testbed".into(), "testbed2".into()],
+            workflows: 3,
+            epochs: 1,
+            ..quiet_opts()
+        };
+        let report = run_fleet(&opts);
+        assert_eq!(report.centers.len(), 3);
+        assert_eq!(report.centers[0].system, "testbed");
+        assert_eq!(report.centers[1].system, "testbed2");
+        assert_eq!(report.centers[2].system, "testbed");
+    }
+
+    #[test]
+    fn horizon_soak_with_retirement_bounds_memory() {
+        let opts = FleetOpts {
+            workflows: 8,
+            horizon: 48 * 3600,
+            retire: true,
+            epochs: 4,
+            ..quiet_opts()
+        };
+        let report = run_fleet(&opts);
+        assert_eq!(report.cells.len(), 8);
+        assert!(report.live_jobs_peak > 0);
+        // Arrivals actually spread across the horizon.
+        let spread = report.cells.iter().map(|c| c.arrival).max().unwrap()
+            - report.cells.iter().map(|c| c.arrival).min().unwrap();
+        assert!(spread > 3600, "arrivals must spread, got {spread}");
+    }
+}

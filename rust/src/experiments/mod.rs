@@ -8,10 +8,14 @@
 //! * [`accuracy`] — Table 2 (60-probe prediction-accuracy experiment).
 //! * [`usage`] — Fig. 9 (total resource usage incl. ASA overheads).
 //! * [`regret`] — Appendix A (measured regret vs the Theorem-1 bound).
+//! * [`fleet`] — federated multi-center routing (`campaign --fleet`):
+//!   N independent centers, workflows routed by learned expected wait —
+//!   beyond the paper's evaluation.
 
 pub mod convergence;
 pub mod campaign;
 pub mod concurrent;
+pub mod fleet;
 pub mod accuracy;
 pub mod usage;
 pub mod regret;

@@ -6,6 +6,7 @@
 //! asa convergence           Fig. 5   policy convergence under regime shifts
 //! asa campaign              Figs 6-8 makespan breakdowns (one workflow)
 //! asa campaign --concurrent          multi-tenant contention scenario
+//! asa campaign --fleet N             federated multi-center routing
 //! asa table1                Table 1  full 54-run strategy comparison
 //! asa table2                Table 2  prediction-accuracy probes
 //! asa usage                 Fig. 9   total resource usage per strategy
@@ -16,7 +17,7 @@
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use asa::experiments::{
-    accuracy, campaign, concurrent, convergence, regret, usage, write_csv, write_result,
+    accuracy, campaign, concurrent, convergence, fleet, regret, usage, write_csv, write_result,
 };
 use asa::runtime::XlaKernel;
 use asa::util::cli::Cli;
@@ -58,6 +59,7 @@ fn print_usage() {
            convergence  Fig. 5: Greedy/Default/Tuned convergence simulation\n\
            campaign     Figs 6-8: makespan breakdown for one workflow\n\
                         (--concurrent: multi-tenant contention scenario;\n\
+                         --fleet N: route workflows across N centers;\n\
                          --two-center: partitioned cori/abisko domain)\n\
            table1       Table 1: full strategy-comparison campaign\n\
                         (--two-center: partitioned cori/abisko domain)\n\
@@ -160,6 +162,25 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
         "0",
         "[concurrent] spread each tenant's arrivals over this many days \
          (month-scale soak; enables arena retirement of completed workflows)",
+    )
+    .opt_default(
+        "fleet",
+        "0",
+        "run N independent centers with workflows routed across them by \
+         learned expected wait (federation scenario; 0 = off)",
+    )
+    .opt_default("workflows", "12", "[fleet] total workflows routed across the fleet")
+    .opt_default(
+        "systems",
+        "hpc2n,uppmax",
+        "[fleet] comma-separated system presets the centers rotate through",
+    )
+    .opt_default("epochs", "4", "[fleet] routing epochs (re-route between batches)")
+    .opt_default(
+        "threads",
+        "0",
+        "[fleet] worker threads for the center fan-out (0 = machine default; \
+         results are identical at any value)",
     );
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -168,6 +189,10 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let fleet_n = a.get_u64("fleet", 0).unwrap_or(0);
+    if fleet_n > 0 {
+        return cmd_campaign_fleet(&a, fleet_n as u32);
+    }
     if a.flag("concurrent") {
         return cmd_campaign_concurrent(&a);
     }
@@ -264,6 +289,62 @@ fn cmd_campaign_concurrent(a: &asa::util::cli::Args) -> i32 {
     }
     write_csv("campaign_concurrent", &t.to_csv());
     write_result("campaign_concurrent", &concurrent::to_json(&report));
+    0
+}
+
+/// `asa campaign --fleet <n>`: the federation scenario — N independent
+/// centers, workflows routed across them by learned expected wait.
+fn cmd_campaign_fleet(a: &asa::util::cli::Args, centers: u32) -> i32 {
+    let Some(strategy) = campaign::Strategy::parse(a.get_or("strategy", "asa")) else {
+        eprintln!("bad --strategy (asa | per-stage | big-job | naive)");
+        return 2;
+    };
+    let systems: Vec<String> = a
+        .get_or("systems", "hpc2n,uppmax")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for s in &systems {
+        if asa::simulator::SystemConfig::by_name(s).is_none() {
+            eprintln!("unknown system preset {s:?} in --systems");
+            return 2;
+        }
+    }
+    let horizon_days = a.get_u64("horizon", 0).unwrap();
+    let opts = fleet::FleetOpts {
+        centers,
+        systems,
+        workflows: a.get_u64("workflows", 12).unwrap() as u32,
+        mean_gap: a.get_u64("gap", 600).unwrap() as i64,
+        scale: a.get_u64("scale", 112).unwrap() as u32,
+        strategy,
+        seed: a.get_u64("seed", 42).unwrap(),
+        horizon: horizon_days as i64 * 24 * 3600,
+        epochs: a.get_u64("epochs", 4).unwrap().max(1) as u32,
+        retire: horizon_days > 0,
+        threads: a.get_u64("threads", 0).unwrap() as usize,
+        ..fleet::FleetOpts::default()
+    };
+    if opts.workflows == 0 {
+        eprintln!("--workflows must be >= 1");
+        return 2;
+    }
+    let report = fleet::run_fleet(&opts);
+    println!(
+        "fleet campaign: {} workflows routed across {} centers — peak {} live jobs, \
+         {} registered, ~{:.1} MiB fleet state",
+        report.cells.len(),
+        report.centers.len(),
+        report.live_jobs_peak,
+        report.total_registered,
+        report.memory_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!("{}", fleet::center_table(&report).render());
+    let t = fleet::table(&report);
+    println!("{}", t.render());
+    write_csv("campaign_fleet", &t.to_csv());
+    write_result("campaign_fleet", &fleet::to_json(&report));
     0
 }
 
@@ -676,8 +757,8 @@ fn cmd_bench_summary(argv: Vec<String>) -> i32 {
             .map(|(_, cases)| cases)
             .unwrap_or_default();
         md.push_str(&format!(
-            "\n### {group}\n\n| case | metric | baseline | this run | delta |\n\
-             |---|---|---:|---:|---:|\n"
+            "\n### {group}\n\n| case | metric | baseline | this run | delta | vs 1 thread |\n\
+             |---|---|---:|---:|---:|---:|\n"
         ));
         for (label, mean_ms, items) in &fresh {
             let (fresh_v, unit) = metric(*mean_ms, *items);
@@ -692,14 +773,33 @@ fn cmd_bench_summary(argv: Vec<String>) -> i32 {
                 ),
                 _ => ("—".to_string(), "new".to_string()),
             };
+            // Thread-scaling pairs: a case labelled "... [N threads]" is
+            // compared against its "... [1 thread]" sibling in the same
+            // fresh run, shown as a speedup (serial time / this time —
+            // higher is better).
+            let speedup_cell = match label.rsplit_once(" [") {
+                Some((stem, suffix)) if suffix.ends_with("threads]") => {
+                    let serial_label = format!("{stem} [1 thread]");
+                    fresh
+                        .iter()
+                        .find(|(l, _, _)| *l == serial_label)
+                        .map(|(_, m, n)| metric(*m, *n))
+                        .filter(|&(sv, su)| su == unit && sv > 0.0 && fresh_v > 0.0)
+                        .map(|(sv, _)| format!("{:.2}x", sv / fresh_v))
+                        .unwrap_or_else(|| "—".to_string())
+                }
+                _ => "—".to_string(),
+            };
             md.push_str(&format!(
-                "| {label} | {unit} | {base_cell} | {fresh_v:.1} | {delta_cell} |\n"
+                "| {label} | {unit} | {base_cell} | {fresh_v:.1} | {delta_cell} | {speedup_cell} |\n"
             ));
         }
     }
     md.push_str(
         "\nDeltas compare against the committed `BENCH_<group>.json` \
-         baselines (lower is better).\n",
+         baselines (lower is better). \"vs 1 thread\" pairs a \
+         `[N threads]` case with its `[1 thread]` sibling from the same \
+         run (speedup; higher is better).\n",
     );
     print!("{md}");
     let out = a.get_or("out", "perf-summary.md");

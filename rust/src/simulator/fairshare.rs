@@ -54,6 +54,11 @@ pub struct FairShare {
     /// [`FairShare::factor`] is paid once per user per ledger change rather
     /// than once per candidate per scheduling pass.
     generation: u64,
+    /// Generation [`FairShare::refresh_factors`] last ran at: lets the
+    /// scheduler skip the dense refresh in O(1) when the ledger hasn't
+    /// changed since the previous pass, instead of re-checking staleness
+    /// per candidate.
+    refreshed_gen: u64,
 }
 
 impl FairShare {
@@ -69,6 +74,7 @@ impl FairShare {
             total_usage_scaled: 0.0,
             epoch: 0.0,
             generation: 1,
+            refreshed_gen: 0,
         }
     }
 
@@ -159,6 +165,45 @@ impl FairShare {
         acct.factor_gen = generation;
         acct.factor = f;
         f
+    }
+
+    /// Bring every account's cached factor up to the current ledger
+    /// generation. O(1) when nothing changed since the last call; the
+    /// scheduler runs this once per pass so the pass itself can read
+    /// factors through a shared `&FairShare` ([`FairShare::factor_at`])
+    /// from multiple worker threads.
+    pub fn refresh_factors(&mut self) {
+        if self.refreshed_gen == self.generation {
+            return;
+        }
+        for idx in 0..self.accounts.len() as u32 {
+            self.factor_idx(idx, 0);
+        }
+        self.refreshed_gen = self.generation;
+    }
+
+    /// Fair-share factor by dense account index, read-only. Returns the
+    /// cached value when fresh and otherwise evaluates the same formula as
+    /// [`FairShare::factor_idx`] without writing the cache back, so the
+    /// result is bit-identical either way. This is the lookup the
+    /// (possibly parallel) scheduling pass uses; pair with
+    /// [`FairShare::refresh_factors`] to keep steady-state lookups on the
+    /// cached path.
+    pub fn factor_at(&self, idx: u32) -> f64 {
+        let acct = &self.accounts[idx as usize];
+        if acct.factor_gen == self.generation {
+            return acct.factor;
+        }
+        if self.total_usage_scaled <= 0.0 || self.total_shares <= 0.0 {
+            return 1.0;
+        }
+        let usage_frac = acct.usage_scaled / self.total_usage_scaled;
+        let share_frac = acct.shares / self.total_shares;
+        if share_frac <= 0.0 {
+            0.0
+        } else {
+            2f64.powf(-usage_frac / share_frac)
+        }
     }
 
     /// Absolute decayed usage (core-seconds as of `now`).
@@ -269,6 +314,50 @@ mod tests {
         assert!((fs.factor(7, 0) - 1.0).abs() < 1e-12);
         // The dense index is what factor_idx keys on.
         assert_eq!(fs.factor_idx(a, 0), fs.factor(7, 0));
+    }
+
+    #[test]
+    fn factor_at_matches_factor_idx_fresh_and_stale() {
+        let mut fs = FairShare::new(604_800);
+        let a = fs.ensure_user(1, 1.0);
+        let b = fs.ensure_user(2, 1.0);
+        fs.charge(1, 1e6, 0);
+        // Stale caches: the read-only path must compute the same bits the
+        // caching path would store.
+        assert_eq!(fs.factor_at(a).to_bits(), {
+            let mut clone_calc = FairShare::new(604_800);
+            clone_calc.ensure_user(1, 1.0);
+            clone_calc.ensure_user(2, 1.0);
+            clone_calc.charge(1, 1e6, 0);
+            clone_calc.factor_idx(a, 0).to_bits()
+        });
+        let ra = fs.factor_at(a);
+        let rb = fs.factor_at(b);
+        assert_eq!(ra.to_bits(), fs.factor_idx(a, 0).to_bits());
+        assert_eq!(rb.to_bits(), fs.factor_idx(b, 0).to_bits());
+        // Fresh caches: still identical.
+        assert_eq!(fs.factor_at(a).to_bits(), fs.factor_idx(a, 0).to_bits());
+    }
+
+    #[test]
+    fn refresh_factors_caches_all_accounts() {
+        let mut fs = FairShare::new(604_800);
+        let a = fs.ensure_user(1, 1.0);
+        let b = fs.ensure_user(2, 1.0);
+        fs.charge(1, 5e5, 10);
+        fs.refresh_factors();
+        // Second refresh with no ledger change is a no-op (generation
+        // unchanged) and the read-only lookups hit the cache.
+        fs.refresh_factors();
+        let fa = fs.factor_at(a);
+        let fb = fs.factor_at(b);
+        assert!(fa < fb);
+        assert_eq!(fa.to_bits(), fs.factor_idx(a, 0).to_bits());
+        assert_eq!(fb.to_bits(), fs.factor_idx(b, 0).to_bits());
+        // A charge invalidates; refresh picks the new values up.
+        fs.charge(2, 9e5, 20);
+        fs.refresh_factors();
+        assert!(fs.factor_at(b) < fs.factor_at(a));
     }
 
     #[test]

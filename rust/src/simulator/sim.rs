@@ -32,6 +32,13 @@ use crate::{Cores, Time};
 use std::collections::BTreeSet;
 use std::collections::VecDeque;
 
+/// Queue depth at which a partition's pass counts as "deep": the parallel
+/// per-partition path engages only when ≥ 2 partitions are this busy, so
+/// the ~tens-of-µs `std::thread::scope` spawn cost is only ever paid when
+/// the sort-dominated passes are big enough to amortize it. Purely a
+/// throughput threshold — both paths are bit-identical.
+const PAR_PASS_MIN_CANDS: usize = 256;
+
 /// Observable (foreground) state change.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimEvent {
@@ -139,8 +146,17 @@ pub struct Simulator {
     need_pass: bool,
     /// Reusable per-partition candidate buffers for the scheduling pass.
     cand_bufs: Vec<Vec<Candidate>>,
-    /// Reusable sort/merge buffers for the scheduling pass.
+    /// Reusable sort/merge buffers for the scheduling pass (serial path).
     scratch: PassScratch,
+    /// Worker threads for the parallel per-partition pass (`1` pins the
+    /// serial path). Resolved once at construction from `ASA_THREADS` /
+    /// available parallelism; override with
+    /// [`Simulator::set_pass_threads`].
+    pass_threads: usize,
+    /// Per-worker [`PassScratch`] pool for the parallel pass — one buffer
+    /// set per busy partition, reused across passes so the parallel
+    /// steady state stays allocation-free just like the serial one.
+    scratch_pool: Vec<PassScratch>,
     /// Reusable buffer for one tick's drained events (see `advance_tick`).
     tick_batch: Vec<EventKind>,
     /// Foreground users already seeded with pre-existing usage.
@@ -190,6 +206,8 @@ impl Simulator {
             need_pass: false,
             cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
+            pass_threads: crate::util::par::default_threads(),
+            scratch_pool: Vec::new(),
             tick_batch: Vec::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
@@ -228,10 +246,22 @@ impl Simulator {
             need_pass: false,
             cand_bufs: Vec::new(),
             scratch: PassScratch::default(),
+            pass_threads: crate::util::par::default_threads(),
+            scratch_pool: Vec::new(),
             tick_batch: Vec::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
         }
+    }
+
+    /// Override the worker-thread count for the parallel scheduling pass;
+    /// `1` forces the serial path. Both paths produce bit-identical event
+    /// streams and metrics (the parallel join commits placements in
+    /// partition-index order), so this is purely a throughput knob — and
+    /// the lever tests use instead of racing on the `ASA_THREADS`
+    /// process environment.
+    pub fn set_pass_threads(&mut self, threads: usize) {
+        self.pass_threads = threads.max(1);
     }
 
     fn prefill(&mut self) {
@@ -354,6 +384,12 @@ impl Simulator {
                 .cand_bufs
                 .iter()
                 .map(|b| b.capacity() * size_of::<Candidate>())
+                .sum::<usize>()
+            + self.scratch.bytes_estimate()
+            + self
+                .scratch_pool
+                .iter()
+                .map(PassScratch::bytes_estimate)
                 .sum::<usize>()
             + self.begin_set.len() * size_of::<(Time, JobId)>()
             + self
@@ -752,6 +788,10 @@ impl Simulator {
                 }
             }
         }
+        // Bring the fair-share factor caches up to the current ledger
+        // generation once per pass (O(1) when nothing changed), so the
+        // per-partition passes below read factors through `&FairShare`.
+        self.fairshare.refresh_factors();
         // Each partition runs its own priority + EASY backfill pass over
         // its own queue: membership was resolved once at `queue_push`, so
         // there is no per-pass bucketing scan. The candidate build is a
@@ -802,19 +842,70 @@ impl Simulator {
                     }
                 }
             }
-            if bufs[p].is_empty() {
-                continue;
+        }
+        // Candidate building never observes other partitions' placements
+        // (each pass reads only its own partition's cluster + queue, and
+        // `start_job` touches nothing a later build reads), so passes can
+        // run on worker threads. The join is input-ordered and placements
+        // commit partition-by-partition in partition-index order — the
+        // exact interleaving the serial loop produces — so the event
+        // stream and metrics stay bit-identical either way.
+        let deep = bufs[..n_parts]
+            .iter()
+            .filter(|b| b.len() >= PAR_PASS_MIN_CANDS)
+            .count();
+        if self.pass_threads > 1 && deep >= 2 && self.engine == SchedEngine::Incremental {
+            let busy: Vec<usize> = (0..n_parts).filter(|&p| !bufs[p].is_empty()).collect();
+            while self.scratch_pool.len() < busy.len() {
+                self.scratch_pool.push(PassScratch::default());
             }
-            let result = schedule_pass_with(
-                &self.cfg.sched,
-                self.cluster.part(p),
-                &mut self.fairshare,
-                &bufs[p],
-                self.now,
-                &mut self.scratch,
+            let mut pool = std::mem::take(&mut self.scratch_pool);
+            let work: Vec<(usize, PassScratch)> = busy
+                .into_iter()
+                .map(|p| (p, pool.pop().expect("pool sized to busy set")))
+                .collect();
+            let (cfg, cluster, fairshare) = (&self.cfg.sched, &self.cluster, &self.fairshare);
+            let (bufs_ref, now) = (&bufs, self.now);
+            let results = crate::util::par::par_map_threads(
+                self.pass_threads,
+                work,
+                move |(p, mut scratch)| {
+                    let r = schedule_pass_with(
+                        cfg,
+                        cluster.part(p),
+                        fairshare,
+                        &bufs_ref[p],
+                        now,
+                        &mut scratch,
+                    );
+                    (r, scratch)
+                },
             );
-            for id in result.start {
-                self.start_job(id);
+            for (result, scratch) in results {
+                pool.push(scratch);
+                for id in result.start {
+                    self.start_job(id);
+                }
+            }
+            self.scratch_pool = pool;
+        } else {
+            // Serial fast path: ≤ 1 partition with real work (or threads
+            // pinned to 1) — thread-spawn latency would swamp the pass.
+            for p in 0..n_parts {
+                if bufs[p].is_empty() {
+                    continue;
+                }
+                let result = schedule_pass_with(
+                    &self.cfg.sched,
+                    self.cluster.part(p),
+                    &self.fairshare,
+                    &bufs[p],
+                    self.now,
+                    &mut self.scratch,
+                );
+                for id in result.start {
+                    self.start_job(id);
+                }
             }
         }
         self.cand_bufs = bufs;

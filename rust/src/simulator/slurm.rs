@@ -110,15 +110,28 @@ fn pack_key(prio: f64, submit: Time, seq: u64, idx: u32) -> OrderKey {
     ((((!total) as u128) << 64) | submit_biased as u128, seq, idx)
 }
 
-/// Reusable buffers for [`schedule_pass_with`]. The simulator owns one so
-/// steady-state passes sort in place instead of allocating a fresh priority
-/// vector (and tentative-start list) on every event.
+/// Reusable buffers for [`schedule_pass_with`]. The simulator owns one per
+/// worker (a pool, when the parallel pass is engaged) so steady-state
+/// passes sort and merge in place instead of allocating fresh priority /
+/// tentative-start / merged-end vectors on every event.
 #[derive(Debug, Default)]
 pub struct PassScratch {
     /// Sort keys of the current pass.
     order: Vec<OrderKey>,
     /// `(limit_end, cores)` of this pass's own tentative starts.
     tent: Vec<(Time, Cores)>,
+    /// Merged live-allocation + tentative-start end stream of the shadow
+    /// computation, materialized only up to the point the head job fits.
+    ends: Vec<(Time, Cores)>,
+}
+
+impl PassScratch {
+    /// Approximate heap footprint of the reusable buffers.
+    pub fn bytes_estimate(&self) -> usize {
+        use std::mem::size_of;
+        self.order.capacity() * size_of::<OrderKey>()
+            + (self.tent.capacity() + self.ends.capacity()) * size_of::<(Time, Cores)>()
+    }
 }
 
 /// Earliest time `want` cores are simultaneously free, merging live
@@ -126,9 +139,17 @@ pub struct PassScratch {
 /// pass's own tentative starts (`tent`, sorted). Returns the shadow time
 /// and the cores left over at that moment (`extra`, backfill headroom);
 /// `(Time::MAX, 0)` when the demand can never be met.
+///
+/// Early-exits when the reservation is unconstrained (`want <= free`)
+/// without touching the merge at all; otherwise the merged end stream is
+/// materialized into `ends` — a reused per-partition scratch buffer, so
+/// the contiguous merge replaces per-element `Peekable` double-branching
+/// with slice reads and costs no allocation in steady state — and the
+/// materialization stops the moment enough cores have freed.
 fn earliest_fit(
     cluster: &Cluster,
     tent: &[(Time, Cores)],
+    ends: &mut Vec<(Time, Cores)>,
     now: Time,
     mut free: Cores,
     want: Cores,
@@ -136,23 +157,33 @@ fn earliest_fit(
     if want <= free {
         return (now, free - want);
     }
-    let mut live = cluster.ends_iter().peekable();
-    let mut tents = tent.iter().copied().peekable();
+    // Materialize live ends only until they alone could cover the deficit:
+    // the merge below consumes live entries in the same order and stops at
+    // the same cumulative count, so it can never index past this prefix.
+    ends.clear();
+    let need = (want - free) as u64;
+    let mut acc = 0u64;
+    for e in cluster.ends_iter() {
+        acc += e.1 as u64;
+        ends.push(e);
+        if acc >= need {
+            break;
+        }
+    }
+    let (mut li, mut ti) = (0usize, 0usize);
     loop {
-        let next = match (live.peek(), tents.peek()) {
-            (Some(&a), Some(&b)) => {
-                if a <= b {
-                    live.next()
-                } else {
-                    tents.next()
-                }
-            }
-            (Some(_), None) => live.next(),
-            (None, Some(_)) => tents.next(),
-            (None, None) => None,
+        let take_live = match (ends.get(li), tent.get(ti)) {
+            (Some(&a), Some(&b)) => a <= b,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return (Time::MAX, 0),
         };
-        let Some((t, c)) = next else {
-            return (Time::MAX, 0);
+        let (t, c) = if take_live {
+            li += 1;
+            ends[li - 1]
+        } else {
+            ti += 1;
+            tent[ti - 1]
         };
         free += c;
         if want <= free {
@@ -166,7 +197,7 @@ fn earliest_fit(
 pub fn schedule_pass(
     cfg: &SchedConfig,
     cluster: &Cluster,
-    fairshare: &mut FairShare,
+    fairshare: &FairShare,
     candidates: &[Candidate],
     now: Time,
 ) -> PassResult {
@@ -190,10 +221,15 @@ pub fn schedule_pass(
 /// Candidates must carry fair-share indices from the same `fairshare`
 /// ledger (the simulator resolves them at job registration; factors are
 /// computed order-independently since every account already exists).
+///
+/// The ledger is taken by shared reference — [`FairShare::factor_at`] is
+/// read-only — so independent per-partition passes may run concurrently
+/// against one ledger; call [`FairShare::refresh_factors`] beforehand to
+/// keep the lookups on the cached path.
 pub fn schedule_pass_with(
     cfg: &SchedConfig,
     cluster: &Cluster,
-    fairshare: &mut FairShare,
+    fairshare: &FairShare,
     candidates: &[Candidate],
     now: Time,
     scratch: &mut PassScratch,
@@ -210,7 +246,7 @@ pub fn schedule_pass_with(
     let order = &mut scratch.order;
     order.clear();
     order.extend(candidates.iter().enumerate().map(|(i, c)| {
-        let fsf = fairshare.factor_idx(c.fs, now);
+        let fsf = fairshare.factor_at(c.fs);
         pack_key(priority(cfg, fsf, c, now, total), c.submit_time, c.seq, i as u32)
     }));
 
@@ -223,7 +259,7 @@ pub fn schedule_pass_with(
     if min_cores > free {
         let head_key = order.iter().copied().min().unwrap();
         let head = &candidates[head_key.2 as usize];
-        let (shadow, _) = earliest_fit(cluster, &[], now, free, head.cores);
+        let (shadow, _) = earliest_fit(cluster, &[], &mut scratch.ends, now, free, head.cores);
         result.reservation = Some((head.id, shadow));
         return result;
     }
@@ -264,7 +300,7 @@ pub fn schedule_pass_with(
             .map(|c| (now + c.time_limit, c.cores)),
     );
     tent.sort_unstable();
-    let (shadow, extra) = earliest_fit(cluster, tent, now, free, head.cores);
+    let (shadow, extra) = earliest_fit(cluster, tent, &mut scratch.ends, now, free, head.cores);
     result.reservation = Some((head.id, shadow));
 
     // Backfill phase: lower-priority jobs that cannot delay the reservation.
@@ -281,6 +317,12 @@ pub fn schedule_pass_with(
             free -= cand.cores;
             if !ends_before_shadow {
                 extra -= cand.cores;
+            }
+            // Depth-walk early exit: with zero free cores nothing else can
+            // backfill (every candidate needs ≥ 1), so the remaining walk
+            // would be all `continue`s — identical result, skipped.
+            if free == 0 {
+                break;
             }
         }
     }
@@ -310,7 +352,7 @@ mod tests {
         let cluster = Cluster::new(100);
         let mut fs = FairShare::new(1000);
         let cands = [cand(&mut fs, 1, 40, 100, 0), cand(&mut fs, 2, 60, 100, 1)];
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &cands, 10);
         assert_eq!(r.start.len(), 2);
         assert!(r.reservation.is_none());
     }
@@ -322,7 +364,7 @@ mod tests {
         let mut fs = FairShare::new(1000);
         // Head (older ⇒ higher age, same everything else) wants 50 > 20 free.
         let cands = [cand(&mut fs, 1, 50, 100, 0)];
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 10);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &cands, 10);
         assert!(r.start.is_empty());
         assert_eq!(r.reservation, Some((JobId(1), 500)));
     }
@@ -341,7 +383,7 @@ mod tests {
             cand(&mut fs, 2, 30, 100, 0),
             cand(&mut fs, 3, 50, 100, 900), // widest → highest size factor
         ];
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &cands, 1000);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &cands, 1000);
         assert!(r.start.is_empty(), "nothing fits in 10 free cores");
         assert_eq!(r.reservation, Some((JobId(3), 700)));
     }
@@ -358,7 +400,7 @@ mod tests {
         let r = schedule_pass(
             &SchedConfig::default(),
             &cluster,
-            &mut fs,
+            &fs,
             &[head, small_ok, small_too_long],
             10,
         );
@@ -377,7 +419,7 @@ mod tests {
         let r = schedule_pass(
             &SchedConfig::default(),
             &cluster,
-            &mut fs,
+            &fs,
             &[head, long_small, long_big],
             10,
         );
@@ -392,7 +434,7 @@ mod tests {
         let a = cand(&mut fs, 1, 10, 100, 0);
         let b = cand(&mut fs, 2, 10, 100, 0);
         fs.charge(1, 1e9, 0); // user 1 is a hog
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 1);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &[a, b], 1);
         assert_eq!(r.start, vec![JobId(2)], "light user should win");
     }
 
@@ -420,7 +462,7 @@ mod tests {
         let mut fs = FairShare::new(1000);
         let a = cand(&mut fs, 1, 60, 100, 0);
         let b = cand(&mut fs, 2, 60, 500, 1);
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[a, b], 0);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &[a, b], 0);
         assert_eq!(r.start, vec![JobId(1)]);
         assert_eq!(r.reservation, Some((JobId(2), 100)));
     }
@@ -452,7 +494,7 @@ mod tests {
         let r = schedule_pass(
             &SchedConfig::default(),
             &cluster,
-            &mut fs,
+            &fs,
             &[fresh, recycled],
             1,
         );
@@ -499,7 +541,7 @@ mod tests {
     fn empty_queue_is_noop() {
         let cluster = Cluster::new(10);
         let mut fs = FairShare::new(1000);
-        let r = schedule_pass(&SchedConfig::default(), &cluster, &mut fs, &[], 0);
+        let r = schedule_pass(&SchedConfig::default(), &cluster, &fs, &[], 0);
         assert!(r.start.is_empty() && r.reservation.is_none());
     }
 }
