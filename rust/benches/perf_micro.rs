@@ -5,7 +5,7 @@
 //! PRs can diff the perf trajectory.
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
-use asa::simulator::{Dependency, JobSpec, PartitionId, Simulator, SystemConfig};
+use asa::simulator::{Dependency, FaultPlan, JobSpec, PartitionId, Simulator, SystemConfig};
 use asa::util::bench::Bench;
 use asa::util::rng::Rng;
 
@@ -102,6 +102,19 @@ fn partitioned_pass(threads: usize) -> u64 {
     sim.metrics.passes
 }
 
+/// Fault-layer hot path: 24 h of HPC2n background churn under a stochastic
+/// node-failure/repair process (MTBF 1 h, MTTR 10 min, 256 cores per
+/// failure). Every failure terminates victims off the packed machine
+/// (largest planned end first) and every capacity change forces a pass —
+/// the cost of `victims_desc` + `shrink`/`grow` on a production-sized
+/// `by_end` index is what this case tracks.
+fn failure_storm() -> u64 {
+    let mut sim = Simulator::new(SystemConfig::hpc2n(), 42);
+    sim.set_fault_plan(FaultPlan::stochastic(7, 24 * 3600, 1, 256, 3_600.0, 600.0));
+    sim.run_until(24 * 3600);
+    sim.metrics.started
+}
+
 fn background_churn(system: SystemConfig, horizon_secs: i64) -> u64 {
     let mut sim = Simulator::new(system, 42);
     sim.run_until(horizon_secs);
@@ -130,6 +143,7 @@ fn main() {
     b.case_throughput_of("sim: deep queue 10k dep-held, 2k churn", || deep_queue(10_000));
     b.case_throughput_of("sim: dep chain 300 + fanout 500", dep_web);
     b.case_throughput_of("sim: same-tick finish storm", finish_storm);
+    b.case_throughput_of("sim: node-failure storm (24h hpc2n)", failure_storm);
 
     // 1b') Thread scaling: the same two-partition deep-queue scenario at
     // 1 thread vs N — `asa bench-summary` pairs the `[1 thread]` /

@@ -189,7 +189,11 @@ impl Orchestrator {
     ) -> DriverId {
         let idx = self.push_slot(driver);
         let tag = self.fresh_tag();
-        sim.wake_at(at, tag);
+        if sim.wake_at(at, tag).is_err() {
+            // Spawn time already passed (the caller's clock trails the
+            // simulation): begin as soon as possible instead of never.
+            sim.wake_at(sim.now(), tag).expect("now is never past");
+        }
         self.wake_owner.insert(tag, idx);
         DriverId(idx)
     }
@@ -292,7 +296,11 @@ impl Orchestrator {
         }
         if let Some(at) = self.slots[idx].driver.wake_request() {
             let tag = self.fresh_tag();
-            sim.wake_at(at, tag);
+            if sim.wake_at(at, tag).is_err() {
+                // A stale wake request ("soon" computed before time moved
+                // on) still deserves its wakeup — clamp to now.
+                sim.wake_at(sim.now(), tag).expect("now is never past");
+            }
             self.wake_owner.insert(tag, idx);
         }
         if status == DriverStatus::Done {

@@ -26,10 +26,20 @@ use crate::coordinator::driver::{DriverCtx, DriverOutcome, DriverStatus, Strateg
 use crate::coordinator::kernel::UpdateKernel;
 use crate::coordinator::pool::ResourcePool;
 use crate::coordinator::state::{AsaStore, GeometryKey};
-use crate::simulator::{Dependency, JobId, JobSpec, PartitionId, SimEvent, Simulator};
+use crate::simulator::{
+    Dependency, JobId, JobSpec, PartitionId, RetryPolicy, SimEvent, Simulator,
+};
 use crate::util::rng::Rng;
 use crate::workflow::spec::{StageRecord, WorkflowRun, WorkflowSpec};
 use crate::{Cores, Time};
+
+/// Requeue policy for every ASA stage job: survive a few node losses
+/// (Slurm `--requeue`, one-minute exponential backoff) instead of failing
+/// the whole workflow on the first lost allocation.
+const STAGE_RETRY: RetryPolicy = RetryPolicy {
+    max_retries: 3,
+    backoff: 60,
+};
 
 /// Per-run knobs for the ASA strategy.
 #[derive(Clone, Debug, Default)]
@@ -47,6 +57,9 @@ pub struct AsaRunStats {
     pub resubmissions: u32,
     /// Core-seconds charged to cancelled early allocations (OH loss).
     pub overhead_core_secs: i64,
+    /// Pool tasks orphaned by a node failure and migrated onto the
+    /// requeued stage's fresh allocation.
+    pub orphan_recoveries: u64,
 }
 
 /// The stage currently holding the workflow's frontier.
@@ -214,7 +227,8 @@ impl AsaDriver {
             d_y,
         )
         .with_limit(crate::workflow::wms::stage_limit(d_y))
-        .with_partition(part_y);
+        .with_partition(part_y)
+        .with_retry(STAGE_RETRY);
         if !self.opts.naive {
             spec = spec.with_dependency(Dependency::AfterOk(vec![prev.job]));
         }
@@ -293,7 +307,8 @@ impl StrategyDriver for AsaDriver {
                 d0,
             )
             .with_limit(crate::workflow::wms::stage_limit(d0))
-            .with_partition(PartitionId(opt.index as u32)),
+            .with_partition(PartitionId(opt.index as u32))
+            .with_retry(STAGE_RETRY),
         );
         self.new_jobs.push(job);
         self.state = AsaState::Stage0 {
@@ -340,7 +355,7 @@ impl StrategyDriver for AsaDriver {
             },
 
             AsaState::Pipeline {
-                prev,
+                mut prev,
                 y,
                 mut job_y,
                 mut submitted_y,
@@ -358,6 +373,34 @@ impl StrategyDriver for AsaDriver {
                         prev_end = Some(time);
                         self.pool.complete(prev.pool_task);
                         self.pool.release_allocation(prev.job);
+                    }
+                    SimEvent::Requeued { id, .. } if id == prev.job => {
+                        // A node failure took the running stage's
+                        // allocation: its pool task goes Orphaned until
+                        // the requeued job's fresh allocation registers.
+                        self.stats.orphan_recoveries +=
+                            self.pool.release_allocation(prev.job).len() as u64;
+                    }
+                    SimEvent::Started { id, time } if id == prev.job => {
+                        // The requeued stage restarted from scratch:
+                        // re-register its allocation (the pool migrates
+                        // the orphaned task back to Running) and shift
+                        // the expected end by the full stage duration.
+                        let d_prev = prev.expected_end - prev.started;
+                        self.pool.register_allocation(prev.job, prev.cores);
+                        prev.started = time;
+                        prev.expected_end = time + d_prev;
+                    }
+                    SimEvent::Requeued { id, .. } if id == job_y => {
+                        // The proactive grant was lost before stage y−1
+                        // ended; await the retry's start like the first.
+                        started_y = None;
+                    }
+                    SimEvent::Failed { id, .. } if id == prev.job || id == job_y => {
+                        panic!(
+                            "stage job {id:?} exhausted its retries \
+                             (raise STAGE_RETRY.max_retries)"
+                        )
                     }
                     SimEvent::Started { id, time } if id == job_y => {
                         match prev_end {
@@ -391,6 +434,7 @@ impl StrategyDriver for AsaDriver {
                                     )
                                     .with_limit(crate::workflow::wms::stage_limit(d_y))
                                     .with_partition(part_y)
+                                    .with_retry(STAGE_RETRY)
                                     .with_dependency(Dependency::BeginAt(prev.expected_end)),
                                 );
                                 self.new_jobs.push(job_y);
@@ -459,11 +503,27 @@ impl StrategyDriver for AsaDriver {
                 }
             }
 
-            AsaState::Final { prev } => match ev {
+            AsaState::Final { mut prev } => match ev {
                 SimEvent::Finished { id, time } if id == prev.job => {
                     self.finish(sim, prev, time)
                 }
-                SimEvent::TimedOut { id, .. } | SimEvent::Cancelled { id, .. }
+                SimEvent::Requeued { id, .. } if id == prev.job => {
+                    self.stats.orphan_recoveries +=
+                        self.pool.release_allocation(prev.job).len() as u64;
+                    self.state = AsaState::Final { prev };
+                    DriverStatus::Running
+                }
+                SimEvent::Started { id, time } if id == prev.job => {
+                    let d_prev = prev.expected_end - prev.started;
+                    self.pool.register_allocation(prev.job, prev.cores);
+                    prev.started = time;
+                    prev.expected_end = time + d_prev;
+                    self.state = AsaState::Final { prev };
+                    DriverStatus::Running
+                }
+                SimEvent::TimedOut { id, .. }
+                | SimEvent::Cancelled { id, .. }
+                | SimEvent::Failed { id, .. }
                     if id == prev.job =>
                 {
                     panic!("final stage should complete")

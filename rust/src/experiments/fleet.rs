@@ -29,7 +29,7 @@ use crate::coordinator::policy::Policy;
 use crate::coordinator::state::{AsaStore, GeometryKey};
 use crate::experiments::campaign::Strategy;
 use crate::experiments::concurrent::WF_ROTATION;
-use crate::simulator::{Simulator, SystemConfig};
+use crate::simulator::{FaultPlan, Simulator, SystemConfig};
 use crate::util::json::Json;
 use crate::util::par::{default_threads, par_map_threads};
 use crate::util::rng::Rng;
@@ -72,6 +72,11 @@ pub struct FleetOpts {
     /// intra-pass parallelism; `0` = machine default. Results are
     /// bit-identical at any value.
     pub threads: usize,
+    /// Per-center capacity-event schedules, as `(center index, plan)`
+    /// pairs: outages and maintenance windows at one center reroute load
+    /// to the others through the learned wait model. Centers without an
+    /// entry run fault-free.
+    pub faults: Vec<(usize, FaultPlan)>,
 }
 
 impl Default for FleetOpts {
@@ -89,6 +94,7 @@ impl Default for FleetOpts {
             epochs: 4,
             retire: false,
             threads: 0,
+            faults: Vec::new(),
         }
     }
 }
@@ -188,6 +194,11 @@ pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
             let mut sim = Simulator::new(system, seed);
             if opts.threads > 0 {
                 sim.set_pass_threads(opts.threads);
+            }
+            for (ci, plan) in &opts.faults {
+                if *ci == i as usize {
+                    sim.set_fault_plan(plan.clone());
+                }
             }
             sim.run_until(opts.settle);
             let mut orch = Orchestrator::new();
@@ -461,6 +472,7 @@ mod tests {
             epochs: 3,
             retire: false,
             threads: 0,
+            faults: Vec::new(),
         }
     }
 
@@ -544,6 +556,29 @@ mod tests {
         assert_eq!(report.centers[0].system, "testbed");
         assert_eq!(report.centers[1].system, "testbed2");
         assert_eq!(report.centers[2].system, "testbed");
+    }
+
+    #[test]
+    fn fleet_applies_per_center_fault_plans_and_completes() {
+        // Center 0 loses most of its cores early and recovers much later;
+        // every workflow must still be routed and completed, and the run
+        // must stay deterministic.
+        let opts = FleetOpts {
+            faults: vec![(
+                0,
+                FaultPlan::new().fail_at(10, 0, 1700).recover_at(40_000, 0, 1700),
+            )],
+            ..quiet_opts()
+        };
+        let a = run_fleet(&opts);
+        assert_eq!(a.cells.len(), 6, "the outage must not lose workflows");
+        let routed: u32 = a.centers.iter().map(|c| c.routed).sum();
+        assert_eq!(routed, 6);
+        let b = run_fleet(&opts);
+        let fp = |r: &FleetReport| -> Vec<(u32, usize, Time)> {
+            r.cells.iter().map(|c| (c.index, c.center, c.run.makespan())).collect()
+        };
+        assert_eq!(fp(&a), fp(&b), "faulted fleet replays deterministically");
     }
 
     #[test]

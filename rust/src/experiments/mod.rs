@@ -11,11 +11,16 @@
 //! * [`fleet`] — federated multi-center routing (`campaign --fleet`):
 //!   N independent centers, workflows routed by learned expected wait —
 //!   beyond the paper's evaluation.
+//! * [`scenarios`] — the named adversarial scenario suite
+//!   (`asa scenarios`): flash crowds, drain windows, node-failure storms,
+//!   capacity cold starts, and QOS cap flips, each deterministic with
+//!   machine-checked invariants (DESIGN.md §11).
 
 pub mod convergence;
 pub mod campaign;
 pub mod concurrent;
 pub mod fleet;
+pub mod scenarios;
 pub mod accuracy;
 pub mod usage;
 pub mod regret;

@@ -1,0 +1,374 @@
+//! Named adversarial scenario suite (`asa scenarios`).
+//!
+//! Each scenario is a small, fully deterministic end-to-end run that stresses
+//! one failure mode the schedulers and the fault layer must survive, with
+//! machine-checked invariants instead of eyeballed output:
+//!
+//! * `flash-crowd` — a burst of simultaneous submissions several times the
+//!   machine size; everything must queue, start, and complete.
+//! * `drain-window` — a maintenance window (`FaultPlan::drain_window`) in the
+//!   middle of a steady arrival stream; nothing may *start* inside the
+//!   window, and everything held must start once it ends.
+//! * `node-failure-storm` — repeated node-loss/recovery cycles over a full
+//!   machine; victims are requeued with backoff and every job still finishes
+//!   within its retry budget.
+//! * `cold-start-capacity` — a permanent capacity loss between two identical
+//!   submission cohorts; the wait regime after the change must differ from
+//!   before (this is exactly the shift an ASA estimator re-learns from a
+//!   cold start — see DESIGN.md §11).
+//! * `qos-cap-flip` — the partition's QOS `MaxTime` cap is tightened
+//!   mid-run; only *future* submissions are clamped, and a clamped job that
+//!   outruns the new cap times out.
+//!
+//! Scenario names are kebab-case nouns of the stress, not of the expected
+//! outcome, so new scenarios slot in without renaming old ones. The runner
+//! executes every scenario **twice with the same seed** and fails unless the
+//! two metric documents are byte-identical — determinism is itself one of
+//! the invariants under test.
+
+use crate::simulator::{FaultPlan, JobId, JobSpec, JobState, RetryPolicy, Simulator, SystemConfig};
+use crate::util::json::Json;
+use crate::Time;
+
+/// Every scenario in the suite, in run order.
+pub const SCENARIO_NAMES: &[&str] = &[
+    "flash-crowd",
+    "drain-window",
+    "node-failure-storm",
+    "cold-start-capacity",
+    "qos-cap-flip",
+];
+
+/// One completed scenario: its pinned metrics document. The runner compares
+/// `doc` across repeated runs for determinism, and `asa scenarios` writes
+/// the collection to `results/scenarios.json`.
+pub struct ScenarioOutcome {
+    pub name: &'static str,
+    pub seed: u64,
+    pub doc: Json,
+}
+
+fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+fn mean_wait(sim: &Simulator, ids: &[JobId]) -> f64 {
+    let total: Time = ids
+        .iter()
+        .map(|&id| sim.job(id).wait_time().unwrap_or(0))
+        .sum();
+    total as f64 / ids.len().max(1) as f64
+}
+
+/// Run one named scenario. `Err` carries the first violated invariant.
+pub fn run_scenario(name: &str, seed: u64) -> Result<ScenarioOutcome, String> {
+    let doc = match name {
+        "flash-crowd" => flash_crowd(seed),
+        "drain-window" => drain_window(seed),
+        "node-failure-storm" => node_failure_storm(seed),
+        "cold-start-capacity" => cold_start_capacity(seed),
+        "qos-cap-flip" => qos_cap_flip(seed),
+        other => Err(format!("unknown scenario '{other}' (see `asa scenarios`)")),
+    }
+    .map_err(|e| format!("scenario '{name}': {e}"))?;
+    // SCENARIO_NAMES entries are 'static; resolve back to the static str.
+    let name = SCENARIO_NAMES
+        .iter()
+        .find(|n| **n == name)
+        .expect("dispatched names are listed");
+    Ok(ScenarioOutcome { name, seed, doc })
+}
+
+/// Run scenarios (all, or just `filter`), each twice with the same seed to
+/// prove determinism, returning the outcomes of the first pass.
+pub fn run_all(filter: Option<&str>, seed: u64) -> Result<Vec<ScenarioOutcome>, String> {
+    let names: Vec<&str> = match filter {
+        Some(f) => {
+            ensure(
+                SCENARIO_NAMES.contains(&f),
+                format!("unknown scenario '{f}'; known: {}", SCENARIO_NAMES.join(", ")),
+            )?;
+            vec![f]
+        }
+        None => SCENARIO_NAMES.to_vec(),
+    };
+    let mut out = Vec::new();
+    for name in names {
+        let first = run_scenario(name, seed)?;
+        let second = run_scenario(name, seed)?;
+        ensure(
+            first.doc.to_string() == second.doc.to_string(),
+            format!("scenario '{name}': two runs with seed {seed} produced different metrics"),
+        )?;
+        out.push(first);
+    }
+    Ok(out)
+}
+
+/// 40 jobs land on a 128-core machine within one second — ~5× oversubscribed
+/// against a live background trace. The crowd must fully drain: every job
+/// completes, and queueing (not rejection) is how the overload is absorbed.
+fn flash_crowd(seed: u64) -> Result<Json, String> {
+    let mut sim = Simulator::new(SystemConfig::testbed(16, 8), seed);
+    sim.run_until(1_000);
+    let widths = [8u32, 16, 32];
+    let ids: Vec<JobId> = (0..40)
+        .map(|i| {
+            sim.submit(
+                JobSpec::new(900 + i, format!("crowd-{i}"), widths[i as usize % 3], 200)
+                    .with_limit(400),
+            )
+        })
+        .collect();
+    sim.run_until(100_000);
+    for &id in &ids {
+        let v = sim.job(id);
+        ensure(
+            v.state == JobState::Completed,
+            format!("crowd job {:?} ended {:?}, not Completed", id, v.state),
+        )?;
+    }
+    let waits: Vec<Time> = ids.iter().map(|&id| sim.job(id).wait_time().unwrap()).collect();
+    let max_wait = *waits.iter().max().unwrap();
+    ensure(max_wait > 0, "a 5x-oversubscribed crowd must queue somewhere")?;
+    ensure(sim.metrics.requeues == 0, "no faults were injected")?;
+    Ok(Json::obj()
+        .with("jobs", ids.len())
+        .with("completed", sim.metrics.completed as i64)
+        .with("mean_wait", mean_wait(&sim, &ids))
+        .with("max_wait", max_wait)
+        .with("passes", sim.metrics.passes as i64)
+        .with("events", sim.metrics.events as i64))
+}
+
+/// A steady one-job-per-100 s stream crosses a [500, 900) drain window. The
+/// scheduler must hold *starts* (not submissions) for the window's duration
+/// and release the backlog the moment the window closes.
+fn drain_window(seed: u64) -> Result<Json, String> {
+    let _ = seed; // structure is fully scripted; kept for a uniform signature
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 8));
+    sim.set_fault_plan(FaultPlan::new().drain_window(0, 500, 900));
+    let ids: Vec<JobId> = (0..10)
+        .map(|i| {
+            sim.submit_at(
+                i as Time * 100,
+                JobSpec::new(1, format!("drain-{i}"), 32, 50).with_limit(200),
+            )
+        })
+        .collect();
+    sim.run_until(10_000);
+    let mut held = 0u32;
+    for &id in &ids {
+        let v = sim.job(id);
+        ensure(
+            v.state == JobState::Completed,
+            format!("job {:?} ended {:?}, not Completed", id, v.state),
+        )?;
+        let start = v.start_time.unwrap();
+        ensure(
+            !(500..900).contains(&start),
+            format!("job {:?} started at {} inside the drain window", id, start),
+        )?;
+        if v.submit_time >= 500 && v.submit_time < 900 {
+            held += 1;
+            ensure(
+                start >= 900,
+                format!("in-window arrival {:?} started at {} before drain end", id, start),
+            )?;
+        }
+    }
+    ensure(held > 0, "the arrival stream must cross the window")?;
+    ensure(sim.metrics.requeues == 0, "a drain holds starts; it kills nothing")?;
+    Ok(Json::obj()
+        .with("jobs", ids.len())
+        .with("held_arrivals", held)
+        .with("mean_wait", mean_wait(&sim, &ids))
+        .with("completed", sim.metrics.completed as i64)
+        .with("events", sim.metrics.events as i64))
+}
+
+/// Three node-loss/recovery cycles sweep a fully packed 64-core machine.
+/// Victims carry a retry budget wide enough to outlast the storm: every
+/// loss must convert to a requeue (never a terminal failure), and the
+/// machine must end at full capacity.
+fn node_failure_storm(seed: u64) -> Result<Json, String> {
+    let _ = seed;
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 8));
+    sim.set_fault_plan(
+        FaultPlan::new()
+            .fail_at(50, 0, 32)
+            .recover_at(150, 0, 32)
+            .fail_at(350, 0, 32)
+            .recover_at(450, 0, 32)
+            .fail_at(650, 0, 16)
+            .recover_at(750, 0, 16),
+    );
+    let retry = RetryPolicy { max_retries: 5, backoff: 30 };
+    let ids: Vec<JobId> = (0..8)
+        .map(|i| {
+            sim.submit(
+                JobSpec::new(2, format!("storm-{i}"), 8, 300)
+                    .with_limit(600)
+                    .with_retry(retry),
+            )
+        })
+        .collect();
+    sim.run_until(20_000);
+    for &id in &ids {
+        let v = sim.job(id);
+        ensure(
+            v.state == JobState::Completed,
+            format!("storm job {:?} ended {:?}, not Completed", id, v.state),
+        )?;
+    }
+    ensure(sim.metrics.node_failures == 3, "all three failures must fire")?;
+    ensure(sim.metrics.node_recoveries == 3, "all three recoveries must fire")?;
+    ensure(sim.metrics.requeues > 0, "a packed machine must lose victims")?;
+    ensure(sim.metrics.failed == 0, "the retry budget must outlast the storm")?;
+    let part = sim.cluster().part(0);
+    ensure(
+        part.total_cores() == 64 && part.free_cores() == 64,
+        "capacity must be fully restored and idle at the end",
+    )?;
+    Ok(Json::obj()
+        .with("jobs", ids.len())
+        .with("requeues", sim.metrics.requeues as i64)
+        .with("node_failures", sim.metrics.node_failures as i64)
+        .with("node_recoveries", sim.metrics.node_recoveries as i64)
+        .with("mean_wait", mean_wait(&sim, &ids))
+        .with("events", sim.metrics.events as i64))
+}
+
+/// Two identical 12-job cohorts straddle a permanent 64→16-core capacity
+/// loss. The post-change wait regime must be strictly worse — the
+/// distribution shift an ASA estimator sees as a cold start and must
+/// re-learn (capacity is not an input; waits are).
+fn cold_start_capacity(seed: u64) -> Result<Json, String> {
+    let _ = seed;
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 8));
+    sim.set_fault_plan(FaultPlan::new().fail_at(2_000, 0, 48));
+    let cohort = |sim: &mut Simulator, base: Time, tag: &str| -> Vec<JobId> {
+        (0..12)
+            .map(|i| {
+                sim.submit_at(
+                    base + i as Time * 50,
+                    JobSpec::new(3, format!("{tag}-{i}"), 16, 100).with_limit(300),
+                )
+            })
+            .collect()
+    };
+    let before = cohort(&mut sim, 0, "warm");
+    let after = cohort(&mut sim, 3_000, "cold");
+    sim.run_until(30_000);
+    for &id in before.iter().chain(&after) {
+        let v = sim.job(id);
+        ensure(
+            v.state == JobState::Completed,
+            format!("cohort job {:?} ended {:?}, not Completed", id, v.state),
+        )?;
+    }
+    let (wait_before, wait_after) = (mean_wait(&sim, &before), mean_wait(&sim, &after));
+    ensure(
+        wait_after > wait_before,
+        format!("waits must degrade after the loss ({wait_after:.0} vs {wait_before:.0})"),
+    )?;
+    ensure(
+        sim.cluster().part(0).total_cores() == 16,
+        "the capacity loss is permanent",
+    )?;
+    Ok(Json::obj()
+        .with("cores_before", 64u32)
+        .with("cores_after", 16u32)
+        .with("mean_wait_before", wait_before)
+        .with("mean_wait_after", wait_after)
+        .with("completed", sim.metrics.completed as i64)
+        .with("events", sim.metrics.events as i64))
+}
+
+/// The partition's QOS `MaxTime` cap tightens from unlimited to 300 s
+/// mid-run. The clamp applies at registration, so the pre-flip job keeps
+/// its requested limit while post-flip submissions are clamped — and a
+/// clamped job that outruns the new cap is killed at it.
+fn qos_cap_flip(seed: u64) -> Result<Json, String> {
+    let _ = seed;
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(4, 8));
+    let a = sim.submit(JobSpec::new(4, "pre-flip", 8, 400).with_limit(1_000));
+    sim.run_until(500);
+    sim.set_partition_max_time(0, 300);
+    let b = sim.submit(JobSpec::new(4, "post-flip-long", 8, 400).with_limit(1_000));
+    let c = sim.submit(JobSpec::new(4, "post-flip-short", 8, 200).with_limit(1_000));
+    sim.run_until(5_000);
+    ensure(sim.job(a).time_limit == 1_000, "pre-flip limit must survive the flip")?;
+    ensure(sim.job(b).time_limit == 300, "post-flip submission must be clamped")?;
+    ensure(sim.job(c).time_limit == 300, "post-flip submission must be clamped")?;
+    ensure(
+        sim.job(a).state == JobState::Completed,
+        "pre-flip job had headroom; it completes",
+    )?;
+    ensure(
+        sim.job(b).state == JobState::TimedOut,
+        "clamped long job must die at the new cap",
+    )?;
+    let vb = sim.job(b);
+    ensure(
+        vb.end_time == vb.start_time.map(|s| s + 300),
+        "the kill lands exactly at the clamped limit",
+    )?;
+    ensure(
+        sim.job(c).state == JobState::Completed,
+        "clamped short job fits under the new cap",
+    )?;
+    Ok(Json::obj()
+        .with("cap_after", 300i64)
+        .with("completed", sim.metrics.completed as i64)
+        .with("timed_out", sim.metrics.timed_out as i64)
+        .with("events", sim.metrics.events as i64))
+}
+
+/// The `results/scenarios.json` document for a full run.
+pub fn report_doc(outcomes: &[ScenarioOutcome]) -> Json {
+    let rows: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            Json::obj()
+                .with("name", o.name)
+                .with("seed", o.seed as i64)
+                .with("metrics", o.doc.clone())
+        })
+        .collect();
+    Json::obj()
+        .with("suite", "adversarial-scenarios")
+        .with("scenarios", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scenario_passes_and_is_deterministic() {
+        let outcomes = run_all(None, 42).expect("suite passes");
+        assert_eq!(outcomes.len(), SCENARIO_NAMES.len());
+        for (o, name) in outcomes.iter().zip(SCENARIO_NAMES) {
+            assert_eq!(o.name, *name);
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_recoverable_error() {
+        let err = run_all(Some("meteor-strike"), 1).unwrap_err();
+        assert!(err.contains("meteor-strike"), "{err}");
+        assert!(run_scenario("meteor-strike", 1).is_err());
+    }
+
+    #[test]
+    fn single_scenario_filter_runs_exactly_one() {
+        let outcomes = run_all(Some("node-failure-storm"), 7).expect("storm passes");
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].doc.get("requeues").is_some());
+    }
+}

@@ -17,7 +17,8 @@
 use asa::coordinator::actions::ActionGrid;
 use asa::coordinator::kernel::{PureRustKernel, UpdateKernel};
 use asa::experiments::{
-    accuracy, campaign, concurrent, convergence, fleet, regret, usage, write_csv, write_result,
+    accuracy, campaign, concurrent, convergence, fleet, regret, scenarios, usage, write_csv,
+    write_result,
 };
 use asa::runtime::XlaKernel;
 use asa::util::cli::Cli;
@@ -36,6 +37,7 @@ fn main() {
         "table2" => cmd_table2(args),
         "usage" => cmd_usage(args),
         "regret" => cmd_regret(args),
+        "scenarios" => cmd_scenarios(args),
         "bench-diff" => cmd_bench_diff(args),
         "bench-summary" => cmd_bench_summary(args),
         "info" => cmd_info(),
@@ -67,6 +69,9 @@ fn print_usage() {
                         (--system two-center: per-partition probes)\n\
            usage        Fig. 9: total resource usage per strategy\n\
            regret       Appendix A: measured regret vs Theorem-1 bound\n\
+           scenarios    adversarial scenario suite (fault injection): each\n\
+                        scenario runs twice per seed and must reproduce its\n\
+                        metrics exactly (--name runs one scenario)\n\
            bench-diff   compare two BENCH_*.json files (perf trajectory)\n\
            bench-summary render BENCH_*.json runs as a markdown ns/op table\n\
                         with deltas vs committed baselines (CI artifact)\n\
@@ -533,6 +538,43 @@ fn cmd_regret(argv: Vec<String>) -> i32 {
     0
 }
 
+/// `asa scenarios`: the named adversarial scenario suite (DESIGN.md §11) —
+/// fault injection, drain windows, requeue storms, capacity cold starts,
+/// and QOS flips, each run twice per seed with byte-identical metrics
+/// required. Exit 1 on any violated invariant, so CI can gate on it.
+fn cmd_scenarios(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa scenarios", "adversarial fault-injection scenario suite")
+        .opt("name", "run a single scenario (default: the whole suite)")
+        .opt_default("seed", "42", "scenario seed (same seed => identical metrics)");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let seed = a.get_u64("seed", 42).unwrap();
+    match scenarios::run_all(a.get("name"), seed) {
+        Ok(outcomes) => {
+            let mut t = asa::util::table::Table::new(["scenario", "seed", "metrics"]);
+            for o in &outcomes {
+                t.row([o.name.to_string(), o.seed.to_string(), o.doc.to_string()]);
+            }
+            println!("{}", t.render());
+            println!(
+                "{} scenario(s) passed; every run reproduced its metrics exactly",
+                outcomes.len()
+            );
+            write_result("scenarios", &scenarios::report_doc(&outcomes));
+            0
+        }
+        Err(e) => {
+            eprintln!("::error::{e}");
+            1
+        }
+    }
+}
+
 /// `asa bench-diff`: compare a committed `BENCH_<group>.json` baseline with
 /// a fresh run of the same group — the CI perf-trajectory guard. Matching
 /// is by case label; throughput cases compare items/sec (rates stay
@@ -617,11 +659,14 @@ fn cmd_bench_diff(argv: Vec<String>) -> i32 {
         return 0;
     }
     let mut regressions = 0usize;
+    let mut new_cases = 0usize;
+    let mut missing_cases = 0usize;
     let mut t = asa::util::table::Table::new(["case", "metric", "base", "fresh", "delta"]);
     for (label, fresh_rate, fresh_mean) in &fresh_cases {
         let Some((_, base_rate, base_mean)) =
             base_cases.iter().find(|(l, _, _)| l == label)
         else {
+            new_cases += 1;
             t.row([label.clone(), "-".into(), "-".into(), "-".into(), "new case".into()]);
             continue;
         };
@@ -663,6 +708,7 @@ fn cmd_bench_diff(argv: Vec<String>) -> i32 {
     for (label, _, _) in &base_cases {
         if !fresh_cases.iter().any(|(l, _, _)| l == label) {
             regressions += 1;
+            missing_cases += 1;
             println!(
                 "::warning::bench case {label:?} present in baseline {base_path} \
                  but missing from fresh run {fresh_path}"
@@ -671,6 +717,12 @@ fn cmd_bench_diff(argv: Vec<String>) -> i32 {
         }
     }
     println!("{}", t.render());
+    // Coverage drift is easy to miss among per-case rows — spell it out.
+    println!(
+        "coverage: {} case(s) new in this run (commit the fresh baseline to track \
+         them), {} case(s) missing vs baseline",
+        new_cases, missing_cases
+    );
     if regressions > 0 {
         println!("{regressions} case(s) regressed more than {warn_pct}% or went missing");
         let warn_only = std::env::var("ASA_BENCH_DIFF_WARN_ONLY")

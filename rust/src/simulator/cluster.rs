@@ -106,6 +106,35 @@ impl Cluster {
         self.allocs.len()
     }
 
+    /// Remove `cores` of capacity (node failure). The caller must first
+    /// terminate enough running victims that the loss comes entirely out
+    /// of free cores — capacity can never drop below what is allocated.
+    /// Panics otherwise (fault-injection bug, not a schedule bug).
+    pub fn shrink(&mut self, cores: Cores) {
+        assert!(
+            cores <= self.free,
+            "shrink {cores} exceeds free {} — victims not terminated first",
+            self.free
+        );
+        self.total -= cores;
+        self.free -= cores;
+    }
+
+    /// Return `cores` of capacity (node recovery / maintenance end).
+    pub fn grow(&mut self, cores: Cores) {
+        self.total += cores;
+        self.free += cores;
+    }
+
+    /// Running allocations in descending `(limit_end, cores, job)` order —
+    /// the deterministic victim order for node failures: the allocation
+    /// with the furthest planned end (most remaining work by the
+    /// scheduler's own estimate) is evicted first, ties broken exactly
+    /// like the `by_end` index orders them.
+    pub fn victims_desc(&self) -> impl Iterator<Item = Allocation> + '_ {
+        self.by_end.iter().rev().map(|&(_, _, job)| self.allocs[&job])
+    }
+
     /// `(limit_end, cores)` of live allocations in ascending `(end, cores)`
     /// order — the input to the EASY backfill "shadow time" computation,
     /// consumed lazily so the pass stops as soon as enough cores free up.
@@ -268,6 +297,37 @@ mod tests {
         assert_eq!(m.free_cores(), m.part(0).free_cores());
         assert_eq!(m.utilization(), m.part(0).utilization());
         assert_eq!(m.running_count(), m.part(0).running_count());
+    }
+
+    #[test]
+    fn shrink_and_grow_track_capacity() {
+        let mut c = Cluster::new(100);
+        c.allocate(JobId(1), 30, 0, 100);
+        c.shrink(50);
+        assert_eq!(c.total_cores(), 50);
+        assert_eq!(c.free_cores(), 20);
+        assert_eq!(c.used_cores(), 30);
+        c.grow(50);
+        assert_eq!(c.total_cores(), 100);
+        assert_eq!(c.free_cores(), 70);
+    }
+
+    #[test]
+    #[should_panic(expected = "victims not terminated first")]
+    fn shrink_below_allocated_panics() {
+        let mut c = Cluster::new(10);
+        c.allocate(JobId(1), 8, 0, 100);
+        c.shrink(5);
+    }
+
+    #[test]
+    fn victim_order_is_descending_by_end() {
+        let mut c = Cluster::new(100);
+        c.allocate(JobId(1), 10, 0, 300);
+        c.allocate(JobId(2), 10, 0, 100);
+        c.allocate(JobId(3), 10, 0, 200);
+        let order: Vec<JobId> = c.victims_desc().map(|a| a.job).collect();
+        assert_eq!(order, vec![JobId(1), JobId(3), JobId(2)]);
     }
 
     #[test]

@@ -25,6 +25,12 @@ pub enum EventKind {
     /// Driver-requested timed wakeup: surfaces on the observable stream as
     /// [`crate::simulator::SimEvent::Wake`] with the same tag.
     Wake(u64),
+    /// Apply entry `idx` of the simulator's
+    /// [`crate::simulator::fault::FaultPlan`] (node failure/recovery,
+    /// drain window edge). Chained like [`EventKind::TraceArrival`]:
+    /// handling entry `idx` schedules entry `idx + 1`, so an empty plan
+    /// contributes no heap entries at all.
+    Fault(u32),
 }
 
 #[derive(Clone, Debug)]

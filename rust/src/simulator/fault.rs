@@ -1,0 +1,291 @@
+//! Fault injection: scripted and stochastic node-failure / drain plans.
+//!
+//! A [`FaultPlan`] is a pre-materialised, time-sorted list of capacity
+//! events the simulator replays through its own event heap (one
+//! `EventKind::Fault` entry chained exactly like the background
+//! `TraceArrival`). The plan is *data*, fixed before the run starts:
+//! stochastic plans draw from their own seeded [`Rng`] at construction
+//! time, so a plan never perturbs the simulator's trace/usage RNG streams
+//! and an empty plan leaves the event heap — and therefore every existing
+//! campaign and bench — bit-identical to a run with no plan at all.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{Cores, Time};
+
+/// One capacity event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `cores` of partition `partition` fail: running victims are
+    /// terminated (requeued under their [`crate::simulator::RetryPolicy`])
+    /// and the partition's capacity shrinks.
+    NodeFailure { partition: u32, cores: Cores },
+    /// `cores` of capacity return to partition `partition`.
+    NodeRecovery { partition: u32, cores: Cores },
+    /// Partition `partition` stops starting new jobs (maintenance drain);
+    /// running jobs keep running and submissions keep queueing.
+    DrainStart { partition: u32 },
+    /// Partition `partition` resumes starting jobs.
+    DrainEnd { partition: u32 },
+}
+
+/// A [`FaultKind`] pinned to a simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of capacity events, sorted by time (stable on
+/// ties: same-time events apply in plan order).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injecting it is indistinguishable from not
+    /// injecting any plan at all.
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Build from an explicit script; events are stably sorted by time.
+    pub fn scripted(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        FaultPlan { events }
+    }
+
+    /// Builder: fail `cores` of partition `partition` at `at`.
+    pub fn fail_at(mut self, at: Time, partition: u32, cores: Cores) -> Self {
+        self.push(FaultEvent {
+            at,
+            kind: FaultKind::NodeFailure { partition, cores },
+        });
+        self
+    }
+
+    /// Builder: recover `cores` of partition `partition` at `at`.
+    pub fn recover_at(mut self, at: Time, partition: u32, cores: Cores) -> Self {
+        self.push(FaultEvent {
+            at,
+            kind: FaultKind::NodeRecovery { partition, cores },
+        });
+        self
+    }
+
+    /// Builder: drain partition `partition` over `[from, to)` — a
+    /// maintenance window.
+    pub fn drain_window(mut self, partition: u32, from: Time, to: Time) -> Self {
+        assert!(from < to, "empty drain window {from}..{to}");
+        self.push(FaultEvent {
+            at: from,
+            kind: FaultKind::DrainStart { partition },
+        });
+        self.push(FaultEvent {
+            at: to,
+            kind: FaultKind::DrainEnd { partition },
+        });
+        self
+    }
+
+    fn push(&mut self, ev: FaultEvent) {
+        self.events.push(ev);
+        self.events.sort_by_key(|e| e.at);
+    }
+
+    /// A stochastic failure/repair process, fully materialised up front
+    /// from its own seeded RNG (MTBF/MTTR in seconds, exponential gaps):
+    /// each failure takes `cores_per_failure` out of a uniformly drawn
+    /// partition of `partitions` and returns them one mean-repair-time
+    /// later. Same seed ⇒ identical plan, independent of the simulator.
+    pub fn stochastic(
+        seed: u64,
+        horizon: Time,
+        partitions: u32,
+        cores_per_failure: Cores,
+        mtbf: f64,
+        mttr: f64,
+    ) -> Self {
+        assert!(partitions >= 1 && cores_per_failure >= 1);
+        assert!(mtbf > 0.0 && mttr > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        let mut t = 0i64;
+        loop {
+            t += rng.exponential(1.0 / mtbf).ceil() as Time;
+            if t >= horizon {
+                break;
+            }
+            let part = rng.range_u64(0, partitions as u64) as u32;
+            events.push(FaultEvent {
+                at: t,
+                kind: FaultKind::NodeFailure {
+                    partition: part,
+                    cores: cores_per_failure,
+                },
+            });
+            let repair = t + rng.exponential(1.0 / mttr).ceil().max(1.0) as Time;
+            events.push(FaultEvent {
+                at: repair,
+                kind: FaultKind::NodeRecovery {
+                    partition: part,
+                    cores: cores_per_failure,
+                },
+            });
+        }
+        FaultPlan::scripted(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a plan from JSON:
+    ///
+    /// ```json
+    /// {"faults": [
+    ///   {"at": 3600, "kind": "node-failure", "partition": 0, "cores": 28},
+    ///   {"at": 7200, "kind": "node-recovery", "partition": 0, "cores": 28},
+    ///   {"at": 1000, "kind": "drain-start", "partition": 1},
+    ///   {"at": 2000, "kind": "drain-end", "partition": 1}
+    /// ]}
+    /// ```
+    pub fn from_json(doc: &Json) -> Result<FaultPlan, String> {
+        let arr = doc
+            .get("faults")
+            .and_then(|v| v.as_arr())
+            .ok_or("fault plan needs a 'faults' array")?;
+        let mut events = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let at = e
+                .get("at")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| format!("faults[{i}] missing 'at'"))?;
+            if at < 0 {
+                return Err(format!("faults[{i}] has negative time {at}"));
+            }
+            let kind_str = e
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("faults[{i}] missing 'kind'"))?;
+            let partition = e
+                .get("partition")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| format!("faults[{i}] missing 'partition'"))?
+                as u32;
+            let cores = || -> Result<Cores, String> {
+                let c = e
+                    .get("cores")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| format!("faults[{i}] missing 'cores'"))?;
+                if c <= 0 {
+                    return Err(format!("faults[{i}] needs positive 'cores'"));
+                }
+                Ok(c as Cores)
+            };
+            let kind = match kind_str {
+                "node-failure" => FaultKind::NodeFailure {
+                    partition,
+                    cores: cores()?,
+                },
+                "node-recovery" => FaultKind::NodeRecovery {
+                    partition,
+                    cores: cores()?,
+                },
+                "drain-start" => FaultKind::DrainStart { partition },
+                "drain-end" => FaultKind::DrainEnd { partition },
+                other => {
+                    return Err(format!(
+                        "faults[{i}] has unknown kind {other:?} (node-failure, \
+                         node-recovery, drain-start, drain-end)"
+                    ))
+                }
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        Ok(FaultPlan::scripted(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_plans_sort_by_time_stably() {
+        let plan = FaultPlan::new()
+            .recover_at(500, 0, 8)
+            .fail_at(100, 0, 8)
+            .drain_window(1, 100, 300);
+        let times: Vec<Time> = plan.events().iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![100, 100, 300, 500]);
+        // Same-time events keep plan (insertion) order.
+        assert!(matches!(
+            plan.events()[0].kind,
+            FaultKind::NodeFailure { .. }
+        ));
+        assert!(matches!(plan.events()[1].kind, FaultKind::DrainStart { .. }));
+    }
+
+    #[test]
+    fn stochastic_plans_replay_from_seed_and_balance() {
+        let a = FaultPlan::stochastic(7, 100_000, 2, 28, 5_000.0, 1_000.0);
+        let b = FaultPlan::stochastic(7, 100_000, 2, 28, 5_000.0, 1_000.0);
+        assert_eq!(a.events(), b.events());
+        assert!(!a.is_empty(), "100k-second horizon at 5k MTBF must fail");
+        let fails = a
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::NodeFailure { .. }))
+            .count();
+        // Every failure schedules exactly one recovery.
+        assert_eq!(fails * 2, a.len());
+        let c = FaultPlan::stochastic(8, 100_000, 2, 28, 5_000.0, 1_000.0);
+        assert_ne!(a.events(), c.events(), "seeds must differ");
+    }
+
+    #[test]
+    fn json_round_trip_and_errors() {
+        let doc = Json::parse(
+            r#"{"faults":[
+                {"at": 7200, "kind": "node-recovery", "partition": 0, "cores": 28},
+                {"at": 3600, "kind": "node-failure", "partition": 0, "cores": 28},
+                {"at": 100, "kind": "drain-start", "partition": 1},
+                {"at": 200, "kind": "drain-end", "partition": 1}
+            ]}"#,
+        )
+        .unwrap();
+        let plan = FaultPlan::from_json(&doc).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.events()[0].at, 100);
+        assert_eq!(
+            plan.events()[3].kind,
+            FaultKind::NodeRecovery {
+                partition: 0,
+                cores: 28
+            }
+        );
+        for bad in [
+            r#"{}"#,
+            r#"{"faults":[{"kind":"node-failure","partition":0,"cores":1}]}"#,
+            r#"{"faults":[{"at":1,"kind":"melt","partition":0}]}"#,
+            r#"{"faults":[{"at":1,"kind":"node-failure","partition":0}]}"#,
+            r#"{"faults":[{"at":1,"kind":"node-failure","partition":0,"cores":0}]}"#,
+            r#"{"faults":[{"at":-5,"kind":"drain-start","partition":0}]}"#,
+        ] {
+            assert!(
+                FaultPlan::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+}

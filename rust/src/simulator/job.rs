@@ -104,6 +104,40 @@ pub enum Dependency {
     BeginAt(Time),
 }
 
+/// Why a job reached [`JobState::Failed`]. Disambiguated from
+/// [`JobState::TimedOut`]: a timeout is the job's own fault (it exceeded
+/// the limit it requested), a failure is the machine's (its nodes
+/// vanished under it and its retries ran out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// The allocation's nodes failed mid-run (fault injection).
+    NodeLoss,
+}
+
+/// Slurm-style requeue policy. A job whose allocation is lost to a node
+/// failure is requeued with its original submit time (age/priority
+/// preserved) up to `max_retries` times; the k-th requeue is held back
+/// `backoff * 2^(k-1)` seconds before it becomes eligible again. The
+/// default policy (no retries) fails the job on first node loss.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    /// Base hold-off in seconds; doubles on each repeat failure. Zero
+    /// means immediate re-eligibility.
+    pub backoff: Time,
+}
+
+impl RetryPolicy {
+    /// Hold-off before the `attempt`-th requeue (1-based) becomes
+    /// eligible: exponential in the number of failures so far.
+    pub fn delay(&self, attempt: u32) -> Time {
+        if self.backoff == 0 {
+            return 0;
+        }
+        self.backoff.saturating_mul(1 << (attempt - 1).min(32))
+    }
+}
+
 /// Lifecycle of a simulated job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
@@ -117,13 +151,18 @@ pub enum JobState {
     Cancelled,
     /// Killed at its time limit before completing its work.
     TimedOut,
+    /// Terminated by the machine (node loss) with no retries left.
+    Failed { reason: FailReason },
 }
 
 impl JobState {
     pub fn is_terminal(self) -> bool {
         matches!(
             self,
-            JobState::Completed | JobState::Cancelled | JobState::TimedOut
+            JobState::Completed
+                | JobState::Cancelled
+                | JobState::TimedOut
+                | JobState::Failed { .. }
         )
     }
 }
@@ -149,6 +188,8 @@ pub struct JobSpec {
     /// the primary partition, which on single-partition systems is the
     /// whole machine.
     pub partition: PartitionId,
+    /// Requeue policy on node loss (Slurm `--requeue`). Default: none.
+    pub retry: RetryPolicy,
 }
 
 impl JobSpec {
@@ -163,6 +204,7 @@ impl JobSpec {
             runtime,
             dependency: None,
             partition: PartitionId::DEFAULT,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -178,6 +220,11 @@ impl JobSpec {
 
     pub fn with_partition(mut self, partition: PartitionId) -> Self {
         self.partition = partition;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 }
@@ -232,7 +279,25 @@ mod tests {
         assert!(JobState::Completed.is_terminal());
         assert!(JobState::Cancelled.is_terminal());
         assert!(JobState::TimedOut.is_terminal());
+        assert!(JobState::Failed {
+            reason: FailReason::NodeLoss
+        }
+        .is_terminal());
         assert!(!JobState::Pending.is_terminal());
         assert!(!JobState::Running.is_terminal());
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential() {
+        let r = RetryPolicy {
+            max_retries: 3,
+            backoff: 60,
+        };
+        assert_eq!(r.delay(1), 60);
+        assert_eq!(r.delay(2), 120);
+        assert_eq!(r.delay(3), 240);
+        let none = RetryPolicy::default();
+        assert_eq!(none.max_retries, 0);
+        assert_eq!(none.delay(1), 0);
     }
 }

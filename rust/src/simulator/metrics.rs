@@ -18,6 +18,15 @@ pub struct Metrics {
     pub completed: u64,
     pub cancelled: u64,
     pub timed_out: u64,
+    /// Jobs that exhausted their retries after node loss
+    /// ([`crate::simulator::JobState::Failed`]).
+    pub failed: u64,
+    /// Slurm-style requeues: running victims of a node failure returned to
+    /// the pending queue with preserved submit time.
+    pub requeues: u64,
+    /// Fault-plan capacity events applied (failures / recoveries).
+    pub node_failures: u64,
+    pub node_recoveries: u64,
     /// Scheduling passes run and jobs started by backfill vs FCFS.
     pub passes: u64,
     pub started: u64,

@@ -26,14 +26,18 @@ pub mod job;
 pub mod store;
 pub mod cluster;
 pub mod fairshare;
+pub mod fault;
 pub mod slurm;
 pub mod trace;
 pub mod sim;
 pub mod metrics;
 pub mod config;
 
-pub use job::{Dependency, JobId, JobName, JobSpec, JobState, NameId, PartitionId};
-pub use sim::{SchedEngine, SimEvent, Simulator};
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use job::{
+    Dependency, FailReason, JobId, JobName, JobSpec, JobState, NameId, PartitionId, RetryPolicy,
+};
+pub use sim::{CancelOutcome, SchedEngine, SimEvent, Simulator, WakeInPast};
 pub use store::{JobStore, JobView, NameInterner};
 pub use trace::BackgroundWorkload;
 

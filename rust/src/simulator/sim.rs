@@ -20,7 +20,8 @@
 use crate::simulator::cluster::Partitions;
 use crate::simulator::event::{EventKind, EventQueue};
 use crate::simulator::fairshare::FairShare;
-use crate::simulator::job::{Dependency, JobId, JobSpec, JobState};
+use crate::simulator::fault::{FaultKind, FaultPlan};
+use crate::simulator::job::{Dependency, FailReason, JobId, JobSpec, JobState};
 use crate::simulator::metrics::Metrics;
 use crate::simulator::slurm::{schedule_pass_with, Candidate, PassScratch};
 use crate::simulator::store::{JobStore, JobView};
@@ -47,6 +48,15 @@ pub enum SimEvent {
     Finished { id: JobId, time: Time },
     Cancelled { id: JobId, time: Time },
     TimedOut { id: JobId, time: Time },
+    /// The running job's allocation was lost to a node failure and the job
+    /// went back to the pending queue under its
+    /// [`crate::simulator::RetryPolicy`] (submit time, age and priority
+    /// preserved, Slurm `--requeue` style). Not terminal: the same id will
+    /// emit `Started` again once it reschedules.
+    Requeued { id: JobId, time: Time },
+    /// The running job's allocation was lost to a node failure and its
+    /// retries were exhausted ([`JobState::Failed`]).
+    Failed { id: JobId, time: Time },
     /// A timed wakeup previously requested with [`Simulator::wake_at`].
     /// Carries no job: the tag routes it back to whoever asked.
     Wake { tag: u64, time: Time },
@@ -60,7 +70,9 @@ impl SimEvent {
             | SimEvent::Started { id, .. }
             | SimEvent::Finished { id, .. }
             | SimEvent::Cancelled { id, .. }
-            | SimEvent::TimedOut { id, .. } => Some(id),
+            | SimEvent::TimedOut { id, .. }
+            | SimEvent::Requeued { id, .. }
+            | SimEvent::Failed { id, .. } => Some(id),
             SimEvent::Wake { .. } => None,
         }
     }
@@ -72,18 +84,57 @@ impl SimEvent {
             | SimEvent::Finished { time, .. }
             | SimEvent::Cancelled { time, .. }
             | SimEvent::TimedOut { time, .. }
+            | SimEvent::Requeued { time, .. }
+            | SimEvent::Failed { time, .. }
             | SimEvent::Wake { time, .. } => time,
         }
     }
 
-    /// Does this event end the job's lifecycle?
+    /// Does this event end the job's lifecycle? (`Requeued` does not: the
+    /// job is back in the queue and its owner keeps receiving its events.)
     pub fn is_terminal(&self) -> bool {
         matches!(
             self,
-            SimEvent::Finished { .. } | SimEvent::Cancelled { .. } | SimEvent::TimedOut { .. }
+            SimEvent::Finished { .. }
+                | SimEvent::Cancelled { .. }
+                | SimEvent::TimedOut { .. }
+                | SimEvent::Failed { .. }
         )
     }
 }
+
+/// Outcome of [`Simulator::cancel`]: cancellation is idempotent and safe on
+/// any handle — terminal jobs, stale (retired, possibly recycled) handles —
+/// and the outcome reports what actually happened instead of panicking or
+/// silently swallowing the distinction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was pending or running; it is now cancelled.
+    Cancelled,
+    /// The job had already reached a terminal state; nothing changed.
+    AlreadyTerminal,
+    /// Stale handle: the job was already retired (its slot may have been
+    /// recycled under a fresh generation); nothing changed.
+    Stale,
+}
+
+/// Recoverable error from [`Simulator::wake_at`]: the requested time is
+/// already in the past (a driver's notion of "soon" can trail the simulated
+/// clock). Nothing was scheduled; the caller decides whether to clamp the
+/// request to `now` or drop it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WakeInPast {
+    pub requested: Time,
+    pub now: Time,
+}
+
+impl std::fmt::Display for WakeInPast {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wake_at in the past ({} < {})", self.requested, self.now)
+    }
+}
+
+impl std::error::Error for WakeInPast {}
 
 /// Which scheduling-core bookkeeping the simulator runs.
 ///
@@ -159,6 +210,13 @@ pub struct Simulator {
     scratch_pool: Vec<PassScratch>,
     /// Reusable buffer for one tick's drained events (see `advance_tick`).
     tick_batch: Vec<EventKind>,
+    /// Per-partition drain flags (maintenance windows): a drained
+    /// partition starts nothing but keeps running jobs and queues
+    /// submissions.
+    drained: Vec<bool>,
+    /// Installed capacity-event schedule, replayed through the event heap
+    /// via chained `EventKind::Fault` entries (empty plan ⇒ zero entries).
+    fault_plan: FaultPlan,
     /// Foreground users already seeded with pre-existing usage.
     seeded_users: FxHashSet<u32>,
     usage_rng: Rng,
@@ -209,6 +267,8 @@ impl Simulator {
             pass_threads: crate::util::par::default_threads(),
             scratch_pool: Vec::new(),
             tick_batch: Vec::new(),
+            drained: vec![false; caps.len()],
+            fault_plan: FaultPlan::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
         };
@@ -249,6 +309,8 @@ impl Simulator {
             pass_threads: crate::util::par::default_threads(),
             scratch_pool: Vec::new(),
             tick_batch: Vec::new(),
+            drained: vec![false; caps.len()],
+            fault_plan: FaultPlan::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
         }
@@ -419,7 +481,11 @@ impl Simulator {
             "unknown partition index {p} (machine has {})",
             self.parts_cfg.len()
         );
-        let part_cap = self.cluster.part(p).total_cores();
+        // Validate against the partition's *configured* capacity, not the
+        // live one: cores lost to a node failure come back, so a job wider
+        // than the transiently-online core count is still legal — it waits
+        // for recovery like it would on a real system.
+        let part_cap = self.parts_cfg[p].total_cores();
         assert!(
             spec.cores >= 1 && spec.cores <= part_cap,
             "job cores {} outside machine capacity {part_cap} of partition {:?}",
@@ -582,17 +648,28 @@ impl Simulator {
     /// advancing time). The caller-chosen `tag` routes the wakeup back to
     /// the requesting driver; the simulator does not interpret it. This is
     /// the timed-wakeup hook the event-driven strategy drivers use instead
-    /// of blocking sleeps.
-    pub fn wake_at(&mut self, at: Time, tag: u64) {
-        assert!(at >= self.now, "wake_at in the past ({at} < {})", self.now);
+    /// of blocking sleeps. Requesting a time already in the past is a
+    /// recoverable [`WakeInPast`] error, not a panic: a driver's clock can
+    /// legitimately trail the simulated one, and the caller decides
+    /// whether to clamp to `now` or drop the wakeup.
+    #[must_use = "a past wake time schedules nothing; clamp or drop it"]
+    pub fn wake_at(&mut self, at: Time, tag: u64) -> Result<(), WakeInPast> {
+        if at < self.now {
+            return Err(WakeInPast {
+                requested: at,
+                now: self.now,
+            });
+        }
         self.events.push(at, EventKind::Wake(tag));
+        Ok(())
     }
 
-    /// Cancel a pending or running job. No-op on terminal (or already
-    /// retired) jobs.
-    pub fn cancel(&mut self, id: JobId) {
+    /// Cancel a pending or running job. Idempotent: terminal jobs and
+    /// stale (retired, possibly recycled) handles are left untouched, and
+    /// the returned [`CancelOutcome`] reports which case applied.
+    pub fn cancel(&mut self, id: JobId) -> CancelOutcome {
         let Some(state) = self.store.state_of(id) else {
-            return; // stale handle: the job is retired, hence terminal
+            return CancelOutcome::Stale; // retired; slot may be recycled
         };
         match state {
             JobState::Pending => {
@@ -643,7 +720,7 @@ impl Simulator {
                 self.fairshare.charge(user, used, self.now);
                 self.store.hot_mut(id).finish_at = None;
             }
-            _ => return, // already terminal
+            _ => return CancelOutcome::AlreadyTerminal,
         }
         self.store.hot_mut(id).state = JobState::Cancelled;
         self.store.cold_mut(id).end_time = Some(self.now);
@@ -659,6 +736,7 @@ impl Simulator {
             .sample_utilization(self.now, self.cluster.utilization());
         self.cancel_broken_dependents(id);
         self.maybe_retire(id);
+        CancelOutcome::Cancelled
     }
 
     /// Jobs whose `AfterOk` dependency can no longer be satisfied are
@@ -692,7 +770,9 @@ impl Simulator {
                         d == failed
                             && matches!(
                                 self.store.state_of(d),
-                                Some(JobState::Cancelled) | Some(JobState::TimedOut)
+                                Some(JobState::Cancelled)
+                                    | Some(JobState::TimedOut)
+                                    | Some(JobState::Failed { .. })
                             )
                     }),
                     _ => false,
@@ -806,7 +886,12 @@ impl Simulator {
         for p in 0..n_parts {
             let buf = &mut bufs[p];
             buf.clear();
-            if self.queues[p].is_empty() || self.cluster.part(p).free_cores() == 0 {
+            // A drained partition builds no candidates at all — the one
+            // gate that covers serial and parallel paths on both engines.
+            if self.drained[p]
+                || self.queues[p].is_empty()
+                || self.cluster.part(p).free_cores() == 0
+            {
                 continue;
             }
             match self.engine {
@@ -1043,6 +1128,176 @@ impl Simulator {
         true
     }
 
+    /// Install a capacity-event schedule. The plan is replayed through the
+    /// simulator's own event heap as one chained `Fault` entry (exactly
+    /// like the background `TraceArrival`), so an empty plan contributes no
+    /// heap entries and the run stays bit-identical to one with no plan at
+    /// all. Call at most once, before or during the run; events already in
+    /// the past fire at the current time in plan order.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        assert!(
+            self.fault_plan.is_empty(),
+            "a fault plan is already installed"
+        );
+        for ev in plan.events() {
+            let p = match ev.kind {
+                FaultKind::NodeFailure { partition, .. }
+                | FaultKind::NodeRecovery { partition, .. }
+                | FaultKind::DrainStart { partition }
+                | FaultKind::DrainEnd { partition } => partition as usize,
+            };
+            assert!(
+                p < self.parts_cfg.len(),
+                "fault plan names partition {p}, machine has {}",
+                self.parts_cfg.len()
+            );
+        }
+        if plan.is_empty() {
+            return;
+        }
+        let first = plan.events()[0].at.max(self.now);
+        self.events.push(first, EventKind::Fault(0));
+        self.fault_plan = plan;
+    }
+
+    /// The installed fault plan (empty if none was set).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.fault_plan
+    }
+
+    /// Is partition `p` currently drained (maintenance window)?
+    pub fn is_drained(&self, p: usize) -> bool {
+        self.drained[p]
+    }
+
+    /// Start or end a maintenance drain on partition `p`: a drained
+    /// partition starts no new jobs; running jobs keep running and
+    /// submissions keep queueing.
+    pub fn set_drained(&mut self, p: usize, drained: bool) {
+        assert!(p < self.parts_cfg.len(), "unknown partition index {p}");
+        self.drained[p] = drained;
+        self.need_pass = true;
+    }
+
+    /// Change partition `p`'s QOS wall-time cap at runtime (a Slurm
+    /// `MaxTime` flip). Applies to future registrations only —
+    /// already-registered jobs keep their clamped limits — and is visible
+    /// to routing through [`Simulator::partition_specs`]. `0` removes the
+    /// cap.
+    pub fn set_partition_max_time(&mut self, p: usize, limit: Time) {
+        assert!(p < self.parts_cfg.len(), "unknown partition index {p}");
+        self.parts_cfg[p].max_time_limit = limit;
+    }
+
+    /// `cores` of partition `p` fail now: enough running victims to cover
+    /// the loss are terminated (largest planned end first, the same
+    /// deterministic order on both engines) and the partition's live
+    /// capacity shrinks. Modeling decision: a failure never takes a
+    /// partition's *last* core — capacity stays positive, keeping
+    /// utilization and the scheduling pass well-defined, just as a real
+    /// cluster keeps its service nodes.
+    pub fn inject_node_failure(&mut self, p: usize, cores: Cores) {
+        assert!(p < self.parts_cfg.len(), "unknown partition index {p}");
+        let lost = cores.min(self.cluster.part(p).total_cores().saturating_sub(1));
+        if lost == 0 {
+            return;
+        }
+        self.metrics.node_failures += 1;
+        while self.cluster.part(p).free_cores() < lost {
+            let victim = self
+                .cluster
+                .part(p)
+                .victims_desc()
+                .next()
+                .expect("free < lost <= total implies a running victim")
+                .job;
+            self.fail_running(victim);
+        }
+        self.cluster.part_mut(p).shrink(lost);
+        self.need_pass = true;
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+    }
+
+    /// `cores` of capacity return to partition `p`. The caller is trusted
+    /// to pair recoveries with failures; growing past the configured
+    /// capacity is not checked here (plans from
+    /// [`FaultPlan::stochastic`] are balanced by construction).
+    pub fn inject_node_recovery(&mut self, p: usize, cores: Cores) {
+        assert!(p < self.parts_cfg.len(), "unknown partition index {p}");
+        self.cluster.part_mut(p).grow(cores);
+        self.metrics.node_recoveries += 1;
+        self.need_pass = true;
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+    }
+
+    fn apply_fault(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::NodeFailure { partition, cores } => {
+                self.inject_node_failure(partition as usize, cores);
+            }
+            FaultKind::NodeRecovery { partition, cores } => {
+                self.inject_node_recovery(partition as usize, cores);
+            }
+            FaultKind::DrainStart { partition } => self.set_drained(partition as usize, true),
+            FaultKind::DrainEnd { partition } => self.set_drained(partition as usize, false),
+        }
+    }
+
+    /// Terminate a running victim of a node failure: release its cores,
+    /// charge the fair-share ledger for what it used, then either requeue
+    /// it under its [`crate::simulator::RetryPolicy`] (Slurm `--requeue`:
+    /// submit time, age and priority preserved; eligibility held back by
+    /// the exponential backoff, riding the existing `--begin` machinery so
+    /// both engines treat requeues identically) or — retries exhausted —
+    /// move it to [`JobState::Failed`].
+    fn fail_running(&mut self, id: JobId) {
+        debug_assert_eq!(self.store.state_of(id), Some(JobState::Running));
+        let sc = *self.store.scan(id);
+        self.cluster.part_mut(sc.partition as usize).release(id);
+        let start = self.store.cold(id).start_time.unwrap();
+        let used = (self.now - start) as f64 * sc.cores as f64;
+        let user = self.store.hot(id).user;
+        self.fairshare.charge(user, used, self.now);
+        self.store.hot_mut(id).finish_at = None;
+        let (retry, used_retries) = {
+            let c = self.store.cold(id);
+            (c.retry, c.retries_used)
+        };
+        let foreground = self.store.hot(id).foreground;
+        self.need_pass = true;
+        self.metrics
+            .sample_utilization(self.now, self.cluster.utilization());
+        if used_retries < retry.max_retries {
+            let attempt = used_retries + 1;
+            let release_at = self.now + retry.delay(attempt);
+            {
+                let c = self.store.cold_mut(id);
+                c.retries_used = attempt;
+                c.start_time = None;
+                c.dependency = Some(Dependency::BeginAt(release_at));
+            }
+            self.store.hot_mut(id).state = JobState::Pending;
+            self.metrics.requeues += 1;
+            self.admit(id);
+            if foreground {
+                self.out.push_back(SimEvent::Requeued { id, time: self.now });
+            }
+        } else {
+            self.store.hot_mut(id).state = JobState::Failed {
+                reason: FailReason::NodeLoss,
+            };
+            self.store.cold_mut(id).end_time = Some(self.now);
+            self.metrics.failed += 1;
+            if foreground {
+                self.out.push_back(SimEvent::Failed { id, time: self.now });
+            }
+            self.cancel_broken_dependents(id);
+            self.maybe_retire(id);
+        }
+    }
+
     /// Process one simulation *tick*: drain every internal event at the
     /// earliest outstanding timestamp, handle them in order, then run at
     /// most one scheduling pass for the whole batch — instead of one pass
@@ -1097,6 +1352,15 @@ impl Simulator {
                 }
                 EventKind::Sample => {
                     self.need_pass = true;
+                }
+                EventKind::Fault(idx) => {
+                    let i = idx as usize;
+                    let ev = self.fault_plan.events()[i];
+                    let next_at = self.fault_plan.events().get(i + 1).map(|e| e.at);
+                    if let Some(at) = next_at {
+                        self.events.push(at.max(self.now), EventKind::Fault(idx + 1));
+                    }
+                    self.apply_fault(ev.kind);
                 }
                 EventKind::Wake(tag) => {
                     self.out.push_back(SimEvent::Wake {
@@ -1632,8 +1896,8 @@ mod tests {
     #[test]
     fn wake_surfaces_on_observable_stream() {
         let mut sim = quiet_sim(4);
-        sim.wake_at(250, 7);
-        sim.wake_at(100, 3);
+        sim.wake_at(250, 7).unwrap();
+        sim.wake_at(100, 3).unwrap();
         assert_eq!(sim.step(), Some(SimEvent::Wake { tag: 3, time: 100 }));
         assert_eq!(sim.step(), Some(SimEvent::Wake { tag: 7, time: 250 }));
         assert_eq!(sim.now(), 250);
@@ -1644,7 +1908,7 @@ mod tests {
     fn wake_interleaves_with_job_events() {
         let mut sim = quiet_sim(4);
         let id = sim.submit(JobSpec::new(1, "j", 1, 100));
-        sim.wake_at(50, 1);
+        sim.wake_at(50, 1).unwrap();
         let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
         assert_eq!(
             evs,
@@ -1658,11 +1922,21 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "wake_at in the past")]
-    fn wake_in_the_past_rejected() {
+    fn wake_in_the_past_is_recoverable() {
         let mut sim = quiet_sim(4);
         sim.run_until(100);
-        sim.wake_at(50, 0);
+        let err = sim.wake_at(50, 0).unwrap_err();
+        assert_eq!(
+            err,
+            WakeInPast {
+                requested: 50,
+                now: 100
+            }
+        );
+        assert!(err.to_string().contains("wake_at in the past"));
+        // Nothing was scheduled; clamping to `now` recovers.
+        sim.wake_at(sim.now(), 0).unwrap();
+        assert_eq!(sim.step(), Some(SimEvent::Wake { tag: 0, time: 100 }));
     }
 
     #[test]
@@ -1791,5 +2065,214 @@ mod tests {
             assert_eq!(sim.job(id).state, expect, "job q{i}");
         }
         assert_eq!(sim.queue_depth(), 0);
+    }
+
+    // ---- fault injection, requeue and drain windows ----
+
+    use crate::simulator::job::RetryPolicy;
+
+    #[test]
+    fn cancel_reports_outcome() {
+        let mut sim = quiet_sim(4);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 100));
+        assert_eq!(sim.cancel(a), CancelOutcome::Cancelled);
+        assert_eq!(sim.cancel(a), CancelOutcome::AlreadyTerminal);
+        assert!(sim.retire(a));
+        assert_eq!(sim.cancel(a), CancelOutcome::Stale);
+    }
+
+    #[test]
+    fn node_failure_requeues_victim_with_preserved_submit_time() {
+        let mut sim = quiet_sim(10);
+        let id = sim.submit(JobSpec::new(1, "j", 10, 100).with_retry(RetryPolicy {
+            max_retries: 2,
+            backoff: 30,
+        }));
+        sim.run_until(40); // running since t=0
+        sim.inject_node_failure(0, 5);
+        let evs = sim.drain_events();
+        assert!(evs.contains(&SimEvent::Requeued { id, time: 40 }));
+        assert_eq!(sim.job(id).state, JobState::Pending);
+        assert_eq!(sim.job(id).submit_time, 0, "age preserved across requeue");
+        assert_eq!(sim.metrics.requeues, 1);
+        assert_eq!(sim.metrics.node_failures, 1);
+        // 5 of 10 cores online: the 10-core job cannot restart yet.
+        assert_eq!(sim.cluster().total_cores(), 5);
+        sim.inject_node_recovery(0, 5);
+        assert_eq!(sim.metrics.node_recoveries, 1);
+        let mut started_again = None;
+        let mut finished = None;
+        while let Some(ev) = sim.step() {
+            match ev {
+                SimEvent::Started { id: sid, time } if sid == id => started_again = Some(time),
+                SimEvent::Finished { id: sid, time } if sid == id => finished = Some(time),
+                _ => {}
+            }
+        }
+        // Requeued at t=40 under a 30 s first-attempt backoff: restarts at
+        // t=70 and replays its full runtime.
+        assert_eq!(started_again, Some(70));
+        assert_eq!(finished, Some(170));
+        assert_eq!(sim.job(id).state, JobState::Completed);
+        assert_eq!(sim.job(id).core_seconds(), 1000, "the successful run");
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_job_and_cascade() {
+        let mut sim = quiet_sim(10);
+        // Default policy: no retries — first node loss is fatal.
+        let a = sim.submit(JobSpec::new(1, "a", 10, 100).with_limit(100));
+        let b = sim
+            .submit(JobSpec::new(1, "b", 1, 10).with_dependency(Dependency::AfterOk(vec![a])));
+        sim.run_until(10);
+        let _ = sim.drain_events();
+        sim.inject_node_failure(0, 4);
+        let evs = sim.drain_events();
+        assert!(evs.contains(&SimEvent::Failed { id: a, time: 10 }));
+        assert!(evs.contains(&SimEvent::Cancelled { id: b, time: 10 }));
+        assert_eq!(
+            sim.job(a).state,
+            JobState::Failed {
+                reason: FailReason::NodeLoss
+            }
+        );
+        assert_eq!(sim.metrics.failed, 1);
+        assert_eq!(sim.metrics.cancelled, 1);
+        // Like cancellation, a failed run is charged for what it used.
+        assert_eq!(sim.job(a).core_seconds(), 100);
+        assert_eq!(sim.cluster().total_cores(), 6);
+    }
+
+    #[test]
+    fn drain_window_holds_starts_until_it_ends() {
+        let mut sim = quiet_sim(4);
+        sim.set_fault_plan(FaultPlan::new().drain_window(0, 50, 200));
+        let id = sim.submit_at(100, JobSpec::new(1, "j", 1, 10));
+        let evs: Vec<SimEvent> = std::iter::from_fn(|| sim.step()).collect();
+        assert_eq!(
+            evs,
+            vec![
+                SimEvent::Submitted { id, time: 100 },
+                SimEvent::Started { id, time: 200 },
+                SimEvent::Finished { id, time: 210 },
+            ]
+        );
+        assert!(!sim.is_drained(0));
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        let run = |with_plan: bool| -> (Vec<SimEvent>, u64, u64, u64) {
+            let mut cfg = SystemConfig::testbed(8, 4);
+            cfg.workload = oversubscribed_profile();
+            let mut sim = Simulator::new(cfg, 7);
+            if with_plan {
+                sim.set_fault_plan(FaultPlan::new());
+            }
+            sim.submit(JobSpec::new(1, "probe", 8, 120));
+            sim.run_until(12 * 3600);
+            (
+                sim.drain_events(),
+                sim.metrics.started,
+                sim.metrics.completed,
+                sim.metrics.events,
+            )
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn scripted_fault_plan_replays_deterministically() {
+        let run = || -> (u64, u64, u64, Cores, Cores) {
+            let mut cfg = SystemConfig::testbed(8, 4); // 32 cores
+            cfg.workload = oversubscribed_profile();
+            let mut sim = Simulator::new(cfg, 9);
+            sim.set_fault_plan(
+                FaultPlan::new()
+                    .fail_at(3600, 0, 8)
+                    .recover_at(7200, 0, 8)
+                    .drain_window(0, 9000, 10_000),
+            );
+            sim.run_until(4000);
+            let total_mid = sim.cluster().total_cores();
+            sim.run_until(24 * 3600);
+            (
+                sim.metrics.node_failures,
+                sim.metrics.node_recoveries,
+                sim.metrics.requeues + sim.metrics.failed + sim.metrics.started,
+                total_mid,
+                sim.cluster().total_cores(),
+            )
+        };
+        let a = run();
+        assert_eq!(a.0, 1);
+        assert_eq!(a.1, 1);
+        assert_eq!(a.3, 24, "8 of 32 cores offline mid-outage");
+        assert_eq!(a.4, 32, "capacity restored after recovery");
+        assert_eq!(a, run(), "same seed + plan replays identically");
+    }
+
+    #[test]
+    fn qos_cap_flip_applies_to_future_submissions() {
+        let mut sim = quiet_sim(4);
+        let before = sim.submit(JobSpec::new(1, "b", 1, 500).with_limit(5000));
+        sim.set_partition_max_time(0, 1000);
+        let after = sim.submit(JobSpec::new(1, "a", 1, 500).with_limit(5000));
+        assert_eq!(sim.job(before).time_limit, 5000, "existing jobs keep theirs");
+        assert_eq!(sim.job(after).time_limit, 1000, "new cap clamps");
+        assert_eq!(sim.partition_specs()[0].max_time_limit, 1000);
+    }
+
+    #[test]
+    fn submissions_validate_against_configured_capacity_during_outage() {
+        let mut sim = quiet_sim(10);
+        sim.inject_node_failure(0, 6); // 4 cores online
+        // A 10-core submission is still legal — the partition is
+        // *configured* for 10 and the nodes will come back.
+        let id = sim.submit(JobSpec::new(1, "wide", 10, 50));
+        sim.run_until(100);
+        assert_eq!(sim.job(id).state, JobState::Pending, "waits for recovery");
+        sim.inject_node_recovery(0, 6);
+        while sim.step().is_some() {}
+        assert_eq!(sim.job(id).state, JobState::Completed);
+    }
+
+    #[test]
+    fn engines_agree_under_fault_interleavings() {
+        let run = |engine: SchedEngine| -> (Vec<SimEvent>, u64, u64, u64, u64) {
+            let mut sim =
+                Simulator::new_empty_with_engine(SystemConfig::testbed(8, 1), engine);
+            sim.set_fault_plan(
+                FaultPlan::new()
+                    .fail_at(30, 0, 4)
+                    .recover_at(90, 0, 4)
+                    .drain_window(0, 120, 150),
+            );
+            let retry = RetryPolicy {
+                max_retries: 2,
+                backoff: 10,
+            };
+            let a = sim.submit(JobSpec::new(1, "a", 6, 100).with_limit(100).with_retry(retry));
+            let _b = sim.submit(JobSpec::new(2, "b", 2, 40).with_retry(retry));
+            let _c = sim.submit(
+                JobSpec::new(3, "c", 4, 20)
+                    .with_dependency(Dependency::AfterOk(vec![a]))
+                    .with_retry(retry),
+            );
+            let mut evs = Vec::new();
+            while let Some(ev) = sim.step() {
+                evs.push(ev);
+            }
+            (
+                evs,
+                sim.metrics.requeues,
+                sim.metrics.failed,
+                sim.metrics.started,
+                sim.metrics.completed,
+            )
+        };
+        let inc = run(SchedEngine::Incremental);
+        assert!(inc.1 > 0, "the t=30 failure must requeue victims");
+        assert_eq!(inc, run(SchedEngine::Naive));
     }
 }

@@ -23,7 +23,7 @@
 //!   `String` per job.
 
 use crate::simulator::job::{
-    Dependency, JobId, JobName, JobSpec, JobState, NameId, PartitionId,
+    Dependency, JobId, JobName, JobSpec, JobState, NameId, PartitionId, RetryPolicy,
 };
 use crate::util::hash::FxHashMap;
 use crate::{Cores, Time};
@@ -133,6 +133,9 @@ pub struct ColdJob {
     pub dependency: Option<Dependency>,
     pub start_time: Option<Time>,
     pub end_time: Option<Time>,
+    /// Requeue policy on node loss and how many requeues have happened.
+    pub retry: RetryPolicy,
+    pub retries_used: u32,
 }
 
 /// A point-in-time copy of one job's externally visible fields — what
@@ -245,6 +248,8 @@ impl JobStore {
             dependency: spec.dependency,
             start_time: None,
             end_time: None,
+            retry: spec.retry,
+            retries_used: 0,
         };
         self.live += 1;
         if let Some(slot) = self.free.pop() {

@@ -18,9 +18,17 @@
 use crate::coordinator::driver::{
     run_single, DriverCtx, DriverOutcome, DriverStatus, StrategyDriver,
 };
-use crate::simulator::{JobId, JobSpec, PartitionId, SimEvent, Simulator};
+use crate::simulator::{JobId, JobSpec, PartitionId, RetryPolicy, SimEvent, Simulator};
 use crate::workflow::spec::{StageRecord, WorkflowRun, WorkflowSpec};
 use crate::{Cores, Time};
+
+/// Requeue policy for baseline-strategy allocations: like ASA's stage
+/// jobs, a few Slurm-style requeues with one-minute exponential backoff
+/// before the driver falls back to a fresh submission.
+const ALLOC_RETRY: RetryPolicy = RetryPolicy {
+    max_retries: 3,
+    backoff: 60,
+};
 
 /// Wall-clock limit users/WMSs request for a stage of expected duration
 /// `d`: generously padded (real users pad heavily to avoid timeouts — and
@@ -159,6 +167,29 @@ impl BigJobDriver {
             outcome: None,
         }
     }
+
+    /// Submit the monolithic allocation (first-fit routed); also used to
+    /// resubmit after the allocation fails with its retries exhausted.
+    fn submit_allocation(&mut self, sim: &mut Simulator) -> JobId {
+        let (part, peak) = first_fit_partition(
+            sim,
+            |node_cores| self.wf.peak_cores(self.scale, node_cores),
+            |node_cores| self.wf.total_exec(self.scale, node_cores) + 3600,
+        );
+        let node_cores = sim.partition_specs()[part.index()].cores_per_node;
+        let total = self.wf.total_exec(self.scale, node_cores);
+        // Big jobs are padded additively (users size the monolithic request
+        // to the known pipeline length plus slack), unlike per-stage jobs
+        // which get the WMS's coarse hour-granularity padding.
+        let job = sim.submit(
+            JobSpec::new(self.user, format!("{}-bigjob", self.wf.name), peak, total)
+                .with_limit(total + 3600)
+                .with_partition(part)
+                .with_retry(ALLOC_RETRY),
+        );
+        self.new_jobs.push(job);
+        job
+    }
 }
 
 impl StrategyDriver for BigJobDriver {
@@ -169,23 +200,8 @@ impl StrategyDriver for BigJobDriver {
     fn begin(&mut self, sim: &mut Simulator, _ctx: &mut DriverCtx) -> DriverStatus {
         // First-fit partition for the monolithic request (partition 0 at
         // the machine node size on unpartitioned systems).
-        let (part, peak) = first_fit_partition(
-            sim,
-            |node_cores| self.wf.peak_cores(self.scale, node_cores),
-            |node_cores| self.wf.total_exec(self.scale, node_cores) + 3600,
-        );
-        let node_cores = sim.partition_specs()[part.index()].cores_per_node;
-        let total = self.wf.total_exec(self.scale, node_cores);
         let submitted_at = sim.now();
-        // Big jobs are padded additively (users size the monolithic request
-        // to the known pipeline length plus slack), unlike per-stage jobs
-        // which get the WMS's coarse hour-granularity padding.
-        let job = sim.submit(
-            JobSpec::new(self.user, format!("{}-bigjob", self.wf.name), peak, total)
-                .with_limit(total + 3600)
-                .with_partition(part),
-        );
-        self.new_jobs.push(job);
+        let job = self.submit_allocation(sim);
         self.state = BigJobState::Queued { job, submitted_at };
         DriverStatus::Running
     }
@@ -256,6 +272,21 @@ impl StrategyDriver for BigJobDriver {
                     });
                     self.state = BigJobState::Finished;
                     DriverStatus::Done
+                }
+                SimEvent::Requeued { id, .. } if id == job => {
+                    // Node failure took the allocation; Slurm requeued the
+                    // job with its submit time intact. Await the restart
+                    // like the original queue wait.
+                    self.state = BigJobState::Queued { job, submitted_at };
+                    DriverStatus::Running
+                }
+                SimEvent::Failed { id, .. } if id == job => {
+                    // Retries exhausted: fall back to a fresh submission,
+                    // keeping the workflow's original submit time for the
+                    // perceived-wait accounting.
+                    let job = self.submit_allocation(sim);
+                    self.state = BigJobState::Queued { job, submitted_at };
+                    DriverStatus::Running
                 }
                 SimEvent::TimedOut { id, .. } | SimEvent::Cancelled { id, .. }
                     if id == job =>
@@ -340,7 +371,8 @@ impl PerStageDriver {
                 d,
             )
             .with_limit(stage_limit(d))
-            .with_partition(part),
+            .with_partition(part)
+            .with_retry(ALLOC_RETRY),
         );
         self.new_jobs.push(job);
         self.state = PerStageState::Queued { stage: i, job, sub };
@@ -424,6 +456,19 @@ impl StrategyDriver for PerStageDriver {
                         self.state = PerStageState::Finished;
                         DriverStatus::Done
                     }
+                }
+                SimEvent::Requeued { id, .. } if id == job => {
+                    // Requeued by a node failure: back to awaiting a start
+                    // (the original submit time `sub` is preserved).
+                    self.state = PerStageState::Queued { stage, job, sub };
+                    DriverStatus::Running
+                }
+                SimEvent::Failed { id, .. } if id == job => {
+                    // Retries exhausted: resubmit the stage from scratch;
+                    // `prev_end` is untouched, so the perceived wait
+                    // accounts the entire outage-induced stall.
+                    self.submit_stage(sim, stage);
+                    DriverStatus::Running
                 }
                 SimEvent::TimedOut { id, .. } | SimEvent::Cancelled { id, .. }
                     if id == job =>

@@ -1,11 +1,45 @@
 //! Failure injection: cancellations, broken dependencies, timeouts and
-//! allocation loss — the fault-tolerance paths of §3.1.
+//! allocation loss — the fault-tolerance paths of §3.1 — plus the
+//! driver-level node-loss recovery paths (DESIGN.md §11): every scheduling
+//! strategy must ride out a mid-stage node failure via requeue/backoff and
+//! finish the workflow.
 
+use asa::coordinator::asa::AsaConfig;
+use asa::coordinator::kernel::PureRustKernel;
+use asa::coordinator::policy::Policy;
 use asa::coordinator::pool::{ResourcePool, TaskState};
-use asa::simulator::{Dependency, JobId, JobSpec, JobState, SimEvent, Simulator, SystemConfig};
+use asa::coordinator::state::AsaStore;
+use asa::coordinator::strategy::{run_asa, AsaRunOpts};
+use asa::simulator::{
+    Dependency, FaultPlan, JobId, JobSpec, JobState, SimEvent, Simulator, SystemConfig,
+};
+use asa::util::rng::Rng;
+use asa::workflow::spec::WorkflowSpec;
+use asa::workflow::stage::Stage;
+use asa::workflow::wms;
 
 fn quiet(cores: u32) -> Simulator {
     Simulator::new_empty(SystemConfig::testbed(cores, 1))
+}
+
+/// Two 500 s parallel stages at scale 32 — long enough that a fault planned
+/// at t=50 is guaranteed to land inside a running stage.
+fn long_two_stage() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "faulty-wf",
+        stages: vec![
+            Stage::parallel("compute-a", 0.0, 16_000.0, 0.0, 4096),
+            Stage::parallel("compute-b", 0.0, 16_000.0, 0.0, 4096),
+        ],
+    }
+}
+
+/// A 64-core machine that loses 48 cores at t=50 (while stage 0 holds 32 of
+/// them — the stage is necessarily a victim) and recovers at t=120.
+fn faulted_sim() -> Simulator {
+    let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 8));
+    sim.set_fault_plan(FaultPlan::new().fail_at(50, 0, 48).recover_at(120, 0, 48));
+    sim
 }
 
 #[test]
@@ -97,6 +131,57 @@ fn pool_survives_allocation_loss_storm() {
         pool.complete(t);
     }
     assert!(pool.running_tasks() > 0, "orphans must migrate");
+}
+
+#[test]
+fn per_stage_driver_requeues_through_node_loss() {
+    let mut sim = faulted_sim();
+    let run = wms::run_per_stage(&mut sim, 1, &long_two_stage(), 32);
+    assert!(sim.metrics.requeues >= 1, "the running stage must be a victim");
+    assert_eq!(sim.metrics.failed, 0, "the retry budget absorbs one loss");
+    assert_eq!(run.stages.len(), 2, "both stages must finish");
+    // Two 500 s stages plus the outage stall: the lost head run is re-done.
+    assert!(run.makespan() > 2 * 500, "makespan {} must include the stall", run.makespan());
+}
+
+#[test]
+fn big_job_driver_requeues_through_node_loss() {
+    let mut sim = faulted_sim();
+    let run = wms::run_big_job(&mut sim, 1, &long_two_stage(), 32);
+    assert!(sim.metrics.requeues >= 1, "the monolithic allocation must be a victim");
+    assert_eq!(sim.metrics.failed, 0);
+    assert_eq!(run.stages.len(), 2);
+    assert!(run.makespan() > 2 * 500);
+}
+
+#[test]
+fn asa_driver_migrates_orphaned_tasks_after_node_loss() {
+    let mut sim = faulted_sim();
+    let mut store = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    let mut kernel = PureRustKernel;
+    let mut rng = Rng::new(7);
+    let (run, stats) = run_asa(
+        &mut sim,
+        1,
+        &long_two_stage(),
+        32,
+        &mut store,
+        &mut kernel,
+        &mut rng,
+        &AsaRunOpts::default(),
+    );
+    assert!(sim.metrics.requeues >= 1, "the running stage must be a victim");
+    assert_eq!(sim.metrics.failed, 0);
+    assert_eq!(run.stages.len(), 2);
+    // The stage's in-flight pool task goes Running → Orphaned on the node
+    // loss, then migrates onto the requeued stage's fresh allocation.
+    assert!(
+        stats.orphan_recoveries >= 1,
+        "expected an orphaned pool task to migrate, stats: {stats:?}"
+    );
 }
 
 #[test]

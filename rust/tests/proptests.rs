@@ -10,7 +10,8 @@ use asa::coordinator::pool::ResourcePool;
 use asa::experiments::campaign::Strategy;
 use asa::experiments::concurrent::{run_concurrent, ConcurrentOpts, TenantStrategy};
 use asa::simulator::{
-    Dependency, JobId, JobSpec, PartitionId, SchedEngine, SimEvent, Simulator, SystemConfig,
+    Dependency, FaultPlan, JobId, JobSpec, PartitionId, RetryPolicy, SchedEngine, SimEvent,
+    Simulator, SystemConfig,
 };
 use asa::util::par::par_map;
 use asa::util::propcheck::check;
@@ -152,7 +153,8 @@ enum OracleAction {
     /// Advance both simulators to an absolute time.
     RunUntil(Time),
     /// Submit now; the dependency (if any) references an earlier
-    /// submission by script index.
+    /// submission by script index. `retry` is a `(max_retries, backoff)`
+    /// requeue policy for node-loss faults (None ⇒ fail on first loss).
     Submit {
         user: u32,
         cores: u32,
@@ -160,6 +162,7 @@ enum OracleAction {
         limit: Time,
         dep: Option<ScriptDep>,
         part: u32,
+        retry: Option<(u32, Time)>,
     },
     /// Submit at a future absolute time (offset applied when executed).
     SubmitAt {
@@ -196,11 +199,18 @@ fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimE
                 limit,
                 dep,
                 part,
+                retry,
             } => {
                 let mut spec =
                     JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
                         .with_limit(*limit)
                         .with_partition(PartitionId(*part));
+                if let Some((max_retries, backoff)) = retry {
+                    spec = spec.with_retry(RetryPolicy {
+                        max_retries: *max_retries,
+                        backoff: *backoff,
+                    });
+                }
                 match dep {
                     Some(ScriptDep::AfterOk(parents)) => {
                         spec = spec.with_dependency(Dependency::AfterOk(
@@ -272,6 +282,11 @@ fn gen_oracle_script(
                 // Limits may undershoot the runtime: exercises timeouts
                 // and the resulting dependency-cancellation cascades.
                 let limit = (runtime + g.i64(-300, 400)).max(1);
+                let retry = if g.bool() {
+                    Some((g.u32(0, 3), g.i64(1, 300)))
+                } else {
+                    None
+                };
                 script.push(OracleAction::Submit {
                     user: g.u32(1, 6),
                     cores: g.u32(1, part_cap),
@@ -279,6 +294,7 @@ fn gen_oracle_script(
                     limit,
                     dep,
                     part: g.u32(1, n_parts) - 1,
+                    retry,
                 });
                 n_submitted += 1;
             }
@@ -304,7 +320,8 @@ fn gen_oracle_script(
     script
 }
 
-/// Observable stream + metrics fingerprint of one scripted run.
+/// Observable stream + metrics fingerprint of one scripted run (the last
+/// two counters are the fault-layer's `failed` and `requeues`).
 type OracleFingerprint = (
     Vec<SimEvent>,
     u64,
@@ -316,6 +333,8 @@ type OracleFingerprint = (
     u64,
     usize,
     u32,
+    u64,
+    u64,
 );
 
 fn run_oracle_script(
@@ -337,10 +356,23 @@ fn run_oracle_script_threads(
     threads: usize,
     script: &[OracleAction],
 ) -> OracleFingerprint {
+    run_faulty_oracle_script_threads(cfg, engine, threads, FaultPlan::new(), script)
+}
+
+/// [`run_oracle_script_threads`] with a capacity-event schedule installed
+/// before the script runs (an empty plan is bit-identical to no plan).
+fn run_faulty_oracle_script_threads(
+    cfg: SystemConfig,
+    engine: SchedEngine,
+    threads: usize,
+    plan: FaultPlan,
+    script: &[OracleAction],
+) -> OracleFingerprint {
     let mut sim = Simulator::new_empty_with_engine(cfg, engine);
     if threads > 0 {
         sim.set_pass_threads(threads);
     }
+    sim.set_fault_plan(plan);
     let events = apply_oracle_script(&mut sim, script);
     let m = &sim.metrics;
     (
@@ -354,6 +386,8 @@ fn run_oracle_script_threads(
         m.mean_utilization(sim.now().max(1)).to_bits(),
         sim.queue_depth(),
         sim.cluster().free_cores(),
+        m.failed,
+        m.requeues,
     )
 }
 
@@ -550,6 +584,7 @@ fn prop_saturated_partition_matches_naive_oracle() {
                 limit: hog_len + 10,
                 dep: None,
                 part: 0,
+                retry: None,
             },
             // Liveness probe: partition 1 must run this immediately even
             // though partition 0 is full.
@@ -560,6 +595,7 @@ fn prop_saturated_partition_matches_naive_oracle() {
                 limit: 300,
                 dep: None,
                 part: 1,
+                retry: None,
             },
         ];
         let mut t = 0;
@@ -573,6 +609,7 @@ fn prop_saturated_partition_matches_naive_oracle() {
                     limit: 400,
                     dep: None,
                     part: 0,
+                    retry: None,
                 }),
                 // Small jobs on the partition with headroom.
                 1 | 2 => script.push(OracleAction::Submit {
@@ -582,6 +619,7 @@ fn prop_saturated_partition_matches_naive_oracle() {
                     limit: 400,
                     dep: None,
                     part: 1,
+                    retry: None,
                 }),
                 _ => {
                     t += g.i64(50, 400);
@@ -611,6 +649,64 @@ fn prop_saturated_partition_matches_naive_oracle() {
             starts_at_zero >= 2,
             "expected hog + debug probe to start at t=0, saw {starts_at_zero}"
         );
+    });
+}
+
+/// Random capacity-event schedule: paired node-failure/recovery cycles and
+/// drain windows over the scripted horizon. Failures may take (almost) the
+/// whole partition; `inject_node_failure` clamps to keep one core alive.
+fn gen_fault_plan(
+    g: &mut asa::util::propcheck::Gen,
+    part_cap: u32,
+    n_parts: u32,
+) -> FaultPlan {
+    let mut plan = FaultPlan::new();
+    for _ in 0..g.usize(1, 5) {
+        let p = g.u32(1, n_parts) - 1;
+        if g.usize(0, 2) < 2 {
+            let at = g.i64(1, 5_000);
+            let cores = g.u32(1, part_cap);
+            plan = plan
+                .fail_at(at, p, cores)
+                .recover_at(at + g.i64(1, 1_500), p, cores);
+        } else {
+            let from = g.i64(1, 5_000);
+            plan = plan.drain_window(p, from, from + g.i64(1, 1_200));
+        }
+    }
+    plan
+}
+
+#[test]
+fn prop_faulty_cluster_matches_naive_oracle() {
+    // The fault-layer equivalence property: for any workload script
+    // (dependencies, --begin constraints, cancels, retry policies)
+    // interleaved with any capacity-event schedule (node failures and
+    // recoveries mid-run, overlapping drain windows), the incremental
+    // engine must emit the naive rebuild oracle's exact observable event
+    // stream — Requeued/Failed included — and job metrics; and on the
+    // incremental engine the pass thread count must stay unobservable.
+    check("faulty cluster == naive oracle", 40, |g| {
+        let nodes = g.u32(2, 8);
+        let cpn = g.u32(1, 6);
+        let n_parts = g.u32(1, 2);
+        let script = gen_oracle_script(g, nodes * cpn, n_parts);
+        let plan = gen_fault_plan(g, nodes * cpn, n_parts);
+        let run = |engine, threads| {
+            run_faulty_oracle_script_threads(
+                testbed_parts(nodes, cpn, n_parts),
+                engine,
+                threads,
+                plan.clone(),
+                &script,
+            )
+        };
+        let inc = run(SchedEngine::Incremental, 0);
+        let naive = run(SchedEngine::Naive, 0);
+        assert_eq!(inc, naive, "script: {script:?}\nplan: {plan:?}");
+        let serial = run(SchedEngine::Incremental, 1);
+        let par = run(SchedEngine::Incremental, 4);
+        assert_eq!(serial, par, "script: {script:?}\nplan: {plan:?}");
     });
 }
 
@@ -941,6 +1037,16 @@ fn prop_foreground_events_are_causal() {
                 }
                 SimEvent::Cancelled { .. } => {
                     assert!(*phase <= 2);
+                    *phase = 3;
+                }
+                SimEvent::Requeued { .. } => {
+                    // Node loss sends a *running* job back to the queue;
+                    // it will emit Started again.
+                    assert_eq!(*phase, 2);
+                    *phase = 1;
+                }
+                SimEvent::Failed { .. } => {
+                    assert_eq!(*phase, 2);
                     *phase = 3;
                 }
                 SimEvent::Wake { .. } => unreachable!("filtered above"),
