@@ -145,6 +145,20 @@ fn main() {
     b.case_throughput_of("sim: same-tick finish storm", finish_storm);
     b.case_throughput_of("sim: node-failure storm (24h hpc2n)", failure_storm);
 
+    // 1b'') Checkpoint path: serialize + restore a production-sized
+    // simulator (24 h of HPC2n churn, built once outside the timer).
+    // Items = snapshot bytes, so the rate reads as checkpoint bytes/sec
+    // for a full save+restore round trip.
+    let mut snap_sim = Simulator::new(SystemConfig::hpc2n(), 42);
+    snap_sim.run_until(24 * 3600);
+    b.case_throughput_of("sim: snapshot save+restore (24h hpc2n)", || {
+        let snap = snap_sim.save_snapshot();
+        let restored = Simulator::restore_snapshot(&snap, SystemConfig::hpc2n())
+            .expect("bench snapshot restores");
+        assert_eq!(restored.now(), snap_sim.now());
+        snap.len() as u64
+    });
+
     // 1b') Thread scaling: the same two-partition deep-queue scenario at
     // 1 thread vs N — `asa bench-summary` pairs the `[1 thread]` /
     // `[N threads]` labels into a speedup-vs-1-thread column.

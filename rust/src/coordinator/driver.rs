@@ -216,6 +216,21 @@ impl Orchestrator {
         tag
     }
 
+    /// Next wake tag this orchestrator would hand out. At an epoch
+    /// boundary (no active drivers, no in-flight jobs or wakes) this is
+    /// the *only* orchestrator state that leaks into the simulator's
+    /// future event stream, so fleet checkpoints persist just this.
+    pub fn next_wake_tag(&self) -> u64 {
+        self.next_tag
+    }
+
+    /// Restore the wake-tag counter from a checkpoint. Only safe at an
+    /// epoch boundary on a fresh orchestrator (tags already handed out
+    /// are not renumbered).
+    pub fn set_next_wake_tag(&mut self, tag: u64) {
+        self.next_tag = tag;
+    }
+
     /// Pump the event stream until every spawned driver is done.
     ///
     /// Panics if the simulator's event heap empties first — that means a

@@ -13,6 +13,8 @@
 //! * [`state`] — per-job-geometry estimator store, shared across runs and
 //!   persistable to JSON (paper §4.3: "Algorithm 1's state is kept across
 //!   different runs").
+//! * [`sink`] — the [`StorageSink`] persistence boundary those stores save
+//!   through (in-memory and atomic-rename file sinks; object stores later).
 //! * [`driver`] — the event-driven strategy layer: the [`StrategyDriver`]
 //!   state-machine trait and the [`Orchestrator`] multiplexing one
 //!   simulator's event stream across N concurrent drivers (multi-tenant
@@ -28,6 +30,7 @@ pub mod loss;
 pub mod asa;
 pub mod policy;
 pub mod kernel;
+pub mod sink;
 pub mod state;
 pub mod driver;
 pub mod strategy;
@@ -41,4 +44,5 @@ pub use driver::{
 };
 pub use kernel::{PureRustKernel, UpdateKernel};
 pub use policy::Policy;
+pub use sink::{FileSink, MemorySink, StorageSink};
 pub use state::{AsaStore, GeometryKey};

@@ -1,0 +1,170 @@
+//! Pluggable persistence for estimator stores.
+//!
+//! [`StorageSink`] is the narrow byte-level interface the coordinator uses
+//! to persist and recover [`crate::coordinator::AsaStore`] state between
+//! campaigns: flat string keys, whole-value puts and gets. Two
+//! implementations ship in-tree — [`MemorySink`] (tests, ephemeral runs)
+//! and [`FileSink`] (a directory of files with atomic rename-on-put) — and
+//! the trait is deliberately small so an S3/object-store or LRU-caching
+//! sink can slot in later without touching callers.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// A flat key → bytes store. Keys are plain names (no path separators);
+/// values are replaced wholesale on `put`.
+pub trait StorageSink {
+    /// Store `bytes` under `key`, replacing any previous value. The write
+    /// must be atomic: a reader (or a crash) never observes a torn value.
+    fn put(&mut self, key: &str, bytes: &[u8]) -> Result<(), String>;
+
+    /// Fetch the value under `key`, `None` if absent.
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, String>;
+
+    /// All keys currently present, sorted.
+    fn list(&self) -> Result<Vec<String>, String>;
+}
+
+fn validate_key(key: &str) -> Result<(), String> {
+    if key.is_empty()
+        || key.contains('/')
+        || key.contains('\\')
+        || key.contains("..")
+        || key.starts_with('.')
+    {
+        return Err(format!("invalid sink key {key:?}"));
+    }
+    Ok(())
+}
+
+/// In-memory sink: tests and single-process ephemeral campaigns.
+#[derive(Clone, Debug, Default)]
+pub struct MemorySink {
+    map: BTreeMap<String, Vec<u8>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        MemorySink::default()
+    }
+}
+
+impl StorageSink for MemorySink {
+    fn put(&mut self, key: &str, bytes: &[u8]) -> Result<(), String> {
+        validate_key(key)?;
+        self.map.insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, String> {
+        validate_key(key)?;
+        Ok(self.map.get(key).cloned())
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        Ok(self.map.keys().cloned().collect())
+    }
+}
+
+/// Directory-backed sink. Each key is one file under the root; `put`
+/// writes to a temporary sibling and renames it into place, so a reader
+/// (or a killed process) sees either the old or the new value, never a
+/// torn one.
+#[derive(Clone, Debug)]
+pub struct FileSink {
+    root: PathBuf,
+}
+
+impl FileSink {
+    /// Open (creating if needed) a sink rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<FileSink, String> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .map_err(|e| format!("create sink dir {}: {e}", root.display()))?;
+        Ok(FileSink { root })
+    }
+
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+}
+
+impl StorageSink for FileSink {
+    fn put(&mut self, key: &str, bytes: &[u8]) -> Result<(), String> {
+        validate_key(key)?;
+        let path = self.root.join(key);
+        let tmp = self.root.join(format!(".{key}.tmp-{}", std::process::id()));
+        std::fs::write(&tmp, bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            std::fs::remove_file(&tmp).ok();
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, String> {
+        validate_key(key)?;
+        let path = self.root.join(key);
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(format!("read {}: {e}", path.display())),
+        }
+    }
+
+    fn list(&self) -> Result<Vec<String>, String> {
+        let mut keys = Vec::new();
+        let entries = std::fs::read_dir(&self.root)
+            .map_err(|e| format!("list {}: {e}", self.root.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| e.to_string())?;
+            if let Some(name) = entry.file_name().to_str() {
+                // Skip in-flight temp files and other hidden entries.
+                if !name.starts_with('.') {
+                    keys.push(name.to_string());
+                }
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(sink: &mut dyn StorageSink) {
+        assert_eq!(sink.get("missing").unwrap(), None);
+        sink.put("store.json", b"v1").unwrap();
+        sink.put("other.json", b"x").unwrap();
+        sink.put("store.json", b"v2").unwrap();
+        assert_eq!(sink.get("store.json").unwrap().unwrap(), b"v2");
+        assert_eq!(
+            sink.list().unwrap(),
+            vec!["other.json".to_string(), "store.json".to_string()]
+        );
+        for bad in ["", "a/b", "a\\b", "..", "../x", ".hidden"] {
+            assert!(sink.put(bad, b"x").is_err(), "key {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn memory_sink_round_trips() {
+        exercise(&mut MemorySink::new());
+    }
+
+    #[test]
+    fn file_sink_round_trips_atomically() {
+        let root = std::env::temp_dir().join(format!("asa-sink-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        {
+            let mut sink = FileSink::open(&root).unwrap();
+            exercise(&mut sink);
+        }
+        // A second handle over the same directory sees the same state.
+        let sink = FileSink::open(&root).unwrap();
+        assert_eq!(sink.get("store.json").unwrap().unwrap(), b"v2");
+        assert_eq!(sink.list().unwrap().len(), 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

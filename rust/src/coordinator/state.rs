@@ -68,7 +68,10 @@ impl GeometryKey {
     }
 }
 
-/// All live estimators for a campaign.
+/// All live estimators for a campaign. `Clone` is cheap enough for
+/// campaign-scale stores (tens of geometries) and is what lets a warm
+/// session start from a shared trained store without consuming it.
+#[derive(Clone)]
 pub struct AsaStore {
     cfg: AsaConfig,
     map: BTreeMap<GeometryKey, AsaEstimator>,
@@ -157,8 +160,47 @@ impl AsaStore {
         (store, errors)
     }
 
+    /// Merge another store's estimators into this one. Keys present on
+    /// both sides keep `other`'s estimator when it has seen more
+    /// observations (the better-trained bank wins); disjoint keys union.
+    pub fn merge_from(&mut self, other: &AsaStore) {
+        for (key, est) in &other.map {
+            match self.map.get(key) {
+                Some(mine) if mine.observations() >= est.observations() => {}
+                _ => {
+                    self.map.insert(key.clone(), est.clone());
+                }
+            }
+        }
+    }
+
     pub fn save_file(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().pretty())
+    }
+
+    /// Persist through a [`StorageSink`] (atomic for the file sink).
+    pub fn save_to_sink(
+        &self,
+        sink: &mut dyn crate::coordinator::sink::StorageSink,
+        key: &str,
+    ) -> Result<(), String> {
+        sink.put(key, self.to_json().pretty().as_bytes())
+    }
+
+    /// Load from a [`StorageSink`]; `Ok(None)` when the key is absent.
+    /// Incompatible geometries are skipped and reported in the error list,
+    /// exactly like [`AsaStore::restore`].
+    pub fn load_from_sink(
+        cfg: AsaConfig,
+        sink: &dyn crate::coordinator::sink::StorageSink,
+        key: &str,
+    ) -> Result<Option<(Self, Vec<String>)>, String> {
+        let Some(bytes) = sink.get(key)? else {
+            return Ok(None);
+        };
+        let text = String::from_utf8(bytes).map_err(|e| format!("{key}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{key}: {e}"))?;
+        Ok(Some(Self::restore(cfg, &j)))
     }
 
     pub fn load_file(
@@ -246,6 +288,53 @@ mod tests {
         assert_eq!(
             restored.get(&key).unwrap().observations(),
             store.get(&key).unwrap().observations()
+        );
+    }
+
+    #[test]
+    fn sink_round_trip_and_merge() {
+        use crate::coordinator::sink::{MemorySink, StorageSink};
+        let mut store = AsaStore::new(AsaConfig::default());
+        let mut rng = Rng::new(3);
+        let mut kern = PureRustKernel;
+        let key = GeometryKey::new("hpc2n", 28);
+        {
+            let e = store.estimator(&key);
+            for _ in 0..5 {
+                let (a, _) = e.sample_wait(&mut rng);
+                e.observe(a, 300, &mut kern, &mut rng);
+            }
+        }
+        let mut sink = MemorySink::new();
+        assert!(
+            AsaStore::load_from_sink(AsaConfig::default(), &sink, "s.json")
+                .unwrap()
+                .is_none(),
+            "absent key loads as None"
+        );
+        store.save_to_sink(&mut sink, "s.json").unwrap();
+        assert_eq!(sink.list().unwrap(), vec!["s.json".to_string()]);
+        let (loaded, errs) =
+            AsaStore::load_from_sink(AsaConfig::default(), &sink, "s.json")
+                .unwrap()
+                .unwrap();
+        assert!(errs.is_empty(), "{errs:?}");
+        assert_eq!(
+            loaded.get(&key).unwrap().observations(),
+            store.get(&key).unwrap().observations()
+        );
+
+        // merge_from: better-trained side wins per key, disjoint keys union.
+        let mut fresh = AsaStore::new(AsaConfig::default());
+        fresh.estimator(&key); // 0 observations
+        let other_key = GeometryKey::new("hpc2n", 56);
+        fresh.estimator(&other_key);
+        fresh.merge_from(&loaded);
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(
+            fresh.get(&key).unwrap().observations(),
+            store.get(&key).unwrap().observations(),
+            "trained estimator replaces the untrained one"
         );
     }
 

@@ -170,29 +170,37 @@ pub fn run_session(
 /// One (system, scale) campaign cell: all strategies over one set of
 /// identically-seeded sessions, with ASA's store persisting across the
 /// scaling's submissions. Units are independent of each other, which is
-/// what lets [`run_campaign`] fan them out over [`par_map`].
+/// what lets [`run_campaign`] fan them out over [`par_map`]. Returns the
+/// unit's trained store alongside its cells so campaigns can persist it.
 fn campaign_unit(
     sys_name: &str,
     scale: Cores,
     workflows: &[&str],
     include_naive: bool,
     seed: u64,
-) -> Vec<Cell> {
+    warm: Option<&AsaStore>,
+) -> (Vec<Cell>, AsaStore) {
     let system = SystemConfig::by_name(sys_name).expect("unknown system");
     let cell_seed = seed ^ (scale as u64) << 8 ^ sys_name.len() as u64;
     let mut cells = Vec::new();
-    // ASA's store persists across the session's submissions.
-    let mut store = AsaStore::new(AsaConfig {
-        policy: Policy::Tuned { rep: 50 },
-        ..AsaConfig::default()
-    });
+    // ASA's store persists across the session's submissions. A warm-start
+    // store arrives pre-trained from an earlier campaign (loaded through a
+    // [`crate::coordinator::StorageSink`]) and replaces the unrecorded
+    // warm-up session below: no cold-prior re-exploration.
+    let mut store = match warm {
+        Some(w) => w.clone(),
+        None => AsaStore::new(AsaConfig {
+            policy: Policy::Tuned { rep: 50 },
+            ..AsaConfig::default()
+        }),
+    };
     let mut kernel = PureRustKernel;
     let mut strategies = vec![Strategy::BigJob, Strategy::PerStage, Strategy::Asa];
     if include_naive {
         strategies.push(Strategy::AsaNaive);
     }
     for strategy in strategies {
-        if matches!(strategy, Strategy::Asa | Strategy::AsaNaive) {
+        if warm.is_none() && matches!(strategy, Strategy::Asa | Strategy::AsaNaive) {
             // Warm-up session (unrecorded): the paper keeps Algorithm 1's
             // state across runs and scales (§4.3, §5), so ASA never enters
             // an evaluated session cold.
@@ -210,7 +218,7 @@ fn campaign_unit(
             &system, scale, strategy, workflows, cell_seed, &mut store, &mut kernel,
         ));
     }
-    cells
+    (cells, store)
 }
 
 /// The full campaign: every scaling × the three strategies (plus naïve when
@@ -224,12 +232,35 @@ pub fn run_campaign(
     include_naive: bool,
     seed: u64,
 ) -> Vec<Cell> {
-    par_map(scalings.to_vec(), |(sys_name, scale)| {
-        campaign_unit(sys_name, scale, workflows, include_naive, seed)
-    })
-    .into_iter()
-    .flatten()
-    .collect()
+    run_campaign_warm(workflows, scalings, include_naive, seed, None).0
+}
+
+/// [`run_campaign`] with estimator-store persistence: `warm` seeds every
+/// unit's ASA store with a pre-trained bank (skipping the unrecorded
+/// warm-up session — that is the whole point of warm-starting), and the
+/// returned store merges every unit's trained bank (better-trained
+/// geometry wins, see [`AsaStore::merge_from`]) for `campaign
+/// --save-store`.
+pub fn run_campaign_warm(
+    workflows: &[&str],
+    scalings: &[(&str, Cores)],
+    include_naive: bool,
+    seed: u64,
+    warm: Option<&AsaStore>,
+) -> (Vec<Cell>, AsaStore) {
+    let units = par_map(scalings.to_vec(), |(sys_name, scale)| {
+        campaign_unit(sys_name, scale, workflows, include_naive, seed, warm)
+    });
+    let mut cells = Vec::new();
+    let mut trained = AsaStore::new(AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    });
+    for (unit_cells, unit_store) in units {
+        cells.extend(unit_cells);
+        trained.merge_from(&unit_store);
+    }
+    (cells, trained)
 }
 
 /// Table 1: TWT / makespan / core-hours per workflow × scaling × strategy,
@@ -428,7 +459,7 @@ mod tests {
         // All strategies over a two-partition machine: the full session
         // path (warm-up, Big-Job/Per-Stage first-fit, ASA partition
         // routing) must complete and produce one cell per strategy.
-        let cells = campaign_unit("testbed2", 56, &["blast"], false, 9);
+        let (cells, _) = campaign_unit("testbed2", 56, &["blast"], false, 9, None);
         assert_eq!(cells.len(), 3, "big-job, per-stage, asa");
         for c in &cells {
             assert_eq!(c.run.system, "testbed2");
@@ -468,7 +499,7 @@ mod tests {
         let par = run_campaign(&["blast"], &scalings, false, 11);
         let serial: Vec<Cell> = scalings
             .iter()
-            .flat_map(|&(sys, scale)| campaign_unit(sys, scale, &["blast"], false, 11))
+            .flat_map(|&(sys, scale)| campaign_unit(sys, scale, &["blast"], false, 11, None).0)
             .collect();
         assert_eq!(fingerprint(&par), fingerprint(&serial));
         assert_eq!(par.len(), 2 * 3); // 2 scalings × 3 strategies × 1 workflow
@@ -496,5 +527,98 @@ mod tests {
         assert!(rendered.contains("per-stage"));
         let json = cells_to_json(&cells);
         assert_eq!(json.as_arr().unwrap().len(), 3);
+    }
+
+    /// Tentpole acceptance: a store trained on a capacity-constrained
+    /// machine (the `cold-start-capacity` regime: testbed(8,8) collapsing
+    /// 64 → 16 cores) lets ASA skip cold-prior exploration. A cold
+    /// uniform prior over the paper's action grid mostly *underestimates*
+    /// the long post-loss waits, and an underestimate stalls the
+    /// proactive pipeline (`perceived_wait > 0`); a trained store
+    /// overestimates, which costs nothing — early grants are held on the
+    /// `AfterOk` dependency. So the warm arm's mean proactive-stage wait
+    /// must drop.
+    #[test]
+    fn warm_start_beats_cold_priors_on_constrained_capacity() {
+        use crate::simulator::{FaultPlan, JobSpec};
+
+        // The cold-start-capacity regime, fully scripted (no background
+        // trace, so both arms see the identical machine): the system
+        // loses 48 of its 64 cores immediately, then a saturating stream
+        // of 16-core jobs keeps the survivor congested. Every workflow
+        // stage queues behind the running background job's residual —
+        // waits of hundreds of seconds, squarely inside the grid's dense
+        // region.
+        let congested = || -> Simulator {
+            let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 8));
+            sim.set_fault_plan(FaultPlan::new().fail_at(10, 0, 48));
+            for i in 0..30i64 {
+                sim.submit_at(i * 1_200, JobSpec::new(50, format!("bg-{i}"), 16, 1_100));
+            }
+            sim
+        };
+        let wf = apps::by_name("montage").unwrap();
+        let opts = AsaRunOpts::default();
+        // Policy::Default draws an independent action per estimate, so
+        // the cold arm genuinely explores (Tuned{rep} would reuse one
+        // draw across a whole minibatch round).
+        let run_arm = |store: &mut AsaStore, rng: &mut Rng| -> Vec<WorkflowRun> {
+            let mut sim = congested();
+            let mut kernel = PureRustKernel;
+            (0..3)
+                .map(|_| run_asa(&mut sim, 7, &wf, 16, store, &mut kernel, rng, &opts).0)
+                .collect()
+        };
+
+        // Train a store on the same regime, different RNG stream.
+        let mut trained = AsaStore::new(AsaConfig::default());
+        run_arm(&mut trained, &mut Rng::new(123));
+
+        let mut cold = AsaStore::new(AsaConfig::default());
+        let cold_runs = run_arm(&mut cold, &mut Rng::new(77));
+        let mut warm = trained.clone();
+        let warm_runs = run_arm(&mut warm, &mut Rng::new(77));
+
+        // Mean perceived wait over proactively scheduled stages: stage 0
+        // is a plain submission, so its wait is store-independent.
+        let proactive_mean = |runs: &[WorkflowRun]| -> f64 {
+            let waits: Vec<Time> = runs
+                .iter()
+                .flat_map(|r| r.stages[1..].iter().map(|s| s.perceived_wait))
+                .collect();
+            waits.iter().sum::<Time>() as f64 / waits.len() as f64
+        };
+        let (c, w) = (proactive_mean(&cold_runs), proactive_mean(&warm_runs));
+        assert!(
+            w < c,
+            "warm-started ASA must out-predict cold priors (warm {w:.0}s vs cold {c:.0}s)"
+        );
+        // The first proactively scheduled stage is where warm-starting
+        // pays off most directly: the cold prior has seen nothing yet.
+        let first = |runs: &[WorkflowRun]| -> f64 {
+            runs.iter().map(|r| r.stages[1].perceived_wait as f64).sum::<f64>()
+                / runs.len() as f64
+        };
+        assert!(first(&warm_runs) <= first(&cold_runs));
+    }
+
+    #[test]
+    fn warm_campaign_returns_trained_store_and_skips_warmup() {
+        // A cold campaign returns a trained store; re-running warm from
+        // it must produce the same cell count and keep (or grow) every
+        // geometry's observation count — warm units clone the bank and
+        // keep learning, they never reset it.
+        let scalings: [(&str, Cores); 1] = [("testbed", 28)];
+        let total_obs = |s: &AsaStore| -> u64 {
+            s.keys().filter_map(|k| s.get(k)).map(|e| e.observations()).sum()
+        };
+        let (cold_cells, trained) = run_campaign_warm(&["blast"], &scalings, false, 11, None);
+        assert_eq!(cold_cells.len(), 3);
+        let trained_obs = total_obs(&trained);
+        assert!(trained_obs > 0, "the cold campaign must train the store");
+        let (warm_cells, warm_store) =
+            run_campaign_warm(&["blast"], &scalings, false, 11, Some(&trained));
+        assert_eq!(warm_cells.len(), 3);
+        assert!(total_obs(&warm_store) >= trained_obs);
     }
 }

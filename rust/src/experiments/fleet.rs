@@ -20,6 +20,19 @@
 //! serially. Routing therefore depends only on prior-epoch results, never
 //! on thread scheduling: identical seeds produce identical cross-center
 //! routing and totals at any worker count.
+//!
+//! ## Crash recovery
+//!
+//! [`run_fleet_checkpointed`] persists the whole federation after every
+//! epoch — per-center simulator snapshots ([`Simulator::save_snapshot`]),
+//! orchestrator wake-tag cursors, estimator stores, RNG streams, and the
+//! accumulated per-workflow cells — to a single checkpoint file, written
+//! atomically (temp sibling + rename). A later invocation with the same
+//! options resumes from the last completed epoch and produces a report
+//! bit-identical to the uninterrupted run; mismatched options are refused
+//! via an embedded fingerprint. Epoch boundaries are the only safe points:
+//! every spawned driver has completed and its outcome has been folded into
+//! the router, so no in-flight driver state exists to serialize.
 
 use crate::coordinator::asa::AsaConfig;
 use crate::coordinator::contextual::{select_partition, PartitionOption};
@@ -29,14 +42,16 @@ use crate::coordinator::policy::Policy;
 use crate::coordinator::state::{AsaStore, GeometryKey};
 use crate::experiments::campaign::Strategy;
 use crate::experiments::concurrent::WF_ROTATION;
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::simulator::{FaultPlan, Simulator, SystemConfig};
 use crate::util::json::Json;
 use crate::util::par::{default_threads, par_map_threads};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::workflow::apps;
-use crate::workflow::spec::WorkflowRun;
+use crate::workflow::spec::{StageRecord, WorkflowRun};
 use crate::{Cores, Time};
+use std::path::Path;
 
 /// Scenario knobs for one fleet session.
 #[derive(Clone, Debug)]
@@ -172,18 +187,42 @@ struct PlanItem {
     wf: &'static str,
 }
 
-/// Run the federation: route `opts.workflows` workflows across
-/// `opts.centers` centers by learned expected wait, epoch by epoch.
-pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
-    assert!(opts.centers >= 1 && opts.workflows >= 1 && opts.epochs >= 1);
-    assert!(!opts.systems.is_empty(), "need at least one system preset");
-    let threads = if opts.threads == 0 {
-        default_threads()
-    } else {
-        opts.threads
-    };
+/// Magic prefix of every fleet checkpoint file.
+pub const FLEET_CKPT_MAGIC: &[u8; 8] = b"ASAFLTCK";
+/// Current fleet-checkpoint format version.
+pub const FLEET_CKPT_VERSION: u32 = 1;
 
-    let mut centers: Vec<CenterState> = (0..opts.centers)
+/// Estimator configuration every fleet store uses (centers and router).
+fn fleet_asa_cfg() -> AsaConfig {
+    AsaConfig {
+        policy: Policy::Tuned { rep: 50 },
+        ..AsaConfig::default()
+    }
+}
+
+/// Canonical description of everything that determines a fleet run's
+/// results. `threads` is zeroed out: results are bit-identical at any
+/// worker count, so a resume may legitimately use a different one.
+fn fleet_fingerprint(opts: &FleetOpts) -> String {
+    let canon = FleetOpts {
+        threads: 0,
+        ..opts.clone()
+    };
+    format!("{canon:?}")
+}
+
+/// State recovered from a checkpoint file: everything `run_fleet` had in
+/// hand at the epoch boundary the checkpoint was written on.
+struct FleetResume {
+    chunks_done: usize,
+    cells: Vec<FleetCell>,
+    centers: Vec<CenterState>,
+    router: AsaStore,
+    router_rng: Rng,
+}
+
+fn build_centers(opts: &FleetOpts) -> Vec<CenterState> {
+    (0..opts.centers)
         .map(|i| {
             let preset = &opts.systems[i as usize % opts.systems.len()];
             let system = SystemConfig::by_name(preset)
@@ -209,26 +248,300 @@ pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
                 total_cores,
                 sim,
                 orch,
-                store: AsaStore::new(AsaConfig {
-                    policy: Policy::Tuned { rep: 50 },
-                    ..AsaConfig::default()
-                }),
+                store: AsaStore::new(fleet_asa_cfg()),
                 kernel: PureRustKernel,
                 rng: Rng::new(seed ^ 0xba5e),
             }
         })
-        .collect();
+        .collect()
+}
 
-    // Fleet-level router state: one estimator per center, plus its own
-    // RNG/kernel so routing draws never perturb any center's stream.
-    let mut router = AsaStore::new(AsaConfig {
-        policy: Policy::Tuned { rep: 50 },
-        ..AsaConfig::default()
-    });
+fn write_cell(w: &mut SnapWriter, cell: &FleetCell) {
+    w.u32(cell.index);
+    w.usz(cell.center);
+    w.str(&cell.center_tag);
+    w.u32(cell.user);
+    w.i64(cell.arrival);
+    w.i64(cell.observed_wait);
+    let run = &cell.run;
+    w.str(run.workflow);
+    w.str(&run.strategy);
+    w.str(run.system);
+    w.u32(run.scale);
+    w.i64(run.submitted_at);
+    w.i64(run.finished_at);
+    w.usz(run.stages.len());
+    for s in &run.stages {
+        w.usz(s.stage);
+        w.str(s.name);
+        w.u32(s.cores);
+        w.i64(s.submitted);
+        w.i64(s.started);
+        w.i64(s.finished);
+        w.i64(s.perceived_wait);
+        w.i64(s.charged_core_secs);
+    }
+}
+
+fn read_cell(r: &mut SnapReader) -> Result<FleetCell, String> {
+    let index = r.u32()?;
+    let center = r.usz()?;
+    let center_tag = r.str()?;
+    let user = r.u32()?;
+    let arrival = r.i64()?;
+    let observed_wait = r.i64()?;
+    let wf_name = r.str()?;
+    // Workflow/system/stage names are `&'static str`s pointing into the
+    // preset catalogs; recover them by name lookup instead of leaking.
+    let spec = apps::by_name(&wf_name)
+        .ok_or_else(|| format!("checkpoint names unknown workflow {wf_name:?}"))?;
+    let strategy = r.str()?;
+    let system_name = r.str()?;
+    let system = SystemConfig::by_name(&system_name)
+        .ok_or_else(|| format!("checkpoint names unknown system {system_name:?}"))?
+        .name;
+    let scale = r.u32()?;
+    let submitted_at = r.i64()?;
+    let finished_at = r.i64()?;
+    let nstages = r.usz()?;
+    let mut stages = Vec::with_capacity(nstages);
+    for _ in 0..nstages {
+        let stage = r.usz()?;
+        let stage_name = r.str()?;
+        let name = spec
+            .stages
+            .iter()
+            .map(|s| s.name)
+            .find(|n| *n == stage_name)
+            .ok_or_else(|| format!("workflow {wf_name:?} has no stage named {stage_name:?}"))?;
+        stages.push(StageRecord {
+            stage,
+            name,
+            cores: r.u32()?,
+            submitted: r.i64()?,
+            started: r.i64()?,
+            finished: r.i64()?,
+            perceived_wait: r.i64()?,
+            charged_core_secs: r.i64()?,
+        });
+    }
+    Ok(FleetCell {
+        index,
+        center,
+        center_tag,
+        user,
+        arrival,
+        run: WorkflowRun {
+            workflow: spec.name,
+            strategy,
+            system,
+            scale,
+            submitted_at,
+            finished_at,
+            stages,
+        },
+        observed_wait,
+    })
+}
+
+/// Serialize the federation at an epoch boundary and write it atomically
+/// (temp sibling + rename): a killed process leaves either the previous
+/// checkpoint or this one, never a torn file.
+fn save_fleet_checkpoint(
+    path: &Path,
+    fingerprint: &str,
+    chunks_done: usize,
+    cells: &[FleetCell],
+    centers: &[CenterState],
+    router: &AsaStore,
+    router_rng: &Rng,
+) -> Result<(), String> {
+    let mut w = SnapWriter::new();
+    w.raw(FLEET_CKPT_MAGIC);
+    w.u32(FLEET_CKPT_VERSION);
+    w.str(fingerprint);
+    w.usz(chunks_done);
+    w.usz(cells.len());
+    for cell in cells {
+        write_cell(&mut w, cell);
+    }
+    w.usz(centers.len());
+    for c in centers {
+        w.str(&c.tag);
+        w.str(c.system);
+        w.u32(c.total_cores);
+        w.blob(&c.sim.save_snapshot());
+        w.str(&c.store.to_json().to_string());
+        let (state, inc) = c.rng.snap_state();
+        w.u128(state);
+        w.u128(inc);
+        w.u64(c.orch.next_wake_tag());
+    }
+    w.str(&router.to_json().to_string());
+    let (state, inc) = router_rng.snap_state();
+    w.u128(state);
+    w.u128(inc);
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("fleet-ck");
+    let tmp = path.with_file_name(format!(".{file_name}.tmp-{}", std::process::id()));
+    std::fs::write(&tmp, w.into_bytes()).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        format!("rename {} -> {}: {e}", tmp.display(), path.display())
+    })
+}
+
+fn load_fleet_checkpoint(
+    bytes: &[u8],
+    opts: &FleetOpts,
+    fingerprint: &str,
+) -> Result<FleetResume, String> {
+    let mut r = SnapReader::new(bytes);
+    if r.raw(8)? != FLEET_CKPT_MAGIC {
+        return Err("not a fleet checkpoint (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != FLEET_CKPT_VERSION {
+        return Err(format!(
+            "fleet checkpoint version {version} unsupported (this build writes {FLEET_CKPT_VERSION})"
+        ));
+    }
+    let saved = r.str()?;
+    if saved != fingerprint {
+        return Err(format!(
+            "checkpoint was written by a different run:\n  saved:   {saved}\n  current: {fingerprint}"
+        ));
+    }
+    let chunks_done = r.usz()?;
+    let ncells = r.usz()?;
+    let mut cells = Vec::with_capacity(ncells);
+    for _ in 0..ncells {
+        cells.push(read_cell(&mut r)?);
+    }
+    let ncenters = r.usz()?;
+    if ncenters != opts.centers as usize {
+        return Err(format!(
+            "checkpoint has {ncenters} centers, options say {}",
+            opts.centers
+        ));
+    }
+    let mut centers = Vec::with_capacity(ncenters);
+    for _ in 0..ncenters {
+        let tag = r.str()?;
+        let system_name = r.str()?;
+        let cfg = SystemConfig::by_name(&system_name)
+            .ok_or_else(|| format!("checkpoint names unknown system {system_name:?}"))?;
+        let system = cfg.name;
+        let total_cores = r.u32()?;
+        let mut sim = Simulator::restore_snapshot(r.blob()?, cfg)?;
+        if opts.threads > 0 {
+            sim.set_pass_threads(opts.threads);
+        }
+        let store_json = Json::parse(&r.str()?)?;
+        let (store, errors) = AsaStore::restore(fleet_asa_cfg(), &store_json);
+        if !errors.is_empty() {
+            return Err(format!("center {tag} store: {}", errors.join("; ")));
+        }
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        let next_tag = r.u64()?;
+        let mut orch = Orchestrator::new();
+        orch.set_retire_owned(opts.retire);
+        orch.set_next_wake_tag(next_tag);
+        centers.push(CenterState {
+            tag,
+            system,
+            total_cores,
+            sim,
+            orch,
+            store,
+            kernel: PureRustKernel,
+            rng: Rng::from_snap_state(state, inc),
+        });
+    }
+    let router_json = Json::parse(&r.str()?)?;
+    let (router, errors) = AsaStore::restore(fleet_asa_cfg(), &router_json);
+    if !errors.is_empty() {
+        return Err(format!("router store: {}", errors.join("; ")));
+    }
+    let state = r.u128()?;
+    let inc = r.u128()?;
+    r.expect_end()?;
+    Ok(FleetResume {
+        chunks_done,
+        cells,
+        centers,
+        router,
+        router_rng: Rng::from_snap_state(state, inc),
+    })
+}
+
+/// Run the federation: route `opts.workflows` workflows across
+/// `opts.centers` centers by learned expected wait, epoch by epoch.
+pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
+    run_fleet_checkpointed(opts, None)
+}
+
+/// [`run_fleet`] with crash recovery: when `checkpoint` names a file, the
+/// run resumes from it if it exists (refusing checkpoints written under
+/// different options) and rewrites it after every completed epoch.
+pub fn run_fleet_checkpointed(opts: &FleetOpts, checkpoint: Option<&Path>) -> FleetReport {
+    run_fleet_chunks(opts, checkpoint, usize::MAX)
+        .expect("an unbounded epoch budget always finishes")
+}
+
+/// Checkpointable core with an epoch budget: runs at most `max_chunks`
+/// epochs *this invocation* (already-checkpointed epochs don't count),
+/// returning `None` when it stops early with work remaining. The budget
+/// exists so tests and the crash-recovery CI job can simulate a process
+/// dying between epochs without arranging a real SIGKILL race.
+pub fn run_fleet_chunks(
+    opts: &FleetOpts,
+    checkpoint: Option<&Path>,
+    max_chunks: usize,
+) -> Option<FleetReport> {
+    assert!(opts.centers >= 1 && opts.workflows >= 1 && opts.epochs >= 1);
+    assert!(!opts.systems.is_empty(), "need at least one system preset");
+    let threads = if opts.threads == 0 {
+        default_threads()
+    } else {
+        opts.threads
+    };
+
+    // Resume from an existing checkpoint, or start the federation fresh.
+    let fingerprint = fleet_fingerprint(opts);
+    let mut resume: Option<FleetResume> = None;
+    if let Some(path) = checkpoint {
+        match std::fs::read(path) {
+            Ok(bytes) => {
+                let state = load_fleet_checkpoint(&bytes, opts, &fingerprint)
+                    .unwrap_or_else(|e| panic!("fleet checkpoint {}: {e}", path.display()));
+                resume = Some(state);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => panic!("read fleet checkpoint {}: {e}", path.display()),
+        }
+    }
+    let (mut centers, mut cells, mut router, mut router_rng, chunks_done) = match resume {
+        Some(s) => (s.centers, s.cells, s.router, s.router_rng, s.chunks_done),
+        None => (
+            build_centers(opts),
+            Vec::new(),
+            // Fleet-level router state: one estimator per center, plus its
+            // own RNG/kernel so routing draws never perturb any center's
+            // stream.
+            AsaStore::new(fleet_asa_cfg()),
+            Rng::new(opts.seed ^ 0xf1ee7),
+            0,
+        ),
+    };
     let mut router_kernel = PureRustKernel;
-    let mut router_rng = Rng::new(opts.seed ^ 0xf1ee7);
 
-    // Arrival plan (workflow rotation, Poisson gaps, horizon spread).
+    // Arrival plan (workflow rotation, Poisson gaps, horizon spread) —
+    // regenerated deterministically from the options on every invocation,
+    // so it never needs to live in the checkpoint.
     let mut arrivals = Rng::new(opts.seed ^ 0xa771);
     let gap_mean = if opts.horizon > 0 {
         (opts.horizon / opts.workflows.max(1) as Time).max(1)
@@ -248,8 +561,16 @@ pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
     }
 
     let chunk_len = (plan.len() as u32).div_ceil(opts.epochs).max(1) as usize;
-    let mut cells: Vec<FleetCell> = Vec::with_capacity(plan.len());
-    for chunk in plan.chunks(chunk_len) {
+    cells.reserve(plan.len().saturating_sub(cells.len()));
+    let mut ran = 0usize;
+    for (ci, chunk) in plan.chunks(chunk_len).enumerate() {
+        if ci < chunks_done {
+            continue; // already folded into the checkpointed state
+        }
+        if ran == max_chunks {
+            return None; // epoch budget exhausted — simulated crash
+        }
+        ran += 1;
         // Route this epoch's arrivals (serial; pure function of the router
         // state the previous epochs produced).
         let mut spawned: Vec<(usize, usize, DriverId)> = Vec::with_capacity(chunk.len());
@@ -317,6 +638,10 @@ pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
                 observed_wait,
             });
         }
+        if let Some(path) = checkpoint {
+            save_fleet_checkpoint(path, &fingerprint, ci + 1, &cells, &centers, &router, &router_rng)
+                .unwrap_or_else(|e| panic!("save fleet checkpoint: {e}"));
+        }
     }
 
     let summaries: Vec<FleetCenterSummary> = centers
@@ -346,14 +671,14 @@ pub fn run_fleet(opts: &FleetOpts) -> FleetReport {
             }
         })
         .collect();
-    FleetReport {
+    Some(FleetReport {
         live_jobs_peak: summaries.iter().map(|s| s.live_jobs_peak).max().unwrap_or(0),
         total_registered: summaries.iter().map(|s| s.total_registered).sum(),
         sim_events: summaries.iter().map(|s| s.sim_events).sum(),
         memory_bytes: summaries.iter().map(|s| s.memory_bytes).sum(),
         cells,
         centers: summaries,
-    }
+    })
 }
 
 /// Per-center routing and load summary.
@@ -579,6 +904,68 @@ mod tests {
             r.cells.iter().map(|c| (c.index, c.center, c.run.makespan())).collect()
         };
         assert_eq!(fp(&a), fp(&b), "faulted fleet replays deterministically");
+    }
+
+    #[test]
+    fn fleet_checkpoint_crash_resume_is_bit_identical() {
+        // Center 0 also carries a fault plan so the checkpoint covers
+        // capacity events mid-flight.
+        let opts = FleetOpts {
+            faults: vec![(
+                0,
+                FaultPlan::new().fail_at(10, 0, 1700).recover_at(40_000, 0, 1700),
+            )],
+            ..quiet_opts()
+        };
+        let reference = run_fleet(&opts);
+        let ck = std::env::temp_dir().join(format!("asa-fleet-ck-{}", std::process::id()));
+        std::fs::remove_file(&ck).ok();
+        // "Crash" after the first of three epochs, running serially.
+        let crashed = run_fleet_chunks(
+            &FleetOpts {
+                threads: 1,
+                ..opts.clone()
+            },
+            Some(&ck),
+            1,
+        );
+        assert!(crashed.is_none(), "the epoch budget must stop the run early");
+        assert!(ck.exists(), "the first epoch must have been checkpointed");
+        // Resume on a different worker count and finish: the report is
+        // bit-identical to the uninterrupted run — cells, router estimator
+        // state, and per-center gauges included.
+        let resumed = run_fleet_checkpointed(
+            &FleetOpts {
+                threads: 4,
+                ..opts.clone()
+            },
+            Some(&ck),
+        );
+        assert_eq!(to_json(&reference).to_string(), to_json(&resumed).to_string());
+        // Resuming the *completed* checkpoint replays no epochs and still
+        // reconstructs the same report from restored state alone.
+        let replayed = run_fleet_checkpointed(&opts, Some(&ck));
+        assert_eq!(to_json(&reference).to_string(), to_json(&replayed).to_string());
+        std::fs::remove_file(&ck).ok();
+    }
+
+    #[test]
+    fn fleet_checkpoint_rejects_mismatched_options() {
+        let opts = quiet_opts();
+        let ck = std::env::temp_dir().join(format!("asa-fleet-ckfp-{}", std::process::id()));
+        std::fs::remove_file(&ck).ok();
+        assert!(run_fleet_chunks(&opts, Some(&ck), 1).is_none());
+        // Same checkpoint, different seed: the fingerprint must refuse it
+        // rather than silently splice two unrelated runs together.
+        let other = FleetOpts {
+            seed: opts.seed + 1,
+            ..quiet_opts()
+        };
+        let refused = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_fleet_checkpointed(&other, Some(&ck))
+        }));
+        assert!(refused.is_err(), "mismatched options must be refused");
+        std::fs::remove_file(&ck).ok();
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //! executes every scenario **twice with the same seed** and fails unless the
 //! two metric documents are byte-identical — determinism is itself one of
 //! the invariants under test.
+//!
+//! On top of the double-run check, every scenario funnels its final advance
+//! through [`run_checkpointed`]: the simulator is snapshotted at the
+//! midpoint of the remaining horizon, restored into a second instance, and
+//! both must agree on the entire remaining event stream and the final
+//! canonical snapshot bytes. Crash recovery (DESIGN.md §12) is thereby a
+//! standing invariant of the whole adversarial suite, fault plans and all.
 
 use crate::simulator::{FaultPlan, JobId, JobSpec, JobState, RetryPolicy, Simulator, SystemConfig};
 use crate::util::json::Json;
@@ -62,6 +69,31 @@ fn mean_wait(sim: &Simulator, ids: &[JobId]) -> f64 {
         .map(|&id| sim.job(id).wait_time().unwrap_or(0))
         .sum();
     total as f64 / ids.len().max(1) as f64
+}
+
+/// Drive `sim` to `horizon` with a mid-flight checkpoint: snapshot at the
+/// midpoint of the remaining interval, restore into a second simulator,
+/// and require the original and the resumed instance to agree on the
+/// entire remaining observable event stream *and* on the final canonical
+/// snapshot bytes. The caller's `sim` ends at `horizon` exactly as a plain
+/// `run_until` would leave it (minus the drained event buffer, which no
+/// scenario inspects).
+fn run_checkpointed(sim: &mut Simulator, horizon: Time) -> Result<(), String> {
+    let mid = sim.now() + (horizon - sim.now()) / 2;
+    sim.run_until(mid);
+    let snap = sim.save_snapshot();
+    let mut resumed = Simulator::restore_snapshot(&snap, sim.cfg.clone())
+        .map_err(|e| format!("midpoint restore: {e}"))?;
+    sim.run_until(horizon);
+    resumed.run_until(horizon);
+    ensure(
+        sim.drain_events() == resumed.drain_events(),
+        "resumed run diverged from the original over the second half",
+    )?;
+    ensure(
+        sim.save_snapshot() == resumed.save_snapshot(),
+        "resumed run ended in a different state than the original",
+    )
 }
 
 /// Run one named scenario. `Err` carries the first violated invariant.
@@ -124,7 +156,7 @@ fn flash_crowd(seed: u64) -> Result<Json, String> {
             )
         })
         .collect();
-    sim.run_until(100_000);
+    run_checkpointed(&mut sim, 100_000)?;
     for &id in &ids {
         let v = sim.job(id);
         ensure(
@@ -160,7 +192,7 @@ fn drain_window(seed: u64) -> Result<Json, String> {
             )
         })
         .collect();
-    sim.run_until(10_000);
+    run_checkpointed(&mut sim, 10_000)?;
     let mut held = 0u32;
     for &id in &ids {
         let v = sim.job(id);
@@ -217,7 +249,7 @@ fn node_failure_storm(seed: u64) -> Result<Json, String> {
             )
         })
         .collect();
-    sim.run_until(20_000);
+    run_checkpointed(&mut sim, 20_000)?;
     for &id in &ids {
         let v = sim.job(id);
         ensure(
@@ -263,7 +295,7 @@ fn cold_start_capacity(seed: u64) -> Result<Json, String> {
     };
     let before = cohort(&mut sim, 0, "warm");
     let after = cohort(&mut sim, 3_000, "cold");
-    sim.run_until(30_000);
+    run_checkpointed(&mut sim, 30_000)?;
     for &id in before.iter().chain(&after) {
         let v = sim.job(id);
         ensure(
@@ -301,7 +333,7 @@ fn qos_cap_flip(seed: u64) -> Result<Json, String> {
     sim.set_partition_max_time(0, 300);
     let b = sim.submit(JobSpec::new(4, "post-flip-long", 8, 400).with_limit(1_000));
     let c = sim.submit(JobSpec::new(4, "post-flip-short", 8, 200).with_limit(1_000));
-    sim.run_until(5_000);
+    run_checkpointed(&mut sim, 5_000)?;
     ensure(sim.job(a).time_limit == 1_000, "pre-flip limit must survive the flip")?;
     ensure(sim.job(b).time_limit == 300, "post-flip submission must be clamped")?;
     ensure(sim.job(c).time_limit == 300, "post-flip submission must be clamped")?;

@@ -38,6 +38,9 @@ fn main() {
         "usage" => cmd_usage(args),
         "regret" => cmd_regret(args),
         "scenarios" => cmd_scenarios(args),
+        "record" => cmd_record(args),
+        "replay" => cmd_replay(args),
+        "bisect-divergence" => cmd_bisect(args),
         "bench-diff" => cmd_bench_diff(args),
         "bench-summary" => cmd_bench_summary(args),
         "info" => cmd_info(),
@@ -61,7 +64,10 @@ fn print_usage() {
            convergence  Fig. 5: Greedy/Default/Tuned convergence simulation\n\
            campaign     Figs 6-8: makespan breakdown for one workflow\n\
                         (--concurrent: multi-tenant contention scenario;\n\
-                         --fleet N: route workflows across N centers;\n\
+                         --fleet N: route workflows across N centers,\n\
+                         --checkpoint F: per-epoch crash recovery;\n\
+                         --warm-start F / --save-store F: persist the ASA\n\
+                         estimator store across campaigns;\n\
                          --two-center: partitioned cori/abisko domain)\n\
            table1       Table 1: full strategy-comparison campaign\n\
                         (--two-center: partitioned cori/abisko domain)\n\
@@ -70,8 +76,15 @@ fn print_usage() {
            usage        Fig. 9: total resource usage per strategy\n\
            regret       Appendix A: measured regret vs Theorem-1 bound\n\
            scenarios    adversarial scenario suite (fault injection): each\n\
-                        scenario runs twice per seed and must reproduce its\n\
-                        metrics exactly (--name runs one scenario)\n\
+                        scenario runs twice per seed, checkpoints at its\n\
+                        midpoint, and must reproduce its metrics exactly\n\
+                        (--name runs one scenario; --list prints names)\n\
+           record       record an append-only observable-event log (JSONL)\n\
+           replay       re-execute a recorded log, verifying every event\n\
+                        (--to N stops after N events, --to <secs>s at a\n\
+                         simulated time); exit 1 names the first divergence\n\
+           bisect-divergence  binary-search two logs of the same run for\n\
+                        their first diverging event\n\
            bench-diff   compare two BENCH_*.json files (perf trajectory)\n\
            bench-summary render BENCH_*.json runs as a markdown ns/op table\n\
                         with deltas vs committed baselines (CI artifact)\n\
@@ -141,6 +154,22 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
     )
     .opt_default("workflow", "montage", "montage | blast | statistics")
     .opt_default("seed", "42", "campaign seed")
+    .opt(
+        "warm-start",
+        "load a persisted ASA estimator store (JSON file) and start every \
+         unit from it, skipping the cold-prior warm-up session",
+    )
+    .opt(
+        "save-store",
+        "write the campaign's trained estimator store (JSON file) here \
+         for later --warm-start runs",
+    )
+    .opt(
+        "checkpoint",
+        "[fleet] checkpoint file: written atomically after every routing \
+         epoch; if it exists, the run resumes from it (bit-identical to an \
+         uninterrupted run)",
+    )
     .flag("naive", "include the ASA-Naive strategy (§4.5)")
     .flag(
         "two-center",
@@ -212,7 +241,21 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
     } else {
         &campaign::SCALINGS
     };
-    let cells = campaign::run_campaign(&[&wf], scalings, a.flag("naive"), seed);
+    let warm = match a.get("warm-start") {
+        None => None,
+        Some(path) => match load_store(path) {
+            Ok(store) => {
+                eprintln!("[asa] warm-starting from {path} ({} geometries)", store.len());
+                Some(store)
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    let (cells, trained) =
+        campaign::run_campaign_warm(&[&wf], scalings, a.flag("naive"), seed, warm.as_ref());
     let table = campaign::makespan_breakdown(&cells, &wf);
     println!("{}", table.render());
     let fig = match wf.as_str() {
@@ -222,7 +265,60 @@ fn cmd_campaign(argv: Vec<String>) -> i32 {
     };
     write_csv(fig, &table.to_csv());
     write_result(fig, &campaign::cells_to_json(&cells));
+    if let Some(path) = a.get("save-store") {
+        if let Err(e) = save_store(&trained, path) {
+            eprintln!("{e}");
+            return 2;
+        }
+        println!("-> wrote estimator store {path} ({} geometries)", trained.len());
+    }
     0
+}
+
+/// Load an ASA estimator store through a [`FileSink`] rooted at the path's
+/// directory — the sink is the persistence boundary (DESIGN.md §12), so
+/// object-store backends slot in without touching this command.
+fn load_store(path: &str) -> Result<asa::coordinator::AsaStore, String> {
+    use asa::coordinator::{AsaStore, FileSink};
+    let (root, key) = split_store_path(path)?;
+    let sink = FileSink::open(root)?;
+    let (store, errors) = AsaStore::load_from_sink(campaign_store_cfg(), &sink, key)?
+        .ok_or_else(|| format!("no estimator store at {path}"))?;
+    for e in errors {
+        eprintln!("[asa] warm-start: skipped incompatible entry: {e}");
+    }
+    Ok(store)
+}
+
+/// Save a trained store through the same sink boundary (atomic rename).
+fn save_store(store: &asa::coordinator::AsaStore, path: &str) -> Result<(), String> {
+    use asa::coordinator::FileSink;
+    let (root, key) = split_store_path(path)?;
+    let mut sink = FileSink::open(root)?;
+    store.save_to_sink(&mut sink, key)
+}
+
+fn split_store_path(path: &str) -> Result<(&std::path::Path, &str), String> {
+    let p = std::path::Path::new(path);
+    let key = p
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| format!("bad store path {path:?}"))?;
+    let root = match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => std::path::Path::new("."),
+    };
+    Ok((root, key))
+}
+
+/// The store configuration every campaign unit uses (Tuned sampling, the
+/// paper's repetition parameter) — loaded stores must share it so their
+/// estimators keep updating under the same policy.
+fn campaign_store_cfg() -> asa::coordinator::AsaConfig {
+    asa::coordinator::AsaConfig {
+        policy: asa::coordinator::Policy::Tuned { rep: 50 },
+        ..asa::coordinator::AsaConfig::default()
+    }
 }
 
 /// `asa campaign --concurrent`: the contention scenario the paper could
@@ -335,7 +431,12 @@ fn cmd_campaign_fleet(a: &asa::util::cli::Args, centers: u32) -> i32 {
         eprintln!("--workflows must be >= 1");
         return 2;
     }
-    let report = fleet::run_fleet(&opts);
+    let report = match a.get("checkpoint") {
+        Some(path) => {
+            fleet::run_fleet_checkpointed(&opts, Some(std::path::Path::new(path)))
+        }
+        None => fleet::run_fleet(&opts),
+    };
     println!(
         "fleet campaign: {} workflows routed across {} centers — peak {} live jobs, \
          {} registered, ~{:.1} MiB fleet state",
@@ -545,7 +646,8 @@ fn cmd_regret(argv: Vec<String>) -> i32 {
 fn cmd_scenarios(argv: Vec<String>) -> i32 {
     let cli = Cli::new("asa scenarios", "adversarial fault-injection scenario suite")
         .opt("name", "run a single scenario (default: the whole suite)")
-        .opt_default("seed", "42", "scenario seed (same seed => identical metrics)");
+        .opt_default("seed", "42", "scenario seed (same seed => identical metrics)")
+        .flag("list", "print the scenario names, one per line, and exit");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(h) => {
@@ -553,6 +655,12 @@ fn cmd_scenarios(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
+    if a.flag("list") {
+        for name in scenarios::SCENARIO_NAMES {
+            println!("{name}");
+        }
+        return 0;
+    }
     let seed = a.get_u64("seed", 42).unwrap();
     match scenarios::run_all(a.get("name"), seed) {
         Ok(outcomes) => {
@@ -571,6 +679,172 @@ fn cmd_scenarios(argv: Vec<String>) -> i32 {
         Err(e) => {
             eprintln!("::error::{e}");
             1
+        }
+    }
+}
+
+/// `asa record`: execute a run spec and write its append-only observable-
+/// event log (JSONL: header, one line per event, trailing metrics). The
+/// log plus the binary is a complete reproduction recipe — `asa replay`
+/// re-executes it and verifies every line (DESIGN.md §12).
+fn cmd_record(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa record", "record an append-only observable-event log")
+        .opt_default("system", "hpc2n", "system preset or JSON config path")
+        .opt_default("seed", "42", "simulation seed")
+        .opt_default("hours", "24", "simulated hours to record")
+        .opt_default("probes", "6", "deterministic probe jobs on top of the trace")
+        .opt_default("out", "results/events.jsonl", "log output path");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let spec = asa::simulator::eventlog::RunSpec {
+        system: a.get_or("system", "hpc2n").to_string(),
+        seed: a.get_u64("seed", 42).unwrap(),
+        engine: asa::simulator::SchedEngine::default(),
+        horizon: a.get_u64("hours", 24).unwrap() as i64 * 3600,
+        probes: a.get_u64("probes", 6).unwrap() as u32,
+    };
+    let text = match asa::simulator::eventlog::record(&spec) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("record: {e}");
+            return 2;
+        }
+    };
+    let out = a.get_or("out", "results/events.jsonl");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!("record: create {}: {e}", dir.display());
+                return 2;
+            }
+        }
+    }
+    if let Err(e) = std::fs::write(out, &text) {
+        eprintln!("record: write {out}: {e}");
+        return 2;
+    }
+    // Header + final line bracket the events.
+    let events = text.lines().count().saturating_sub(2);
+    println!("-> wrote {out} ({events} events)");
+    0
+}
+
+/// Parse `--to`: a plain integer is an event count; a trailing `s` makes
+/// it a simulated-time bound in seconds (e.g. `--to 3600s`).
+fn parse_replay_to(raw: &str) -> Result<(Option<u64>, Option<i64>), String> {
+    if let Some(secs) = raw.strip_suffix('s') {
+        let t: i64 = secs
+            .parse()
+            .map_err(|_| format!("bad --to time {raw:?} (want e.g. 3600s)"))?;
+        Ok((None, Some(t)))
+    } else {
+        let n: u64 = raw
+            .parse()
+            .map_err(|_| format!("bad --to {raw:?} (N events, or <secs>s)"))?;
+        Ok((Some(n), None))
+    }
+}
+
+/// `asa replay`: re-execute a recorded log's spec and verify the
+/// regenerated stream line-for-line, stopping at `--to` when given. Exit 1
+/// names the first diverging event — the debugging entry point for
+/// determinism regressions.
+fn cmd_replay(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("asa replay", "re-execute a recorded event log and verify it")
+        .opt("log", "event log path (required)")
+        .opt(
+            "to",
+            "stop early: N (events) or <secs>s (simulated time); default \
+             replays and verifies the whole log including final metrics",
+        );
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let Some(path) = a.get("log") else {
+        eprintln!("replay requires --log <events.jsonl>");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("replay: read {path}: {e}");
+            return 2;
+        }
+    };
+    let (to_event, to_time) = match a.get("to").map(parse_replay_to).transpose() {
+        Ok(bounds) => bounds.unwrap_or((None, None)),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match asa::simulator::eventlog::replay(&text, to_event, to_time) {
+        Ok(r) => {
+            println!(
+                "replay OK: {} event(s) verified, simulated clock at {} s",
+                r.events_checked, r.now
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("::error::{e}");
+            1
+        }
+    }
+}
+
+/// `asa bisect-divergence`: binary-search two logs of the same run (e.g.
+/// from two builds) for the first event where they disagree.
+fn cmd_bisect(argv: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "asa bisect-divergence",
+        "first diverging event between two logs (positional: two \
+         events.jsonl paths)",
+    );
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(h) => {
+            println!("{h}");
+            return 2;
+        }
+    };
+    let [pa, pb] = a.positional.as_slice() else {
+        eprintln!("bisect-divergence takes exactly two log files");
+        return 2;
+    };
+    let read = |p: &str| match std::fs::read_to_string(p) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            eprintln!("bisect-divergence: read {p}: {e}");
+            None
+        }
+    };
+    let (Some(ta), Some(tb)) = (read(pa), read(pb)) else {
+        return 2;
+    };
+    match asa::simulator::eventlog::bisect_divergence(&ta, &tb) {
+        Ok(None) => {
+            println!("logs agree: every event and the final metrics match");
+            0
+        }
+        Ok(Some(d)) => {
+            println!("first divergence at event {}:", d.index);
+            println!("  {pa}: {}", d.a);
+            println!("  {pb}: {}", d.b);
+            1
+        }
+        Err(e) => {
+            eprintln!("::error::{e}");
+            2
         }
     }
 }

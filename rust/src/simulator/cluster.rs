@@ -6,6 +6,7 @@
 //! (total = nodes × cores_per_node), matching how queue-wait dynamics arise.
 
 use crate::simulator::job::JobId;
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::util::hash::FxHashMap;
 use crate::{Cores, Time};
 use std::collections::BTreeSet;
@@ -141,6 +142,40 @@ impl Cluster {
     pub fn ends_iter(&self) -> impl Iterator<Item = (Time, Cores)> + '_ {
         self.by_end.iter().map(|&(t, c, _)| (t, c))
     }
+
+    /// Canonical serialization: capacity counters plus allocations sorted
+    /// by job id. The `by_end` index is derived state and is rebuilt on
+    /// read rather than written.
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        w.u32(self.total);
+        w.u32(self.free);
+        let mut allocs: Vec<&Allocation> = self.allocs.values().collect();
+        allocs.sort_by_key(|a| a.job.0);
+        w.usz(allocs.len());
+        for a in allocs {
+            w.u64(a.job.0);
+            w.u32(a.cores);
+            w.i64(a.started);
+            w.i64(a.limit_end);
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<Cluster, String> {
+        let total = r.u32()?;
+        let free = r.u32()?;
+        let n = r.usz()?;
+        let mut allocs = FxHashMap::default();
+        let mut by_end = BTreeSet::new();
+        for _ in 0..n {
+            let job = JobId(r.u64()?);
+            let cores = r.u32()?;
+            let started = r.i64()?;
+            let limit_end = r.i64()?;
+            allocs.insert(job, Allocation { job, cores, started, limit_end });
+            by_end.insert((limit_end, cores, job));
+        }
+        Ok(Cluster { total, free, allocs, by_end })
+    }
 }
 
 /// The machine as a set of named partitions (Slurm partitions / two whole
@@ -212,6 +247,25 @@ impl Partitions {
     /// address the partition directly).
     pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
         self.parts.iter().find_map(|c| c.allocation(job))
+    }
+
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        w.usz(self.parts.len());
+        for c in &self.parts {
+            c.snap_write(w);
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<Partitions, String> {
+        let n = r.usz()?;
+        let mut parts = Vec::with_capacity(n);
+        for _ in 0..n {
+            parts.push(Cluster::snap_read(r)?);
+        }
+        if parts.is_empty() {
+            return Err("snapshot has zero partitions".into());
+        }
+        Ok(Partitions { parts })
     }
 }
 
@@ -328,6 +382,35 @@ mod tests {
         c.allocate(JobId(3), 10, 0, 200);
         let order: Vec<JobId> = c.victims_desc().map(|a| a.job).collect();
         assert_eq!(order, vec![JobId(1), JobId(3), JobId(2)]);
+    }
+
+    #[test]
+    fn snapshot_round_trip_rebuilds_end_index() {
+        let mut m = Partitions::new(&[100, 50]);
+        m.part_mut(0).allocate(JobId(3), 10, 5, 300);
+        m.part_mut(0).allocate(JobId(1), 20, 0, 100);
+        m.part_mut(1).allocate(JobId(2), 40, 2, 200);
+        m.part_mut(0).shrink(30);
+        let mut w = SnapWriter::new();
+        m.snap_write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let back = Partitions::snap_read(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.part(0).total_cores(), 70);
+        assert_eq!(back.part(0).free_cores(), m.part(0).free_cores());
+        assert_eq!(
+            back.part(0).ends_iter().collect::<Vec<_>>(),
+            m.part(0).ends_iter().collect::<Vec<_>>(),
+            "by_end index rebuilt in order"
+        );
+        let a = back.part(1).allocation(JobId(2)).unwrap();
+        assert_eq!((a.cores, a.started, a.limit_end), (40, 2, 200));
+        // Canonical bytes: re-snapshot equals the original buffer.
+        let mut w2 = SnapWriter::new();
+        back.snap_write(&mut w2);
+        assert_eq!(bytes, w2.into_bytes());
     }
 
     #[test]

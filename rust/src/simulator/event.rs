@@ -6,6 +6,7 @@
 //! compaction), so neither the dedup index nor the heap accumulates
 //! tombstones under sustained submit/cancel churn.
 
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::util::hash::{FxHashMap, FxHashSet};
 use crate::Time;
 use std::cmp::Ordering;
@@ -31,6 +32,44 @@ pub enum EventKind {
     /// handling entry `idx` schedules entry `idx + 1`, so an empty plan
     /// contributes no heap entries at all.
     Fault(u32),
+}
+
+impl EventKind {
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        match self {
+            EventKind::Submit(id) => {
+                w.u8(0);
+                w.u64(id.0);
+            }
+            EventKind::Finish(id) => {
+                w.u8(1);
+                w.u64(id.0);
+            }
+            EventKind::TraceArrival => w.u8(2),
+            EventKind::Sample => w.u8(3),
+            EventKind::Wake(tag) => {
+                w.u8(4);
+                w.u64(*tag);
+            }
+            EventKind::Fault(idx) => {
+                w.u8(5);
+                w.u32(*idx);
+            }
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<EventKind, String> {
+        use super::job::JobId;
+        Ok(match r.u8()? {
+            0 => EventKind::Submit(JobId(r.u64()?)),
+            1 => EventKind::Finish(JobId(r.u64()?)),
+            2 => EventKind::TraceArrival,
+            3 => EventKind::Sample,
+            4 => EventKind::Wake(r.u64()?),
+            5 => EventKind::Fault(r.u32()?),
+            t => return Err(format!("unknown EventKind tag {t}")),
+        })
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -215,6 +254,56 @@ impl EventQueue {
     fn physical_len(&self) -> usize {
         self.heap.len()
     }
+
+    /// Canonical serialization: live heap entries sorted by `(time, seq)`
+    /// with dead tombstones filtered out — equivalent to an eager
+    /// compaction, which pop/peek semantics make behavior-invariant — plus
+    /// the sequence counter and the sample-dedup index (sorted by time).
+    /// The `seq` counter is written verbatim so seq numbers assigned after
+    /// restore match the uninterrupted run exactly.
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        let mut live: Vec<&Entry> = self
+            .heap
+            .iter()
+            .filter(|e| !self.dead_samples.contains(&e.seq))
+            .collect();
+        live.sort_by_key(|e| (e.time, e.seq));
+        w.u64(self.seq);
+        w.usz(live.len());
+        for e in live {
+            w.i64(e.time);
+            w.u64(e.seq);
+            e.kind.snap_write(w);
+        }
+        let mut samples: Vec<(Time, u64)> =
+            self.sample_times.iter().map(|(&t, &s)| (t, s)).collect();
+        samples.sort_unstable();
+        w.usz(samples.len());
+        for (t, s) in samples {
+            w.i64(t);
+            w.u64(s);
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<EventQueue, String> {
+        let seq = r.u64()?;
+        let n = r.usz()?;
+        let mut heap = BinaryHeap::with_capacity(n);
+        for _ in 0..n {
+            let time = r.i64()?;
+            let entry_seq = r.u64()?;
+            let kind = EventKind::snap_read(r)?;
+            heap.push(Entry { time, seq: entry_seq, kind });
+        }
+        let m = r.usz()?;
+        let mut sample_times = FxHashMap::default();
+        for _ in 0..m {
+            let t = r.i64()?;
+            let s = r.u64()?;
+            sample_times.insert(t, s);
+        }
+        Ok(EventQueue { heap, seq, sample_times, dead_samples: FxHashSet::default() })
+    }
 }
 
 #[cfg(test)]
@@ -344,6 +433,59 @@ mod tests {
         out.clear();
         assert_eq!(q.pop_batch_at(&mut out), Some(11));
         assert_eq!(out, vec![EventKind::Finish(JobId(2))]);
+    }
+
+    #[test]
+    fn snapshot_preserves_dedup_bookkeeping_through_retract_and_refresh() {
+        // The satellite-6 bugfix pin: after a restore, the time→seq dedup
+        // index must still name the live entries and retraction must not
+        // panic or diverge from a never-snapshotted twin.
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::Submit(JobId(1)));
+        assert!(q.push_sample_dedup(10));
+        assert!(q.push_sample_dedup(20));
+        assert!(q.push_sample_dedup(30));
+        assert!(q.retract_sample(20)); // leave a tombstone in the heap
+        q.push(15, EventKind::Finish(JobId(2)));
+
+        let mut w = SnapWriter::new();
+        q.snap_write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let mut back = EventQueue::snap_read(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.len(), q.len());
+        assert_eq!(back.outstanding_samples(), q.outstanding_samples());
+
+        // Retract + re-push immediately after restore, mirrored on the
+        // original; both must behave identically from here on.
+        for queue in [&mut q, &mut back] {
+            assert!(queue.retract_sample(10), "restored index finds t=10");
+            assert!(!queue.retract_sample(20), "t=20 already retracted");
+            assert!(queue.push_sample_dedup(10), "time reusable after retract");
+            assert!(!queue.push_sample_dedup(30), "t=30 still outstanding");
+        }
+        loop {
+            let (a, b) = (q.pop(), back.pop());
+            assert_eq!(a, b, "restored queue diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+
+        // Re-snapshotting the restored twin yields identical canonical
+        // bytes — the determinism oracle the proptests lean on.
+        let mut q2 = EventQueue::new();
+        q2.push(5, EventKind::Submit(JobId(1)));
+        assert!(q2.push_sample_dedup(10));
+        let mut wa = SnapWriter::new();
+        q2.snap_write(&mut wa);
+        let ba = wa.into_bytes();
+        let mut rr = SnapReader::new(&ba);
+        let q3 = EventQueue::snap_read(&mut rr).unwrap();
+        let mut wb = SnapWriter::new();
+        q3.snap_write(&mut wb);
+        assert_eq!(ba, wb.into_bytes(), "snapshot bytes are canonical");
     }
 
     #[test]

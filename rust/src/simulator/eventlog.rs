@@ -1,0 +1,430 @@
+//! Append-only observable-event log: record, replay, bisect.
+//!
+//! A log is JSONL: one header line carrying the full [`RunSpec`] (system,
+//! seed, engine, horizon, probe count), one line per *observable*
+//! [`SimEvent`] the run produced, and one trailing metrics line. Because a
+//! run is a pure function of its spec, the log needs no per-event payload
+//! beyond the event itself — `replay` re-executes the spec and checks the
+//! regenerated stream against the file, pinpointing the first diverging
+//! event; `bisect_divergence` binary-searches two logs (e.g. from two
+//! builds) for the first index where they disagree.
+//!
+//! What is in the log: every observable foreground event, in order, plus
+//! final counters. What is not: background-trace churn, scheduler pass
+//! internals, RNG draws — those are all derived state, reproduced exactly
+//! by re-execution (see DESIGN.md §12).
+//!
+//! The bisect assumes *prefix-monotone* divergence: once two deterministic
+//! runs disagree at event `d`, they are treated as disagreeing from `d`
+//! onward. Diverged simulations re-converging line-for-line is not
+//! something a scheduling change produces in practice; a walk-back pass
+//! after the binary search repairs the answer if the assumption was
+//! violated near the found index.
+
+use crate::simulator::config::resolve_system;
+use crate::simulator::sim::{SchedEngine, SimEvent, Simulator};
+use crate::simulator::JobSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Time;
+
+/// Everything needed to re-execute a recorded run exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunSpec {
+    /// System preset name or config-file path (must resolve identically
+    /// wherever the log is replayed).
+    pub system: String,
+    pub seed: u64,
+    pub engine: SchedEngine,
+    /// Simulated horizon in seconds; recording stops here.
+    pub horizon: Time,
+    /// Deterministic foreground probe jobs submitted on top of the
+    /// background trace (they are what makes the stream non-empty).
+    pub probes: u32,
+}
+
+impl RunSpec {
+    pub fn header_json(&self) -> Json {
+        Json::obj()
+            .with("asa_event_log", 1i64)
+            .with("system", self.system.as_str())
+            .with("seed", self.seed as i64)
+            .with(
+                "engine",
+                match self.engine {
+                    SchedEngine::Incremental => "incremental",
+                    SchedEngine::Naive => "naive",
+                },
+            )
+            .with("horizon", self.horizon)
+            .with("probes", self.probes as i64)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunSpec, String> {
+        if j.get("asa_event_log").and_then(|v| v.as_i64()) != Some(1) {
+            return Err("not an ASA event log (missing asa_event_log header)".into());
+        }
+        let engine = match j.get("engine").and_then(|v| v.as_str()) {
+            Some("incremental") | None => SchedEngine::Incremental,
+            Some("naive") => SchedEngine::Naive,
+            Some(e) => return Err(format!("unknown engine {e:?}")),
+        };
+        Ok(RunSpec {
+            system: j
+                .get("system")
+                .and_then(|v| v.as_str())
+                .ok_or("event log header missing 'system'")?
+                .to_string(),
+            seed: j
+                .get("seed")
+                .and_then(|v| v.as_i64())
+                .ok_or("event log header missing 'seed'")? as u64,
+            engine,
+            horizon: j
+                .get("horizon")
+                .and_then(|v| v.as_i64())
+                .ok_or("event log header missing 'horizon'")?,
+            probes: j.get("probes").and_then(|v| v.as_i64()).unwrap_or(0) as u32,
+        })
+    }
+
+    /// Build the simulator this spec describes, probes submitted. A spec
+    /// re-executes to the identical observable stream every time.
+    pub fn build(&self) -> Result<Simulator, String> {
+        let cfg = resolve_system(&self.system)?;
+        let probe_cap = cfg.resolved_partitions()[0].total_cores().clamp(1, 64) as u64;
+        let mut sim = Simulator::new_with_engine(cfg, self.seed, self.engine);
+        let mut rng = Rng::new(self.seed ^ 0x10b5);
+        for k in 0..self.probes {
+            let at = (k as i64 + 1) * (self.horizon / 2) / (self.probes as i64 + 1);
+            let cores = rng.range_u64(1, probe_cap + 1) as u32;
+            let runtime = 600 + rng.range_u64(0, 7200) as Time;
+            sim.submit_at(
+                at,
+                JobSpec::new(1, format!("probe{k}"), cores, runtime)
+                    .with_limit(runtime + 3600),
+            );
+        }
+        Ok(sim)
+    }
+}
+
+fn event_json(i: u64, ev: &SimEvent) -> Json {
+    let (name, key, word, t) = match *ev {
+        SimEvent::Submitted { id, time } => ("submitted", "job", id.0, time),
+        SimEvent::Started { id, time } => ("started", "job", id.0, time),
+        SimEvent::Finished { id, time } => ("finished", "job", id.0, time),
+        SimEvent::Cancelled { id, time } => ("cancelled", "job", id.0, time),
+        SimEvent::TimedOut { id, time } => ("timed-out", "job", id.0, time),
+        SimEvent::Requeued { id, time } => ("requeued", "job", id.0, time),
+        SimEvent::Failed { id, time } => ("failed", "job", id.0, time),
+        SimEvent::Wake { tag, time } => ("wake", "tag", tag, time),
+    };
+    Json::obj()
+        .with("i", i as i64)
+        .with("ev", name)
+        .with(key, word as i64)
+        .with("t", t)
+}
+
+fn final_json(sim: &Simulator) -> Json {
+    Json::obj()
+        .with("final", true)
+        .with("now", sim.now())
+        .with("started", sim.metrics.started as i64)
+        .with("completed", sim.metrics.completed as i64)
+        .with("cancelled", sim.metrics.cancelled as i64)
+        .with("timed_out", sim.metrics.timed_out as i64)
+        .with("failed", sim.metrics.failed as i64)
+        .with("requeues", sim.metrics.requeues as i64)
+        .with("events", sim.metrics.events as i64)
+}
+
+/// Execute the spec and render the full log text.
+pub fn record(spec: &RunSpec) -> Result<String, String> {
+    let mut sim = spec.build()?;
+    let mut out = spec.header_json().to_string();
+    out.push('\n');
+    let mut i = 0u64;
+    while let Some(ev) = sim.step_until(spec.horizon) {
+        out.push_str(&event_json(i, &ev).to_string());
+        out.push('\n');
+        i += 1;
+    }
+    out.push_str(&final_json(&sim).to_string());
+    out.push('\n');
+    Ok(out)
+}
+
+/// A parsed log: spec, canonicalized event lines, and the metrics line.
+struct ParsedLog {
+    spec: RunSpec,
+    events: Vec<String>,
+    final_line: Option<String>,
+}
+
+fn parse_log(text: &str) -> Result<ParsedLog, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or("empty event log")?;
+    let spec = RunSpec::from_json(&Json::parse(header).map_err(|e| format!("header: {e}"))?)?;
+    let mut events = Vec::new();
+    let mut final_line = None;
+    for (n, line) in lines.enumerate() {
+        let j = Json::parse(line).map_err(|e| format!("log line {}: {e}", n + 2))?;
+        if j.get("final").is_some() {
+            final_line = Some(j.to_string());
+        } else if j.get("ev").is_some() {
+            // Canonicalize through the parser so formatting differences
+            // (whitespace, key order produced by hand edits) don't count
+            // as divergence.
+            events.push(j.to_string());
+        } else {
+            return Err(format!("log line {} is neither event nor final", n + 2));
+        }
+    }
+    Ok(ParsedLog {
+        spec,
+        events,
+        final_line,
+    })
+}
+
+/// Result of a successful replay.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ReplayReport {
+    pub events_checked: u64,
+    pub now: Time,
+}
+
+/// Re-execute a log's spec and verify the regenerated stream against it,
+/// stopping at `to_event` (count of observable events) or `to_time`
+/// (simulated seconds) when given. Errors name the first diverging event.
+pub fn replay(
+    log_text: &str,
+    to_event: Option<u64>,
+    to_time: Option<Time>,
+) -> Result<ReplayReport, String> {
+    let log = parse_log(log_text)?;
+    let mut sim = log.spec.build()?;
+    let deadline = to_time.unwrap_or(log.spec.horizon).min(log.spec.horizon);
+    let limit = to_event.unwrap_or(u64::MAX);
+    let mut i = 0u64;
+    while i < limit {
+        let Some(ev) = sim.step_until(deadline) else {
+            break;
+        };
+        let got = event_json(i, &ev).to_string();
+        match log.events.get(i as usize) {
+            None => {
+                return Err(format!(
+                    "first divergence at event {i}: log ends but replay produced {got}"
+                ))
+            }
+            Some(want) if *want != got => {
+                return Err(format!(
+                    "first divergence at event {i}: log has {want}, replay produced {got}"
+                ))
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let full = to_event.is_none() && deadline == log.spec.horizon;
+    if full && (i as usize) < log.events.len() {
+        return Err(format!(
+            "first divergence at event {i}: replay ended but log has {}",
+            log.events[i as usize]
+        ));
+    }
+    if full {
+        if let Some(want) = &log.final_line {
+            let got = final_json(&sim).to_string();
+            if *want != got {
+                return Err(format!(
+                    "final metrics diverge: log has {want}, replay produced {got}"
+                ));
+            }
+        }
+    }
+    Ok(ReplayReport {
+        events_checked: i,
+        now: sim.now(),
+    })
+}
+
+/// First event index where two logs disagree.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Divergence {
+    pub index: u64,
+    /// The event (or `<end-of-log>` / final-metrics line) each side has
+    /// at that index.
+    pub a: String,
+    pub b: String,
+}
+
+/// Binary-search two logs of the *same* spec for their first diverging
+/// event (`Ok(None)` when identical). Runs in `O(log n)` line comparisons
+/// under the prefix-monotone assumption documented at module level, plus a
+/// walk-back verification pass.
+pub fn bisect_divergence(a_text: &str, b_text: &str) -> Result<Option<Divergence>, String> {
+    let a = parse_log(a_text)?;
+    let b = parse_log(b_text)?;
+    if a.spec != b.spec {
+        let (ha, hb) = (a.spec.header_json(), b.spec.header_json());
+        return Err(format!("logs record different runs: {ha} vs {hb}"));
+    }
+    let (ea, eb) = (&a.events, &b.events);
+    let n = ea.len().min(eb.len());
+    let prefix_equal = n == 0 || ea[n - 1] == eb[n - 1];
+    if !prefix_equal {
+        let mut idx = if ea[0] != eb[0] {
+            0
+        } else {
+            // Invariant: equal at lo, different at hi.
+            let (mut lo, mut hi) = (0usize, n - 1);
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if ea[mid] == eb[mid] {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            hi
+        };
+        // Walk back in case the streams violated prefix-monotonicity
+        // around the index the search landed on.
+        while idx > 0 && ea[idx - 1] != eb[idx - 1] {
+            idx -= 1;
+        }
+        return Ok(Some(Divergence {
+            index: idx as u64,
+            a: ea[idx].clone(),
+            b: eb[idx].clone(),
+        }));
+    }
+    if ea.len() != eb.len() {
+        let end = "<end-of-log>".to_string();
+        return Ok(Some(Divergence {
+            index: n as u64,
+            a: ea.get(n).cloned().unwrap_or_else(|| end.clone()),
+            b: eb.get(n).cloned().unwrap_or(end),
+        }));
+    }
+    if a.final_line != b.final_line {
+        let miss = "<missing final line>".to_string();
+        return Ok(Some(Divergence {
+            index: n as u64,
+            a: a.final_line.unwrap_or_else(|| miss.clone()),
+            b: b.final_line.unwrap_or(miss),
+        }));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> RunSpec {
+        RunSpec {
+            system: "testbed".into(),
+            seed: 5,
+            engine: SchedEngine::Incremental,
+            horizon: 6 * 3600,
+            probes: 4,
+        }
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let s = spec();
+        let j = Json::parse(&s.header_json().to_string()).unwrap();
+        assert_eq!(RunSpec::from_json(&j).unwrap(), s);
+        assert!(RunSpec::from_json(&Json::obj()).is_err());
+        assert!(
+            RunSpec::from_json(&Json::obj().with("asa_event_log", 1i64)).is_err(),
+            "missing system must fail"
+        );
+    }
+
+    #[test]
+    fn record_is_deterministic_and_replays_clean() {
+        let s = spec();
+        let log = record(&s).unwrap();
+        assert_eq!(log, record(&s).unwrap(), "recording is a pure function");
+        let report = replay(&log, None, None).unwrap();
+        // 4 probes each submit + start + finish at minimum.
+        assert!(report.events_checked >= 12, "{report:?}");
+        // Partial replays stop early and still verify their prefix.
+        let partial = replay(&log, Some(3), None).unwrap();
+        assert_eq!(partial.events_checked, 3);
+        let timed = replay(&log, None, Some(2 * 3600)).unwrap();
+        assert!(timed.events_checked < report.events_checked);
+    }
+
+    fn tamper(log: &str, event_index: usize) -> String {
+        let mut out = String::new();
+        let mut seen = 0usize;
+        for line in log.lines() {
+            let j = Json::parse(line).unwrap();
+            if j.get("ev").is_some() {
+                if seen == event_index {
+                    let t = j.get("t").and_then(|v| v.as_i64()).unwrap();
+                    let mut j2 = j.clone();
+                    j2.set("t", t + 1);
+                    out.push_str(&j2.to_string());
+                    out.push('\n');
+                    seen += 1;
+                    continue;
+                }
+                seen += 1;
+            }
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    #[test]
+    fn replay_names_the_first_diverging_event() {
+        let log = record(&spec()).unwrap();
+        let bad = tamper(&log, 2);
+        let err = replay(&bad, None, None).unwrap_err();
+        assert!(err.contains("divergence at event 2"), "{err}");
+        // A divergence past the requested prefix is not reported.
+        assert!(replay(&bad, Some(2), None).is_ok());
+    }
+
+    #[test]
+    fn bisect_finds_first_divergence() {
+        let log = record(&spec()).unwrap();
+        assert_eq!(bisect_divergence(&log, &log).unwrap(), None);
+        for idx in [0usize, 3, 7] {
+            let bad = tamper(&log, idx);
+            let d = bisect_divergence(&log, &bad).unwrap().unwrap();
+            assert_eq!(d.index, idx as u64, "a={} b={}", d.a, d.b);
+            assert_ne!(d.a, d.b);
+        }
+        // Different specs are an error, not a divergence.
+        let mut other = spec();
+        other.seed = 6;
+        let log6 = record(&other).unwrap();
+        assert!(bisect_divergence(&log, &log6).is_err());
+    }
+
+    #[test]
+    fn bisect_reports_length_and_final_line_divergence() {
+        let log = record(&spec()).unwrap();
+        // Drop the last event line: prefix equal, lengths differ.
+        let mut lines: Vec<&str> = log.lines().collect();
+        let last_event = lines
+            .iter()
+            .rposition(|l| l.contains("\"ev\""))
+            .unwrap();
+        lines.remove(last_event);
+        let shorter = lines.join("\n");
+        let d = bisect_divergence(&log, &shorter).unwrap().unwrap();
+        assert_eq!(d.b, "<end-of-log>");
+    }
+}

@@ -22,6 +22,7 @@
 //! registration, so the per-candidate factor lookups in the scheduling
 //! pass are plain array reads ([`FairShare::factor_idx`]) with no hashing.
 
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::util::hash::FxHashMap;
 use crate::Time;
 
@@ -219,11 +220,82 @@ impl FairShare {
         self.accounts.len()
     }
 
-    /// Approximate heap footprint of the ledger.
+    /// Approximate heap footprint of the ledger, counted at live lengths
+    /// (not capacities) so it is a pure function of logical state and
+    /// survives snapshot/restore byte-identically in experiment reports.
     pub fn bytes_estimate(&self) -> usize {
         use std::mem::size_of;
-        self.accounts.capacity() * size_of::<UserAccount>()
-            + self.index.capacity() * (size_of::<u32>() * 2)
+        self.accounts.len() * size_of::<UserAccount>()
+            + self.index.len() * (size_of::<u32>() * 2)
+    }
+
+    /// Serialize the full ledger bit-exactly: every float as its bit
+    /// pattern, the generation counters verbatim (the scheduler's
+    /// cache-validity protocol depends on them), accounts in dense-index
+    /// order, and the user→index map sorted by user id.
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        w.i64(self.half_life);
+        w.f64b(self.total_shares);
+        w.f64b(self.total_usage_scaled);
+        w.f64b(self.epoch);
+        w.u64(self.generation);
+        w.u64(self.refreshed_gen);
+        w.usz(self.accounts.len());
+        for a in &self.accounts {
+            w.f64b(a.shares);
+            w.f64b(a.usage_scaled);
+            w.u64(a.factor_gen);
+            w.f64b(a.factor);
+        }
+        let mut users: Vec<(u32, u32)> = self.index.iter().map(|(&u, &i)| (u, i)).collect();
+        users.sort_unstable();
+        w.usz(users.len());
+        for (u, i) in users {
+            w.u32(u);
+            w.u32(i);
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<FairShare, String> {
+        let half_life = r.i64()?;
+        if half_life <= 0 {
+            return Err(format!("invalid fair-share half_life {half_life}"));
+        }
+        let total_shares = r.f64b()?;
+        let total_usage_scaled = r.f64b()?;
+        let epoch = r.f64b()?;
+        let generation = r.u64()?;
+        let refreshed_gen = r.u64()?;
+        let n = r.usz()?;
+        let mut accounts = Vec::with_capacity(n);
+        for _ in 0..n {
+            accounts.push(UserAccount {
+                shares: r.f64b()?,
+                usage_scaled: r.f64b()?,
+                factor_gen: r.u64()?,
+                factor: r.f64b()?,
+            });
+        }
+        let m = r.usz()?;
+        let mut index = FxHashMap::default();
+        for _ in 0..m {
+            let u = r.u32()?;
+            let i = r.u32()?;
+            index.insert(u, i);
+        }
+        if index.len() != accounts.len() {
+            return Err("fair-share index/account count mismatch".into());
+        }
+        Ok(FairShare {
+            index,
+            accounts,
+            half_life,
+            total_shares,
+            total_usage_scaled,
+            epoch,
+            generation,
+            refreshed_gen,
+        })
     }
 }
 
@@ -358,6 +430,59 @@ mod tests {
         fs.charge(2, 9e5, 20);
         fs.refresh_factors();
         assert!(fs.factor_at(b) < fs.factor_at(a));
+    }
+
+    #[test]
+    fn snapshot_preserves_generation_counters_and_factor_bits() {
+        // Satellite-6 pin: generation / refreshed_gen / per-account
+        // factor_gen must survive a restore exactly, or the post-restore
+        // cache-validity protocol diverges from the uninterrupted twin.
+        let mut fs = FairShare::new(604_800);
+        let a = fs.ensure_user(1, 1.0);
+        let b = fs.ensure_user(2, 2.0);
+        fs.charge(1, 1e6, 50);
+        fs.refresh_factors();
+        fs.charge(2, 3e5, 90); // leave account caches stale on purpose
+
+        let mut w = SnapWriter::new();
+        fs.snap_write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let mut back = FairShare::snap_read(&mut r).unwrap();
+        r.expect_end().unwrap();
+
+        assert_eq!(back.generation, fs.generation);
+        assert_eq!(back.refreshed_gen, fs.refreshed_gen);
+        assert_eq!(back.user_count(), fs.user_count());
+        for idx in [a, b] {
+            assert_eq!(
+                back.accounts[idx as usize].factor_gen,
+                fs.accounts[idx as usize].factor_gen
+            );
+            assert_eq!(
+                back.factor_at(idx).to_bits(),
+                fs.factor_at(idx).to_bits(),
+                "stale-path factor identical after restore"
+            );
+        }
+        // Immediately refresh + mutate on both; no panic, no divergence.
+        for ledger in [&mut fs, &mut back] {
+            ledger.refresh_factors();
+            ledger.ensure_user(3, 1.0);
+            ledger.charge(3, 4e4, 120);
+            ledger.refresh_factors();
+        }
+        for idx in [a, b, 2] {
+            assert_eq!(back.factor_at(idx).to_bits(), fs.factor_at(idx).to_bits());
+        }
+        assert_eq!(back.generation, fs.generation);
+        assert_eq!(back.bytes_estimate(), fs.bytes_estimate());
+        // Canonical bytes: re-snapshot of the restored ledger matches a
+        // re-snapshot of the original.
+        let (mut wa, mut wb) = (SnapWriter::new(), SnapWriter::new());
+        fs.snap_write(&mut wa);
+        back.snap_write(&mut wb);
+        assert_eq!(wa.into_bytes(), wb.into_bytes());
     }
 
     #[test]

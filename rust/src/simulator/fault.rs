@@ -9,6 +9,7 @@
 //! and an empty plan leaves the event heap — and therefore every existing
 //! campaign and bench — bit-identical to a run with no plan at all.
 
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{Cores, Time};
@@ -139,6 +140,55 @@ impl FaultPlan {
 
     pub fn events(&self) -> &[FaultEvent] {
         &self.events
+    }
+
+    /// Serialize the plan verbatim. The cursor is *not* part of the plan:
+    /// progress through it lives in the chained `EventKind::Fault(idx)`
+    /// heap entry, which the event queue's own snapshot carries.
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        w.usz(self.events.len());
+        for e in &self.events {
+            w.i64(e.at);
+            match e.kind {
+                FaultKind::NodeFailure { partition, cores } => {
+                    w.u8(0);
+                    w.u32(partition);
+                    w.u32(cores);
+                }
+                FaultKind::NodeRecovery { partition, cores } => {
+                    w.u8(1);
+                    w.u32(partition);
+                    w.u32(cores);
+                }
+                FaultKind::DrainStart { partition } => {
+                    w.u8(2);
+                    w.u32(partition);
+                }
+                FaultKind::DrainEnd { partition } => {
+                    w.u8(3);
+                    w.u32(partition);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<FaultPlan, String> {
+        let n = r.usz()?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = r.i64()?;
+            let kind = match r.u8()? {
+                0 => FaultKind::NodeFailure { partition: r.u32()?, cores: r.u32()? },
+                1 => FaultKind::NodeRecovery { partition: r.u32()?, cores: r.u32()? },
+                2 => FaultKind::DrainStart { partition: r.u32()? },
+                3 => FaultKind::DrainEnd { partition: r.u32()? },
+                t => return Err(format!("unknown FaultKind tag {t}")),
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        // The plan was written in its own (already time-sorted) order;
+        // `scripted`'s stable sort leaves it untouched.
+        Ok(FaultPlan::scripted(events))
     }
 
     pub fn len(&self) -> usize {

@@ -1,5 +1,6 @@
 //! Simulation observability: utilization, queue depth and wait statistics.
 
+use crate::simulator::snapshot::{SnapReader, SnapWriter};
 use crate::util::stats::Summary;
 use crate::Time;
 
@@ -64,6 +65,74 @@ impl Metrics {
         self.util_last_value = utilization;
     }
 
+    /// Serialize every counter and accumulator bit-exactly (the utilization
+    /// integral is float state that must survive a checkpoint unchanged for
+    /// resumed reports to match the uninterrupted run byte-for-byte).
+    pub(crate) fn snap_write(&self, w: &mut SnapWriter) {
+        for s in [&self.bg_wait, &self.fg_wait] {
+            let (n, mean, m2, min, max, total) = s.snap_parts();
+            w.u64(n);
+            w.u64(mean);
+            w.u64(m2);
+            w.u64(min);
+            w.u64(max);
+            w.u64(total);
+        }
+        w.f64b(self.util_integral);
+        w.i64(self.util_last_t);
+        w.f64b(self.util_last_value);
+        for c in [
+            self.completed,
+            self.cancelled,
+            self.timed_out,
+            self.failed,
+            self.requeues,
+            self.node_failures,
+            self.node_recoveries,
+            self.passes,
+            self.started,
+            self.rejected,
+            self.events,
+            self.live_jobs_peak,
+        ] {
+            w.u64(c);
+        }
+    }
+
+    pub(crate) fn snap_read(r: &mut SnapReader) -> Result<Metrics, String> {
+        let mut summaries = [Summary::new(), Summary::new()];
+        for s in summaries.iter_mut() {
+            *s = Summary::from_snap_parts((
+                r.u64()?,
+                r.u64()?,
+                r.u64()?,
+                r.u64()?,
+                r.u64()?,
+                r.u64()?,
+            ));
+        }
+        let [bg_wait, fg_wait] = summaries;
+        Ok(Metrics {
+            bg_wait,
+            fg_wait,
+            util_integral: r.f64b()?,
+            util_last_t: r.i64()?,
+            util_last_value: r.f64b()?,
+            completed: r.u64()?,
+            cancelled: r.u64()?,
+            timed_out: r.u64()?,
+            failed: r.u64()?,
+            requeues: r.u64()?,
+            node_failures: r.u64()?,
+            node_recoveries: r.u64()?,
+            passes: r.u64()?,
+            started: r.u64()?,
+            rejected: r.u64()?,
+            events: r.u64()?,
+            live_jobs_peak: r.u64()?,
+        })
+    }
+
     /// Mean utilization over `[0, now]`.
     pub fn mean_utilization(&self, now: Time) -> f64 {
         if now <= 0 {
@@ -100,6 +169,37 @@ mod tests {
         m.note_live_jobs(3);
         m.note_live_jobs(7);
         assert_eq!(m.live_jobs_peak, 10);
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_exact() {
+        let mut m = Metrics::new();
+        m.bg_wait.add(12.5);
+        m.bg_wait.add(400.0);
+        m.fg_wait.add(3.0);
+        m.sample_utilization(0, 0.8);
+        m.sample_utilization(100, 0.3);
+        m.completed = 7;
+        m.requeues = 2;
+        m.events = 991;
+        m.note_live_jobs(55);
+        let mut w = SnapWriter::new();
+        m.snap_write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let back = Metrics::snap_read(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.bg_wait.count(), 2);
+        assert_eq!(back.bg_wait.mean().to_bits(), m.bg_wait.mean().to_bits());
+        assert_eq!(back.fg_wait.mean(), 3.0);
+        assert_eq!(
+            back.mean_utilization(200).to_bits(),
+            m.mean_utilization(200).to_bits()
+        );
+        assert_eq!(
+            (back.completed, back.requeues, back.events, back.live_jobs_peak),
+            (7, 2, 991, 55)
+        );
     }
 
     #[test]

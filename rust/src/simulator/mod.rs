@@ -20,6 +20,10 @@
 //! * [`trace`] — synthetic background-workload generation (per-system mix).
 //! * [`sim`] — the [`sim::Simulator`] façade driving all of the above.
 //! * [`metrics`] — queue/utilization observability.
+//! * [`snapshot`] — versioned whole-simulator snapshots with deterministic
+//!   resume (DESIGN.md §12).
+//! * [`eventlog`] — append-only observable-event logs: record, replay to a
+//!   point, bisect two logs for their first divergence.
 
 pub mod event;
 pub mod job;
@@ -28,10 +32,12 @@ pub mod cluster;
 pub mod fairshare;
 pub mod fault;
 pub mod slurm;
+pub mod snapshot;
 pub mod trace;
 pub mod sim;
 pub mod metrics;
 pub mod config;
+pub mod eventlog;
 
 pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use job::{

@@ -158,68 +158,76 @@ pub enum SchedEngine {
 }
 
 /// The discrete-event cluster simulator.
+///
+/// Fields are `pub(crate)` for the snapshot module (`snapshot.rs`), which
+/// serializes and restores the full logical state; external code goes
+/// through the accessor API.
 pub struct Simulator {
-    cfg: SystemConfig,
-    engine: SchedEngine,
-    now: Time,
-    events: EventQueue,
+    pub(crate) cfg: SystemConfig,
+    pub(crate) engine: SchedEngine,
+    pub(crate) now: Time,
+    pub(crate) events: EventQueue,
     /// Recycling generational job arena (scan/hot/cold split; see `store`).
-    store: JobStore,
+    pub(crate) store: JobStore,
     /// Per-partition pending queues, indexed by partition id. Partition
     /// membership is derived exactly once — when a job enters its queue —
     /// so the scheduling pass never re-buckets candidates. Incremental
     /// engine: jobs eligible to schedule right now (dependency satisfied).
     /// Naive oracle: every Pending job, dependency-held or not.
-    queues: Vec<Vec<JobId>>,
+    pub(crate) queues: Vec<Vec<JobId>>,
     /// Number of dependency-parked jobs (incremental engine only; the
     /// naive oracle keeps them inside the partition queues).
-    held_count: usize,
+    pub(crate) held_count: usize,
     /// Reverse-dependency index: parent → children waiting on its
     /// completion (one entry per dependency occurrence). Turns
     /// `cancel_broken_dependents` and completion wakeups into O(children)
     /// lookups instead of O(pending) scans. Entries are pruned eagerly
     /// when a parked child is cancelled.
-    dep_children: FxHashMap<JobId, Vec<JobId>>,
+    pub(crate) dep_children: FxHashMap<JobId, Vec<JobId>>,
     /// Future `--begin` release times, earliest first. Entries are removed
     /// eagerly when the parked job is cancelled (and on promotion), so the
     /// set only ever holds live parked jobs.
-    begin_set: BTreeSet<(Time, JobId)>,
+    pub(crate) begin_set: BTreeSet<(Time, JobId)>,
     /// The machine: one [`crate::simulator::cluster::Cluster`] per
     /// partition; the scheduling pass and EASY shadow run per partition.
-    cluster: Partitions,
+    pub(crate) cluster: Partitions,
     /// Partition descriptors in partition-id order (single anonymous entry
     /// on unpartitioned systems), resolved once at construction.
-    parts_cfg: Vec<PartitionSpec>,
-    fairshare: FairShare,
-    trace: Option<BackgroundWorkload>,
-    out: VecDeque<SimEvent>,
+    pub(crate) parts_cfg: Vec<PartitionSpec>,
+    pub(crate) fairshare: FairShare,
+    pub(crate) trace: Option<BackgroundWorkload>,
+    pub(crate) out: VecDeque<SimEvent>,
     pub metrics: Metrics,
-    need_pass: bool,
+    pub(crate) need_pass: bool,
     /// Reusable per-partition candidate buffers for the scheduling pass.
-    cand_bufs: Vec<Vec<Candidate>>,
+    /// Transient scratch — not part of a snapshot.
+    pub(crate) cand_bufs: Vec<Vec<Candidate>>,
     /// Reusable sort/merge buffers for the scheduling pass (serial path).
-    scratch: PassScratch,
+    /// Transient scratch — not part of a snapshot.
+    pub(crate) scratch: PassScratch,
     /// Worker threads for the parallel per-partition pass (`1` pins the
     /// serial path). Resolved once at construction from `ASA_THREADS` /
     /// available parallelism; override with
     /// [`Simulator::set_pass_threads`].
-    pass_threads: usize,
+    pub(crate) pass_threads: usize,
     /// Per-worker [`PassScratch`] pool for the parallel pass — one buffer
     /// set per busy partition, reused across passes so the parallel
     /// steady state stays allocation-free just like the serial one.
-    scratch_pool: Vec<PassScratch>,
+    /// Transient scratch — not part of a snapshot.
+    pub(crate) scratch_pool: Vec<PassScratch>,
     /// Reusable buffer for one tick's drained events (see `advance_tick`).
-    tick_batch: Vec<EventKind>,
+    /// Transient scratch — not part of a snapshot.
+    pub(crate) tick_batch: Vec<EventKind>,
     /// Per-partition drain flags (maintenance windows): a drained
     /// partition starts nothing but keeps running jobs and queues
     /// submissions.
-    drained: Vec<bool>,
+    pub(crate) drained: Vec<bool>,
     /// Installed capacity-event schedule, replayed through the event heap
     /// via chained `EventKind::Fault` entries (empty plan ⇒ zero entries).
-    fault_plan: FaultPlan,
+    pub(crate) fault_plan: FaultPlan,
     /// Foreground users already seeded with pre-existing usage.
-    seeded_users: FxHashSet<u32>,
-    usage_rng: Rng,
+    pub(crate) seeded_users: FxHashSet<u32>,
+    pub(crate) usage_rng: Rng,
 }
 
 impl Simulator {
@@ -433,6 +441,12 @@ impl Simulator {
     /// Approximate heap footprint of the simulation state: job arena +
     /// symbol table + fair-share ledger + scheduler queues. Meant as a
     /// boundedness gauge for long-horizon runs, not an exact RSS figure.
+    ///
+    /// Counts lengths, not capacities, and skips the transient pass
+    /// scratch (candidate buffers, sort/merge pools): the estimate is a
+    /// pure function of logical simulation state, so a snapshot-restored
+    /// simulator — whose buffer capacities and warm scratch differ —
+    /// reports the same figure as the original.
     pub fn memory_bytes_estimate(&self) -> usize {
         use std::mem::size_of;
         self.store.bytes_estimate()
@@ -440,24 +454,13 @@ impl Simulator {
             + self
                 .queues
                 .iter()
-                .map(|q| q.capacity() * size_of::<JobId>())
-                .sum::<usize>()
-            + self
-                .cand_bufs
-                .iter()
-                .map(|b| b.capacity() * size_of::<Candidate>())
-                .sum::<usize>()
-            + self.scratch.bytes_estimate()
-            + self
-                .scratch_pool
-                .iter()
-                .map(PassScratch::bytes_estimate)
+                .map(|q| q.len() * size_of::<JobId>())
                 .sum::<usize>()
             + self.begin_set.len() * size_of::<(Time, JobId)>()
             + self
                 .dep_children
                 .values()
-                .map(|v| v.capacity() * size_of::<JobId>() + 48)
+                .map(|v| v.len() * size_of::<JobId>() + 48)
                 .sum::<usize>()
             + self.events.len() * 40
     }

@@ -1,0 +1,714 @@
+//! Versioned whole-simulator snapshots with deterministic resume.
+//!
+//! A snapshot serializes *every* piece of mutable simulator state — the job
+//! arena (including free-list order and recycled generations), the event
+//! heap, per-partition clusters, the fair-share ledger, the background-trace
+//! generator (RNG stream included), the fault plan, and all metrics — into a
+//! hand-rolled length-prefixed binary buffer. Restoring the buffer into a
+//! fresh `Simulator` and continuing the run produces a byte-identical event
+//! stream and metrics versus the uninterrupted run, at any `ASA_THREADS`
+//! setting (worker threads never touch the RNG or event order; see
+//! DESIGN.md §9).
+//!
+//! ## Canonical encoding
+//!
+//! The encoding is *canonical*: hash-map content is written sorted by key,
+//! the event heap is written as its live entries sorted by `(time, seq)`,
+//! and dead sample tombstones are filtered out at save (equivalent to an
+//! eager compaction — pop/peek already skip dead entries, so behavior is
+//! unchanged). Two simulators in identical logical states therefore produce
+//! identical snapshot bytes, which lets tests use snapshot equality as a
+//! determinism oracle.
+//!
+//! ## Format and migration
+//!
+//! Every snapshot starts with an 8-byte magic, a `u32` format version, and a
+//! config fingerprint (system name, partition count, total cores, engine).
+//! [`read_header`] funnels old versions through [`migrate`], the single
+//! place a future format bump adds an upgrade path; versions newer than the
+//! build are rejected with a clear error instead of misparsed.
+
+use crate::simulator::cluster::Partitions;
+use crate::simulator::event::EventQueue;
+use crate::simulator::fairshare::FairShare;
+use crate::simulator::fault::FaultPlan;
+use crate::simulator::job::JobId;
+use crate::simulator::metrics::Metrics;
+use crate::simulator::sim::{SchedEngine, SimEvent, Simulator};
+use crate::simulator::store::JobStore;
+use crate::simulator::trace::BackgroundWorkload;
+use crate::simulator::SystemConfig;
+use crate::util::rng::Rng;
+use crate::{Cores, Time};
+
+/// Magic prefix of every simulator snapshot.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"ASASNAP\x01";
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Writer / reader
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian binary writer. All multi-byte integers are
+/// fixed-width LE; strings and byte blobs are `u64` length-prefixed.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> SnapWriter {
+        SnapWriter { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u128` as two LE `u64` words (low, high).
+    pub fn u128(&mut self, v: u128) {
+        self.u64(v as u64);
+        self.u64((v >> 64) as u64);
+    }
+
+    /// `f64` as its exact bit pattern (NaN payloads and ±∞ survive).
+    pub fn f64b(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn usz(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Raw bytes, no length prefix (for magics).
+    pub fn raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed byte blob.
+    pub fn blob(&mut self, b: &[u8]) {
+        self.usz(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.blob(s.as_bytes());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over a snapshot buffer; every accessor is bounds-checked and
+/// returns a descriptive error instead of panicking on truncated input.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> SnapReader<'a> {
+        SnapReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> Result<u128, String> {
+        let lo = self.u64()? as u128;
+        let hi = self.u64()? as u128;
+        Ok(lo | (hi << 64))
+    }
+
+    pub fn f64b(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn usz(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("length {v} overflows usize"))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("invalid bool byte {b}")),
+        }
+    }
+
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8], String> {
+        self.take(n)
+    }
+
+    pub fn blob(&mut self) -> Result<&'a [u8], String> {
+        let n = self.usz()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let b = self.blob()?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("invalid UTF-8 in snapshot: {e}"))
+    }
+
+    /// Error if any bytes remain unconsumed — catches format drift early.
+    pub fn expect_end(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "snapshot has {} trailing bytes at offset {}",
+                self.buf.len() - self.pos,
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Header / versioning
+// ---------------------------------------------------------------------------
+
+/// Write the snapshot magic + version header.
+pub fn write_header(w: &mut SnapWriter) {
+    w.raw(SNAPSHOT_MAGIC);
+    w.u32(SNAPSHOT_VERSION);
+}
+
+/// Parse and validate the header; returns the (possibly migrated) version.
+pub fn read_header(r: &mut SnapReader) -> Result<u32, String> {
+    let magic = r.raw(8)?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err("not an ASA snapshot (bad magic)".into());
+    }
+    migrate(r.u32()?)
+}
+
+/// Version-migration hook. Old formats get an upgrade arm here (rewriting
+/// the reader's interpretation, not the bytes); formats newer than this
+/// build are rejected loudly.
+fn migrate(version: u32) -> Result<u32, String> {
+    match version {
+        SNAPSHOT_VERSION => Ok(version),
+        v if v > SNAPSHOT_VERSION => Err(format!(
+            "snapshot version {v} is newer than this build supports ({SNAPSHOT_VERSION})"
+        )),
+        // No historical versions exist yet; the first format bump adds
+        // `1 => Ok(...)` upgrade arms above this.
+        v => Err(format!("unknown snapshot version {v}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimEvent encoding (the buffered observable-event queue)
+// ---------------------------------------------------------------------------
+
+fn write_sim_event(w: &mut SnapWriter, ev: &SimEvent) {
+    let (tag, id, time) = match *ev {
+        SimEvent::Submitted { id, time } => (0u8, id.0, time),
+        SimEvent::Started { id, time } => (1, id.0, time),
+        SimEvent::Finished { id, time } => (2, id.0, time),
+        SimEvent::Cancelled { id, time } => (3, id.0, time),
+        SimEvent::TimedOut { id, time } => (4, id.0, time),
+        SimEvent::Requeued { id, time } => (5, id.0, time),
+        SimEvent::Failed { id, time } => (6, id.0, time),
+        SimEvent::Wake { tag, time } => (7, tag, time),
+    };
+    w.u8(tag);
+    w.u64(id);
+    w.i64(time);
+}
+
+fn read_sim_event(r: &mut SnapReader) -> Result<SimEvent, String> {
+    let tag = r.u8()?;
+    let word = r.u64()?;
+    let time = r.i64()?;
+    let id = JobId(word);
+    Ok(match tag {
+        0 => SimEvent::Submitted { id, time },
+        1 => SimEvent::Started { id, time },
+        2 => SimEvent::Finished { id, time },
+        3 => SimEvent::Cancelled { id, time },
+        4 => SimEvent::TimedOut { id, time },
+        5 => SimEvent::Requeued { id, time },
+        6 => SimEvent::Failed { id, time },
+        7 => SimEvent::Wake { tag: word, time },
+        t => return Err(format!("unknown SimEvent tag {t}")),
+    })
+}
+
+fn engine_tag(engine: SchedEngine) -> u8 {
+    match engine {
+        SchedEngine::Incremental => 0,
+        SchedEngine::Naive => 1,
+    }
+}
+
+fn engine_from_tag(tag: u8) -> Result<SchedEngine, String> {
+    match tag {
+        0 => Ok(SchedEngine::Incremental),
+        1 => Ok(SchedEngine::Naive),
+        t => Err(format!("unknown SchedEngine tag {t}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-simulator snapshot
+// ---------------------------------------------------------------------------
+
+impl Simulator {
+    /// Serialize the full logical simulator state into a canonical,
+    /// versioned byte buffer. Transient pass scratch (candidate buffers,
+    /// sort/merge pools, worker-thread count) is deliberately excluded —
+    /// it never influences the event stream, only throughput.
+    ///
+    /// Two simulators in identical logical states produce identical bytes,
+    /// so snapshot equality doubles as a determinism oracle in tests.
+    pub fn save_snapshot(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        write_header(&mut w);
+        // Config fingerprint: enough to refuse a restore against the wrong
+        // machine (the full config travels out of band — `&'static str`
+        // names cannot be deserialized into presets).
+        w.str(self.cfg.name);
+        w.usz(self.parts_cfg.len());
+        w.u32(self.cfg.total_cores());
+        w.u8(engine_tag(self.engine));
+
+        w.i64(self.now);
+        w.bool(self.need_pass);
+        w.usz(self.held_count);
+        self.events.snap_write(&mut w);
+        self.store.snap_write(&mut w);
+
+        w.usz(self.queues.len());
+        for q in &self.queues {
+            w.usz(q.len());
+            for id in q {
+                w.u64(id.0);
+            }
+        }
+
+        let mut parents: Vec<&JobId> = self.dep_children.keys().collect();
+        parents.sort_by_key(|p| p.0);
+        w.usz(parents.len());
+        for p in parents {
+            w.u64(p.0);
+            let children = &self.dep_children[p];
+            w.usz(children.len());
+            for c in children {
+                w.u64(c.0);
+            }
+        }
+
+        w.usz(self.begin_set.len());
+        for &(t, id) in &self.begin_set {
+            w.i64(t);
+            w.u64(id.0);
+        }
+
+        self.cluster.snap_write(&mut w);
+
+        // Partition descriptors: numeric fields only. `max_time_limit` is
+        // runtime-mutable (`set_partition_max_time`); names are validated
+        // against the caller-supplied config on restore.
+        w.usz(self.parts_cfg.len());
+        for p in &self.parts_cfg {
+            w.u32(p.nodes);
+            w.u32(p.cores_per_node);
+            w.i64(p.max_time_limit);
+            w.f64b(p.trace_share);
+        }
+
+        self.fairshare.snap_write(&mut w);
+
+        w.bool(self.trace.is_some());
+        if let Some(tr) = &self.trace {
+            tr.snap_write(&mut w);
+        }
+
+        w.usz(self.out.len());
+        for ev in &self.out {
+            write_sim_event(&mut w, ev);
+        }
+
+        self.metrics.snap_write(&mut w);
+
+        w.usz(self.drained.len());
+        for &d in &self.drained {
+            w.bool(d);
+        }
+
+        self.fault_plan.snap_write(&mut w);
+
+        let mut seeded: Vec<u32> = self.seeded_users.iter().copied().collect();
+        seeded.sort_unstable();
+        w.usz(seeded.len());
+        for u in seeded {
+            w.u32(u);
+        }
+
+        let (state, inc) = self.usage_rng.snap_state();
+        w.u128(state);
+        w.u128(inc);
+        w.into_bytes()
+    }
+
+    /// Rebuild a simulator from snapshot bytes and the matching system
+    /// config. The config travels out of band because preset names are
+    /// `&'static str`; the snapshot's fingerprint (system name, partition
+    /// count, total configured cores, engine) guards against restoring
+    /// into the wrong machine.
+    ///
+    /// The restored simulator continues the run bit-identically to the one
+    /// that was saved — same observable event stream, same metrics, same
+    /// RNG draws — at any pass-thread count.
+    pub fn restore_snapshot(bytes: &[u8], cfg: SystemConfig) -> Result<Simulator, String> {
+        let mut r = SnapReader::new(bytes);
+        read_header(&mut r)?;
+        let sys_name = r.str()?;
+        if sys_name != cfg.name {
+            return Err(format!(
+                "snapshot is of system {sys_name:?}, not {:?}",
+                cfg.name
+            ));
+        }
+        let part_count = r.usz()?;
+        let resolved = cfg.resolved_partitions();
+        if part_count != resolved.len() {
+            return Err(format!(
+                "snapshot has {part_count} partitions, config has {}",
+                resolved.len()
+            ));
+        }
+        let total_cores = r.u32()?;
+        if total_cores != cfg.total_cores() {
+            return Err(format!(
+                "snapshot machine has {total_cores} cores, config has {}",
+                cfg.total_cores()
+            ));
+        }
+        let engine = engine_from_tag(r.u8()?)?;
+
+        let mut sim = Simulator::new_empty_with_engine(cfg, engine);
+        sim.now = r.i64()?;
+        sim.need_pass = r.bool()?;
+        sim.held_count = r.usz()?;
+        sim.events = EventQueue::snap_read(&mut r)?;
+        sim.store = JobStore::snap_read(&mut r)?;
+
+        let nq = r.usz()?;
+        if nq != sim.queues.len() {
+            return Err(format!(
+                "snapshot has {nq} partition queues, config has {}",
+                sim.queues.len()
+            ));
+        }
+        for q in &mut sim.queues {
+            let n = r.usz()?;
+            q.clear();
+            q.reserve(n);
+            for _ in 0..n {
+                q.push(JobId(r.u64()?));
+            }
+        }
+
+        sim.dep_children.clear();
+        let nparents = r.usz()?;
+        for _ in 0..nparents {
+            let parent = JobId(r.u64()?);
+            let nc = r.usz()?;
+            let mut children = Vec::with_capacity(nc);
+            for _ in 0..nc {
+                children.push(JobId(r.u64()?));
+            }
+            sim.dep_children.insert(parent, children);
+        }
+
+        sim.begin_set.clear();
+        let nbegins = r.usz()?;
+        for _ in 0..nbegins {
+            let t = r.i64()?;
+            let id = JobId(r.u64()?);
+            sim.begin_set.insert((t, id));
+        }
+
+        sim.cluster = Partitions::snap_read(&mut r)?;
+        if sim.cluster.len() != sim.queues.len() {
+            return Err("snapshot cluster/queue partition counts disagree".into());
+        }
+
+        let nparts = r.usz()?;
+        if nparts != sim.parts_cfg.len() {
+            return Err("snapshot partition-descriptor count mismatch".into());
+        }
+        for p in &mut sim.parts_cfg {
+            p.nodes = r.u32()?;
+            p.cores_per_node = r.u32()?;
+            p.max_time_limit = r.i64()?;
+            p.trace_share = r.f64b()?;
+        }
+
+        sim.fairshare = FairShare::snap_read(&mut r)?;
+
+        if r.bool()? {
+            // Rebuild the generator's static tables from the config, then
+            // overlay the serialized dynamic state (RNG stream included).
+            let trace_parts: Vec<(Cores, f64)> = sim
+                .parts_cfg
+                .iter()
+                .map(|p| (p.total_cores(), p.trace_share))
+                .collect();
+            let mut tr = BackgroundWorkload::new_partitioned(
+                sim.cfg.workload.clone(),
+                &trace_parts,
+                Rng::new(0),
+            );
+            tr.snap_read(&mut r)?;
+            sim.trace = Some(tr);
+        } else {
+            sim.trace = None;
+        }
+
+        sim.out.clear();
+        let nout = r.usz()?;
+        for _ in 0..nout {
+            sim.out.push_back(read_sim_event(&mut r)?);
+        }
+
+        sim.metrics = Metrics::snap_read(&mut r)?;
+
+        let ndrained = r.usz()?;
+        if ndrained != sim.drained.len() {
+            return Err("snapshot drain-flag count mismatch".into());
+        }
+        for d in &mut sim.drained {
+            *d = r.bool()?;
+        }
+
+        // Set the field directly: `set_fault_plan` would push a fresh
+        // chained `Fault(0)` heap entry, but the in-flight cursor entry
+        // (if any) already travelled inside the event queue.
+        sim.fault_plan = FaultPlan::snap_read(&mut r)?;
+
+        sim.seeded_users.clear();
+        let nseeded = r.usz()?;
+        for _ in 0..nseeded {
+            sim.seeded_users.insert(r.u32()?);
+        }
+
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        sim.usage_rng = Rng::from_snap_state(state, inc);
+        r.expect_end()?;
+        Ok(sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_round_trip_all_primitives() {
+        let mut w = SnapWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 3);
+        w.i64(-12_345_678_901);
+        w.u128(u128::MAX - 9);
+        w.f64b(f64::NEG_INFINITY);
+        w.f64b(1.5e300);
+        w.usz(42);
+        w.bool(true);
+        w.bool(false);
+        w.str("partition/geometry");
+        w.blob(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.i64().unwrap(), -12_345_678_901);
+        assert_eq!(r.u128().unwrap(), u128::MAX - 9);
+        assert_eq!(r.f64b().unwrap(), f64::NEG_INFINITY);
+        assert_eq!(r.f64b().unwrap().to_bits(), 1.5e300f64.to_bits());
+        assert_eq!(r.usz().unwrap(), 42);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "partition/geometry");
+        assert_eq!(r.blob().unwrap(), &[1, 2, 3]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn reader_rejects_truncation_and_trailing_bytes() {
+        let mut w = SnapWriter::new();
+        w.u64(5);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes[..4]);
+        assert!(r.u64().is_err(), "truncated read must fail");
+        let mut r2 = SnapReader::new(&bytes);
+        r2.u32().unwrap();
+        assert!(r2.expect_end().is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn header_round_trip_and_version_gate() {
+        let mut w = SnapWriter::new();
+        write_header(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(read_header(&mut r).unwrap(), SNAPSHOT_VERSION);
+
+        // A future version must be rejected, not misparsed.
+        let mut w2 = SnapWriter::new();
+        w2.raw(SNAPSHOT_MAGIC);
+        w2.u32(SNAPSHOT_VERSION + 1);
+        let b2 = w2.into_bytes();
+        let mut r2 = SnapReader::new(&b2);
+        let err = read_header(&mut r2).unwrap_err();
+        assert!(err.contains("newer"), "{err}");
+
+        let mut r3 = SnapReader::new(b"NOTASNAPxxxx");
+        assert!(read_header(&mut r3).is_err());
+    }
+
+    use crate::simulator::trace::{JobClass, WorkloadProfile};
+    use crate::simulator::{Dependency, JobSpec};
+
+    fn busy_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::testbed(8, 4); // 32 cores
+        cfg.workload = WorkloadProfile {
+            classes: vec![JobClass {
+                weight: 1.0,
+                cores_lo: 4,
+                cores_hi: 16,
+                runtime_mu: 7.0,
+                runtime_sigma: 0.8,
+            }],
+            target_load: 1.1,
+            burstiness: 0.8,
+            regime_period: 0,
+            regime_lo: 1.0,
+            regime_hi: 1.0,
+            user_pool: 8,
+            backlog_factor: 0.5,
+            initial_user_usage: 1e6,
+            max_queued_jobs: 0,
+        };
+        cfg
+    }
+
+    #[test]
+    fn mid_run_snapshot_resumes_bit_identically_under_load_and_faults() {
+        let cfg = busy_cfg();
+        let mut a = Simulator::new(cfg.clone(), 7);
+        a.set_fault_plan(
+            FaultPlan::new()
+                .fail_at(4 * 3600, 0, 8)
+                .recover_at(5 * 3600, 0, 8)
+                .drain_window(0, 6 * 3600, 7 * 3600),
+        );
+        a.submit(JobSpec::new(1, "probe", 8, 120));
+        // Snapshot mid-run with buffered observable events, a pending
+        // fault plan and an oversubscribed queue.
+        a.run_until(3 * 3600);
+        let snap = a.save_snapshot();
+        let mut b = Simulator::restore_snapshot(&snap, cfg).unwrap();
+        a.run_until(12 * 3600);
+        b.run_until(12 * 3600);
+        assert_eq!(a.drain_events(), b.drain_events());
+        assert_eq!(a.metrics.started, b.metrics.started);
+        assert_eq!(a.metrics.node_failures, b.metrics.node_failures);
+        assert_eq!(a.metrics.requeues, b.metrics.requeues);
+        assert_eq!(a.memory_bytes_estimate(), b.memory_bytes_estimate());
+        // Canonical encoding: the resumed and uninterrupted simulators end
+        // in byte-identical snapshots.
+        assert_eq!(a.save_snapshot(), b.save_snapshot());
+    }
+
+    #[test]
+    fn snapshot_carries_dependency_web_queues_and_buffered_events() {
+        let run = |restore_midway: bool| -> (Vec<SimEvent>, Vec<u8>) {
+            let mut sim =
+                Simulator::new_empty(SystemConfig::testbed_partitioned(1, 4));
+            let a = sim.submit(JobSpec::new(1, "a", 4, 100).with_limit(100));
+            let _b = sim.submit(
+                JobSpec::new(2, "b", 4, 50).with_dependency(Dependency::AfterOk(vec![a])),
+            );
+            let _c = sim.submit(
+                JobSpec::new(3, "c", 1, 10).with_dependency(Dependency::BeginAt(400)),
+            );
+            sim.run_until(30); // observable events stay buffered in `out`
+            if restore_midway {
+                let cfg = sim.config().clone();
+                sim = Simulator::restore_snapshot(&sim.save_snapshot(), cfg).unwrap();
+            }
+            let mut evs = sim.drain_events();
+            while let Some(ev) = sim.step() {
+                evs.push(ev);
+            }
+            (evs, sim.save_snapshot())
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_config_and_truncation() {
+        let sim = Simulator::new_empty(SystemConfig::testbed(8, 4));
+        let snap = sim.save_snapshot();
+        let err = Simulator::restore_snapshot(&snap, SystemConfig::testbed(4, 4))
+            .unwrap_err();
+        assert!(err.contains("cores"), "{err}");
+        let err = Simulator::restore_snapshot(&snap, SystemConfig::hpc2n()).unwrap_err();
+        assert!(err.contains("system"), "{err}");
+        assert!(
+            Simulator::restore_snapshot(&snap[..40], SystemConfig::testbed(8, 4)).is_err()
+        );
+    }
+}

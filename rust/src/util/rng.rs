@@ -169,6 +169,18 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.index(items.len())]
     }
+
+    /// Raw generator state `(state, inc)` for checkpointing. Paired with
+    /// [`Rng::from_snap_state`]; the round-trip continues the stream at
+    /// exactly the next output.
+    pub(crate) fn snap_state(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from checkpointed raw state.
+    pub(crate) fn from_snap_state(state: u128, inc: u128) -> Rng {
+        Rng { state, inc }
+    }
 }
 
 #[cfg(test)]
@@ -288,6 +300,19 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn snap_state_round_trip_continues_stream() {
+        let mut a = Rng::new(4242);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (state, inc) = a.snap_state();
+        let mut b = Rng::from_snap_state(state, inc);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -126,6 +126,33 @@ impl Summary {
     pub fn pm(&self, decimals: usize) -> String {
         format!("{:.*}±{:.*}", decimals, self.mean(), decimals, self.std())
     }
+
+    /// Raw accumulator state as exact bit patterns, for checkpointing.
+    /// `min`/`max` hold ±∞ until the first observation, so the snapshot
+    /// layer carries `to_bits` words rather than JSON-unfriendly floats.
+    pub(crate) fn snap_parts(&self) -> (u64, u64, u64, u64, u64, u64) {
+        (
+            self.n,
+            self.mean.to_bits(),
+            self.m2.to_bits(),
+            self.min.to_bits(),
+            self.max.to_bits(),
+            self.total.to_bits(),
+        )
+    }
+
+    /// Rebuild an accumulator from [`Summary::snap_parts`] output,
+    /// bit-exact including the empty-summary ±∞ sentinels.
+    pub(crate) fn from_snap_parts(parts: (u64, u64, u64, u64, u64, u64)) -> Summary {
+        Summary {
+            n: parts.0,
+            mean: f64::from_bits(parts.1),
+            m2: f64::from_bits(parts.2),
+            min: f64::from_bits(parts.3),
+            max: f64::from_bits(parts.4),
+            total: f64::from_bits(parts.5),
+        }
+    }
 }
 
 /// Percentile of a slice (linear interpolation, `q` in [0,1]).
@@ -233,6 +260,24 @@ mod tests {
         // q outside [0,1] clamps instead of indexing out of bounds.
         assert_eq!(percentile(&[1.0, 2.0], -3.0), 1.0);
         assert_eq!(percentile(&[1.0, 2.0], 42.0), 2.0);
+    }
+
+    #[test]
+    fn snap_parts_round_trip_is_bit_exact() {
+        // Empty summary: the ±∞ min/max sentinels must survive so that
+        // the first post-restore `add` still initialises min/max.
+        let empty = Summary::new();
+        let mut back = Summary::from_snap_parts(empty.snap_parts());
+        back.add(4.0);
+        assert_eq!((back.min(), back.max()), (4.0, 4.0));
+        // Populated summary: every accessor agrees bit-for-bit.
+        let s = Summary::of(&[2.0, 4.0, 4.0, 5.0, 9.0]);
+        let r = Summary::from_snap_parts(s.snap_parts());
+        assert_eq!(s.count(), r.count());
+        assert_eq!(s.mean().to_bits(), r.mean().to_bits());
+        assert_eq!(s.variance().to_bits(), r.variance().to_bits());
+        assert_eq!(s.total().to_bits(), r.total().to_bits());
+        assert_eq!((s.min(), s.max()), (r.min(), r.max()));
     }
 
     #[test]

@@ -183,63 +183,75 @@ enum ScriptDep {
     BeginDelay(Time),
 }
 
+/// Execute one scripted action. `ids` and `events` live *outside* the
+/// simulator, so a caller may swap `sim` for a snapshot-restored instance
+/// between actions — earlier JobIds stay valid across the swap (the arena
+/// is serialized index-for-index).
+fn apply_oracle_action(
+    sim: &mut Simulator,
+    ids: &mut Vec<JobId>,
+    events: &mut Vec<SimEvent>,
+    action: &OracleAction,
+) {
+    match action {
+        OracleAction::RunUntil(t) => {
+            sim.run_until(*t);
+            events.extend(sim.drain_events());
+        }
+        OracleAction::Submit {
+            user,
+            cores,
+            runtime,
+            limit,
+            dep,
+            part,
+            retry,
+        } => {
+            let mut spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
+                .with_limit(*limit)
+                .with_partition(PartitionId(*part));
+            if let Some((max_retries, backoff)) = retry {
+                spec = spec.with_retry(RetryPolicy {
+                    max_retries: *max_retries,
+                    backoff: *backoff,
+                });
+            }
+            match dep {
+                Some(ScriptDep::AfterOk(parents)) => {
+                    spec = spec.with_dependency(Dependency::AfterOk(
+                        parents.iter().map(|&i| ids[i]).collect(),
+                    ));
+                }
+                Some(ScriptDep::BeginDelay(d)) => {
+                    spec = spec.with_dependency(Dependency::BeginAt(sim.now() + d));
+                }
+                None => {}
+            }
+            ids.push(sim.submit(spec));
+        }
+        OracleAction::SubmitAt {
+            delay,
+            user,
+            cores,
+            runtime,
+            part,
+        } => {
+            let spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
+                .with_partition(PartitionId(*part));
+            ids.push(sim.submit_at(sim.now() + delay, spec));
+        }
+        OracleAction::Cancel(idx) => {
+            sim.cancel(ids[*idx]);
+            events.extend(sim.drain_events());
+        }
+    }
+}
+
 fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimEvent> {
     let mut ids: Vec<JobId> = Vec::new();
     let mut events: Vec<SimEvent> = Vec::new();
     for action in script {
-        match action {
-            OracleAction::RunUntil(t) => {
-                sim.run_until(*t);
-                events.extend(sim.drain_events());
-            }
-            OracleAction::Submit {
-                user,
-                cores,
-                runtime,
-                limit,
-                dep,
-                part,
-                retry,
-            } => {
-                let mut spec =
-                    JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
-                        .with_limit(*limit)
-                        .with_partition(PartitionId(*part));
-                if let Some((max_retries, backoff)) = retry {
-                    spec = spec.with_retry(RetryPolicy {
-                        max_retries: *max_retries,
-                        backoff: *backoff,
-                    });
-                }
-                match dep {
-                    Some(ScriptDep::AfterOk(parents)) => {
-                        spec = spec.with_dependency(Dependency::AfterOk(
-                            parents.iter().map(|&i| ids[i]).collect(),
-                        ));
-                    }
-                    Some(ScriptDep::BeginDelay(d)) => {
-                        spec = spec.with_dependency(Dependency::BeginAt(sim.now() + d));
-                    }
-                    None => {}
-                }
-                ids.push(sim.submit(spec));
-            }
-            OracleAction::SubmitAt {
-                delay,
-                user,
-                cores,
-                runtime,
-                part,
-            } => {
-                let spec = JobSpec::new(*user, format!("s{}", ids.len()), *cores, *runtime)
-                    .with_partition(PartitionId(*part));
-                ids.push(sim.submit_at(sim.now() + delay, spec));
-            }
-            OracleAction::Cancel(idx) => {
-                sim.cancel(ids[*idx]);
-                events.extend(sim.drain_events());
-            }
-        }
+        apply_oracle_action(sim, &mut ids, &mut events, action);
     }
     // Drain to quiescence (no background trace: the heap empties).
     while let Some(ev) = sim.step() {
@@ -374,6 +386,10 @@ fn run_faulty_oracle_script_threads(
     }
     sim.set_fault_plan(plan);
     let events = apply_oracle_script(&mut sim, script);
+    oracle_fingerprint(&sim, events)
+}
+
+fn oracle_fingerprint(sim: &Simulator, events: Vec<SimEvent>) -> OracleFingerprint {
     let m = &sim.metrics;
     (
         events,
@@ -389,6 +405,50 @@ fn run_faulty_oracle_script_threads(
         m.failed,
         m.requeues,
     )
+}
+
+/// Like [`run_faulty_oracle_script_threads`], but crash-and-resume: after
+/// `split` actions the simulator is serialized, dropped, and restored from
+/// the snapshot bytes (optionally with a different scheduling-pass thread
+/// count), then the rest of the script runs on the restored instance. The
+/// fingerprint must equal the uninterrupted run's exactly.
+fn run_snapshotted_oracle(
+    cfg: &SystemConfig,
+    threads: usize,
+    resume_threads: usize,
+    plan: FaultPlan,
+    script: &[OracleAction],
+    split: usize,
+) -> OracleFingerprint {
+    let mut sim = Simulator::new_empty_with_engine(cfg.clone(), SchedEngine::Incremental);
+    if threads > 0 {
+        sim.set_pass_threads(threads);
+    }
+    sim.set_fault_plan(plan);
+    let mut ids: Vec<JobId> = Vec::new();
+    let mut events: Vec<SimEvent> = Vec::new();
+    for (i, action) in script.iter().enumerate() {
+        apply_oracle_action(&mut sim, &mut ids, &mut events, action);
+        if i + 1 == split {
+            let snap = sim.save_snapshot();
+            sim = Simulator::restore_snapshot(&snap, cfg.clone())
+                .expect("mid-script snapshot must restore");
+            // The snapshot encoding is canonical: re-serializing the
+            // restored simulator reproduces the bytes exactly.
+            assert_eq!(
+                snap,
+                sim.save_snapshot(),
+                "restore must round-trip to identical snapshot bytes"
+            );
+            if resume_threads > 0 {
+                sim.set_pass_threads(resume_threads);
+            }
+        }
+    }
+    while let Some(ev) = sim.step() {
+        events.push(ev);
+    }
+    oracle_fingerprint(&sim, events)
 }
 
 #[test]
@@ -707,6 +767,93 @@ fn prop_faulty_cluster_matches_naive_oracle() {
         let serial = run(SchedEngine::Incremental, 1);
         let par = run(SchedEngine::Incremental, 4);
         assert_eq!(serial, par, "script: {script:?}\nplan: {plan:?}");
+    });
+}
+
+#[test]
+fn prop_snapshot_resume_is_bit_identical() {
+    // The crash-recovery tentpole property: snapshotting after a random
+    // script prefix — fault plans mid-flight, requeued jobs, dependency
+    // cascades and all — then restoring and finishing the script must
+    // reproduce the uninterrupted run's observable event stream and
+    // metrics bit-for-bit, at 1 and 4 scheduling-pass threads, and even
+    // when the resume changes the thread count (the snapshot carries no
+    // execution-strategy state).
+    check("snapshot/resume == uninterrupted", 25, |g| {
+        let nodes = g.u32(2, 8);
+        let cpn = g.u32(1, 6);
+        let n_parts = g.u32(1, 2);
+        let script = gen_oracle_script(g, nodes * cpn, n_parts);
+        let plan = gen_fault_plan(g, nodes * cpn, n_parts);
+        let split = g.usize(1, script.len());
+        let cfg = testbed_parts(nodes, cpn, n_parts);
+        for threads in [1usize, 4] {
+            let reference = run_faulty_oracle_script_threads(
+                cfg.clone(),
+                SchedEngine::Incremental,
+                threads,
+                plan.clone(),
+                &script,
+            );
+            let resumed =
+                run_snapshotted_oracle(&cfg, threads, threads, plan.clone(), &script, split);
+            assert_eq!(
+                reference, resumed,
+                "threads {threads}, split {split}, script: {script:?}\nplan: {plan:?}"
+            );
+        }
+        // Serial run, resumed with 4 workers: still the serial stream.
+        let reference = run_faulty_oracle_script_threads(
+            cfg.clone(),
+            SchedEngine::Incremental,
+            1,
+            plan.clone(),
+            &script,
+        );
+        let rethreaded = run_snapshotted_oracle(&cfg, 1, 4, plan, &script, split);
+        assert_eq!(
+            reference, rethreaded,
+            "1->4-thread resume, split {split}, script: {script:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_snapshot_resume_under_background_trace_with_recycled_ids() {
+    // Crash recovery under a live background trace: the snapshot lands
+    // mid-churn, after arena slots have been recycled and with trace
+    // arrivals still pending, and the restored simulator must replay the
+    // remaining stream (recycled JobIds embedded in it) exactly. The
+    // final canonical snapshot bytes must also match — end-state
+    // equality, not just stream equality.
+    check("snapshot resume under background trace", 4, |g| {
+        let seed = g.rng().next_u64();
+        let horizon = 4 * 3600 + g.i64(0, 2 * 3600);
+        let snap_at = g.i64(600, 3 * 3600);
+        let cfg = SystemConfig::testbed(16, 4);
+        let submit_probes = |sim: &mut Simulator| -> JobId {
+            sim.submit_at(200, JobSpec::new(2, "late", 4, 300));
+            sim.submit(JobSpec::new(1, "probe", 8, 120))
+        };
+        // Uninterrupted reference.
+        let mut reference = Simulator::new(cfg.clone(), seed);
+        let ref_probe = submit_probes(&mut reference);
+        reference.run_until(horizon);
+        assert!(reference.jobs_recycled() > 0, "bg churn must recycle arena slots");
+        // Interrupted twin: serialize at snap_at, drop, restore, finish.
+        let mut first = Simulator::new(cfg.clone(), seed);
+        let probe = submit_probes(&mut first);
+        assert_eq!(probe, ref_probe);
+        first.run_until(snap_at);
+        let snap = first.save_snapshot();
+        drop(first);
+        let mut resumed =
+            Simulator::restore_snapshot(&snap, cfg).expect("mid-trace snapshot must restore");
+        resumed.run_until(horizon);
+        assert_eq!(reference.drain_events(), resumed.drain_events());
+        assert_eq!(reference.job(ref_probe).state, resumed.job(probe).state);
+        assert_eq!(reference.jobs_recycled(), resumed.jobs_recycled());
+        assert_eq!(reference.save_snapshot(), resumed.save_snapshot());
     });
 }
 
