@@ -1,0 +1,86 @@
+//! `asa-lint` — the repo's determinism / crash-safety lint, as a CI
+//! gate. Walks `rust/src`, applies the rules in [`asa::lint::rules`],
+//! filters vetted exceptions through the repo-root `lint.allow`, and
+//! prints `path:line: [rule] message` for everything left.
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use asa::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut list_rules = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("asa-lint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => list_rules = true,
+            "--help" | "-h" => {
+                println!("usage: asa-lint [--root <repo-root>] [--list-rules]");
+                println!("exit codes: 0 = clean, 1 = violations, 2 = usage or I/O error");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("asa-lint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if list_rules {
+        for r in lint::RULES {
+            println!("{:<16} {}", r.name, r.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let diags = match lint::lint_repo(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("asa-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let allow = match lint::load_allowlist(&root) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("asa-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let res = allow.apply(diags);
+
+    // Stale allowlist entries are warnings, not failures: line numbers
+    // drift as files are edited, and a warning is enough to prompt a
+    // cleanup without blocking unrelated work.
+    for e in &res.unused {
+        eprintln!(
+            "asa-lint: warning: lint.allow:{} matches nothing (stale entry: {} {})",
+            e.source_line, e.rule, e.path
+        );
+    }
+
+    if res.remaining.is_empty() {
+        println!(
+            "asa-lint: clean ({} rules, {} vetted exception(s) suppressed)",
+            lint::RULES.len(),
+            res.suppressed.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for d in &res.remaining {
+            println!("{d}");
+        }
+        println!("asa-lint: {} violation(s)", res.remaining.len());
+        ExitCode::from(1)
+    }
+}

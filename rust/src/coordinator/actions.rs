@@ -79,7 +79,7 @@ impl ActionGrid {
     }
 
     pub fn max_value(&self) -> Time {
-        *self.values.last().unwrap()
+        *self.values.last().expect("ActionGrid is validated non-empty at construction")
     }
 
     /// Index of the alternative closest to `wait`, in log distance —

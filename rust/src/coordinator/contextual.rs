@@ -117,7 +117,7 @@ impl ContextualEstimator {
         if slot.is_none() {
             *slot = Some(AsaEstimator::new(self.cfg.clone()));
         }
-        slot.as_mut().unwrap()
+        slot.as_mut().expect("slot populated above")
     }
 
     /// Sample a waiting-time action for the current queue state.

@@ -8,8 +8,8 @@
 //! elasticity features §3.1 describes.
 
 use crate::simulator::JobId;
+use crate::util::hash::FxHashMap;
 use crate::Cores;
-use std::collections::HashMap;
 
 /// Task identifier within the pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -43,8 +43,8 @@ struct Alloc {
 /// The unified view over all live allocations of one application.
 #[derive(Debug, Default)]
 pub struct ResourcePool {
-    allocs: HashMap<JobId, Alloc>,
-    tasks: HashMap<TaskId, Task>,
+    allocs: FxHashMap<JobId, Alloc>,
+    tasks: FxHashMap<TaskId, Task>,
     queue: Vec<TaskId>,
     next_task: u64,
 }

@@ -98,7 +98,7 @@ pub fn probe_geometry(
     // of earlier ones. A probe is cancelled the moment it starts (its wait
     // is the measurement); otherwise 60 peak-geometry allocations would
     // stack up and measure their own self-induced congestion.
-    let mut pending: std::collections::HashMap<crate::simulator::JobId, (usize, Time)> =
+    let mut pending: crate::util::hash::FxHashMap<crate::simulator::JobId, (usize, Time)> =
         Default::default();
     let t0 = sim.now();
     let mut done = 0usize;

@@ -281,7 +281,7 @@ pub fn table1(cells: &[Cell]) -> Table {
     }
     for wf in ["montage", "blast", "statistics"] {
         // Collect per-strategy relative overheads for the normalized rows.
-        let mut rel: std::collections::HashMap<&str, Vec<[f64; 3]>> = Default::default();
+        let mut rel: crate::util::hash::FxHashMap<&str, Vec<[f64; 3]>> = Default::default();
         for &(sys, scale) in &scalings {
             // Best value per metric across strategies at this scaling.
             let find = |strat: &str| {

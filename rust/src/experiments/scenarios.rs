@@ -84,6 +84,9 @@ fn run_checkpointed(sim: &mut Simulator, horizon: Time) -> Result<(), String> {
     let snap = sim.save_snapshot();
     let mut resumed = Simulator::restore_snapshot(&snap, sim.cfg.clone())
         .map_err(|e| format!("midpoint restore: {e}"))?;
+    resumed
+        .audit()
+        .map_err(|e| format!("invariant audit after restore: {e}"))?;
     sim.run_until(horizon);
     resumed.run_until(horizon);
     ensure(
@@ -93,7 +96,8 @@ fn run_checkpointed(sim: &mut Simulator, horizon: Time) -> Result<(), String> {
     ensure(
         sim.save_snapshot() == resumed.save_snapshot(),
         "resumed run ended in a different state than the original",
-    )
+    )?;
+    sim.audit().map_err(|e| format!("invariant audit at horizon: {e}"))
 }
 
 /// Run one named scenario. `Err` carries the first violated invariant.

@@ -32,6 +32,9 @@
 //! * [`util`] — in-tree infrastructure (deterministic RNG, stats, JSON,
 //!   CLI parsing, property-testing and bench harnesses) because the build
 //!   environment is fully offline.
+//! * [`lint`] — `asa-lint`, the repo-specific determinism/crash-safety
+//!   source lint (tokenizer, rule engine, `lint.allow`), shared between
+//!   the `asa-lint` binary and its fixture tests.
 
 pub mod util;
 pub mod simulator;
@@ -39,6 +42,7 @@ pub mod workflow;
 pub mod coordinator;
 pub mod runtime;
 pub mod experiments;
+pub mod lint;
 
 /// Simulation time in whole seconds since the start of an experiment.
 pub type Time = i64;

@@ -1,0 +1,121 @@
+//! The `lint.allow` allowlist: vetted exceptions to `asa-lint` rules.
+//!
+//! Format, one entry per line:
+//!
+//! ```text
+//! <rule> <path> [<line>]  # justification (mandatory)
+//! ```
+//!
+//! Paths are repo-relative with forward slashes. An entry without a
+//! line number suppresses the rule for the whole file — preferred,
+//! since line-pinned entries rot as the file is edited. Blank lines and
+//! lines that are pure comments are ignored. Every entry must carry a
+//! justification comment: an allowlist that does not say *why* an
+//! exception is sound is just a mute button.
+
+use super::Diagnostic;
+
+/// One parsed allowlist entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub line: Option<u32>,
+    pub justification: String,
+    /// 1-based line in `lint.allow`, for unused-entry reporting.
+    pub source_line: u32,
+}
+
+impl AllowEntry {
+    fn matches(&self, d: &Diagnostic) -> bool {
+        self.rule == d.rule && self.path == d.path && self.line.is_none_or(|l| l == d.line)
+    }
+}
+
+/// The parsed allowlist.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+/// The outcome of filtering diagnostics through an allowlist.
+#[derive(Debug, Default)]
+pub struct ApplyResult {
+    /// Diagnostics not covered by any entry — real violations.
+    pub remaining: Vec<Diagnostic>,
+    /// Diagnostics suppressed by an entry.
+    pub suppressed: Vec<Diagnostic>,
+    /// Entries that suppressed nothing (stale — worth pruning).
+    pub unused: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text. Malformed lines and entries missing a
+    /// justification are hard errors: a broken allowlist must never
+    /// silently allow everything (or nothing).
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = (idx + 1) as u32;
+            let (body, comment) = match raw.split_once('#') {
+                Some((b, c)) => (b.trim(), c.trim()),
+                None => (raw.trim(), ""),
+            };
+            if body.is_empty() {
+                continue; // blank or comment-only line
+            }
+            let fields: Vec<&str> = body.split_whitespace().collect();
+            if fields.len() < 2 || fields.len() > 3 {
+                return Err(format!(
+                    "lint.allow:{lineno}: expected `<rule> <path> [<line>]  # why`, got `{raw}`"
+                ));
+            }
+            let line = match fields.get(2) {
+                Some(s) => match s.parse::<u32>() {
+                    Ok(n) => Some(n),
+                    Err(_) => {
+                        return Err(format!(
+                            "lint.allow:{lineno}: line number `{s}` is not an integer"
+                        ));
+                    }
+                },
+                None => None,
+            };
+            if comment.is_empty() {
+                return Err(format!(
+                    "lint.allow:{lineno}: entry has no justification comment (`# why`)"
+                ));
+            }
+            entries.push(AllowEntry {
+                rule: fields[0].to_string(),
+                path: fields[1].to_string(),
+                line,
+                justification: comment.to_string(),
+                source_line: lineno,
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Split `diags` into suppressed and remaining, and report entries
+    /// that matched nothing.
+    pub fn apply(&self, diags: Vec<Diagnostic>) -> ApplyResult {
+        let mut used = vec![false; self.entries.len()];
+        let mut out = ApplyResult::default();
+        for d in diags {
+            match self.entries.iter().position(|e| e.matches(&d)) {
+                Some(i) => {
+                    used[i] = true;
+                    out.suppressed.push(d);
+                }
+                None => out.remaining.push(d),
+            }
+        }
+        for (e, was_used) in self.entries.iter().zip(&used) {
+            if !was_used {
+                out.unused.push(e.clone());
+            }
+        }
+        out
+    }
+}

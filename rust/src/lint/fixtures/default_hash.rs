@@ -1,0 +1,31 @@
+// Fixture for the `default-hash` rule. Flagged lines carry markers; the
+// file is never compiled (see wall_clock.rs for the convention).
+
+use std::collections::HashMap; // LINT: default-hash
+
+pub fn build() -> HashMap<u64, u64> { // LINT: default-hash
+    HashMap::new() // LINT: default-hash
+}
+
+use crate::util::hash::{FxHashMap, FxHashSet};
+
+// The in-tree fixed-seed hashers are the sanctioned maps.
+pub fn fx_build() -> FxHashMap<u64, u64> {
+    FxHashMap::default()
+}
+
+pub fn fx_set() -> FxHashSet<u64> {
+    FxHashSet::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    #[test]
+    fn test_only_maps_are_exempt() {
+        let mut s = HashSet::new();
+        s.insert(1u32);
+        assert!(s.contains(&1));
+    }
+}

@@ -1,0 +1,29 @@
+// Fixture for the `float-cmp` rule. Flagged lines carry markers; the
+// file is never compiled (see wall_clock.rs for the convention).
+
+use std::cmp::Ordering;
+
+pub fn bad(a: f64, b: f64) -> Ordering {
+    a.partial_cmp(&b).unwrap_or(Ordering::Equal) // LINT: float-cmp
+}
+
+// total_cmp is the mandated comparator: total order, NaN included.
+pub fn good(a: f64, b: f64) -> Ordering {
+    a.total_cmp(&b)
+}
+
+pub struct Key(pub u64);
+
+impl PartialOrd for Key {
+    // A `fn partial_cmp` *definition* is Ord plumbing over a non-float
+    // key — not a call site — and must not fire.
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.0.cmp(&other.0))
+    }
+}
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}

@@ -1,0 +1,36 @@
+// Fixture for the `hot-path-panic` rule: linted as if it were one of
+// the five hot-path files (the unit test passes `simulator/sim.rs` as
+// the path). Flagged lines carry markers; the file is never compiled.
+
+pub fn head(ids: &[u64]) -> u64 {
+    let first = ids.first().unwrap(); // LINT: hot-path-panic
+    *first
+}
+
+// An invariant-messaged expect is the sanctioned replacement.
+pub fn head_expected(ids: &[u64]) -> u64 {
+    *ids.first().expect("candidate sets are non-empty by construction")
+}
+
+// Non-panicking unwrap_* variants must not fire.
+pub fn fallback(x: Option<u64>) -> u64 {
+    x.unwrap_or(0)
+}
+
+pub fn later() {
+    todo!() // LINT: hot-path-panic
+}
+
+// ".unwrap() here" in a comment or string must not fire.
+pub fn doc() -> &'static str {
+    "calling .unwrap() in a string"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

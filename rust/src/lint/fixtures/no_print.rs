@@ -1,0 +1,27 @@
+// Fixture for the `no-print` rule. Flagged lines carry markers; the
+// file is never compiled (see wall_clock.rs for the convention).
+
+pub fn chatty(x: u64) {
+    println!("x = {x}"); // LINT: no-print
+    eprintln!("warning: {x}"); // LINT: no-print
+}
+
+use std::io::Write;
+
+// A caller-supplied sink is the sanctioned output path.
+pub fn sink(out: &mut impl Write, x: u64) {
+    writeln!(out, "x = {x}").ok();
+}
+
+// "println!" in a string must not fire.
+pub fn doc() -> &'static str {
+    "println! in a string"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prints_in_tests_are_fine() {
+        println!("debug output from a test");
+    }
+}

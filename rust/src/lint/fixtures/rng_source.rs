@@ -1,0 +1,24 @@
+// Fixture for the `rng-source` rule. Flagged lines carry markers; the
+// file is never compiled (see wall_clock.rs for the convention).
+
+use rand::thread_rng; // LINT: rng-source
+
+pub fn roll() -> u32 {
+    let mut rng = thread_rng(); // LINT: rng-source
+    rng.gen_range(0..6)
+}
+
+pub fn hasher() -> std::collections::hash_map::RandomState { // LINT: rng-source
+    Default::default()
+}
+
+// The in-tree seeded generator is the sanctioned source — `rng` as a
+// plain identifier must not fire.
+pub fn seeded(seed: u64) -> crate::util::rng::Rng {
+    crate::util::rng::Rng::new(seed)
+}
+
+// Mentions in strings are fine: "thread_rng() and rand::random()".
+pub fn doc() -> &'static str {
+    "thread_rng() and rand::random() in a string"
+}

@@ -1,0 +1,17 @@
+// Fixture for the `safety-comment` rule. Flagged lines carry markers;
+// the file is never compiled (see wall_clock.rs for the convention).
+
+pub fn undocumented(p: *const u8) -> u8 {
+    unsafe { *p } // LINT: safety-comment
+}
+
+pub fn documented(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+
+pub fn documented_fn_form(p: *const u8) -> u8 {
+    // SAFETY: forwarding the caller's validity contract.
+    let f = |q: *const u8| unsafe { *q };
+    f(p)
+}

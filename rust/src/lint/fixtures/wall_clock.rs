@@ -1,0 +1,26 @@
+// Fixture for the `wall-clock` rule. Lines that must be flagged carry a
+// `// LINT: wall-clock` marker; everything else must stay clean. This
+// file is not compiled — the walker skips `fixtures/` and no `mod`
+// declares it — it only feeds the lexer in unit tests.
+
+use std::time::Instant; // LINT: wall-clock
+
+pub fn elapsed_secs() -> u64 {
+    let t0 = Instant::now(); // LINT: wall-clock
+    t0.elapsed().as_secs()
+}
+
+pub fn stamp() -> u64 {
+    let _t = std::time::SystemTime::now(); // LINT: wall-clock
+    0
+}
+
+// Comments and strings mentioning Instant::now() must not fire.
+pub fn doc() -> &'static str {
+    "Instant::now() and std::time::SystemTime in a string are fine"
+}
+
+// Simulated time is the sanctioned clock.
+pub fn simulated(now: i64, gap: i64) -> i64 {
+    now + gap
+}

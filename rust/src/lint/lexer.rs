@@ -1,0 +1,352 @@
+//! A minimal Rust lexer for `asa-lint`.
+//!
+//! The lint rules only need a token stream that is faithful about what is
+//! *code* versus what is a comment, string, char literal, or lifetime —
+//! a full parser would be overkill and a `grep` would false-positive on
+//! every doc comment that mentions `unwrap()`. The lexer therefore:
+//!
+//! - strips line and (nested) block comments, remembering which lines
+//!   carried a `SAFETY:` marker for the `safety-comment` rule;
+//! - strips string literals, including raw (`r#"…"#`) and byte forms, so
+//!   rule keywords inside test fixtures or error messages never fire;
+//! - disambiguates char literals (`'a'`, `'\n'`) from lifetimes (`'a`);
+//! - emits identifiers and single-character punctuation with 1-based
+//!   line numbers, which is all the rule engine consumes.
+//!
+//! Numeric literals are consumed and dropped: no rule inspects them.
+
+/// What a [`Token`] is: a word or a single punctuation character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// An identifier or keyword (`unwrap`, `unsafe`, `std`, …).
+    Ident,
+    /// One punctuation character (`.`, `!`, `#`, `[`, `{`, …).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// True when the token is the identifier `word`.
+    pub fn is_ident(&self, word: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == word
+    }
+
+    /// True when the token is the punctuation character `ch`.
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == TokenKind::Punct && self.text.len() == 1 && self.text.starts_with(ch)
+    }
+}
+
+/// The lexer output: the token stream plus the lines on which a
+/// `SAFETY:` comment starts (line or block form).
+#[derive(Debug, Default)]
+pub struct LexOutput {
+    pub tokens: Vec<Token>,
+    pub safety_lines: Vec<u32>,
+}
+
+/// Lex `src` into tokens. Never fails: unterminated literals simply
+/// consume the rest of the input, which is the forgiving behaviour a
+/// linter wants (rustc will report the real error).
+pub fn lex(src: &str) -> LexOutput {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = LexOutput::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => {
+                i += 1;
+            }
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let start = i;
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                if text.contains("SAFETY:") {
+                    out.safety_lines.push(line);
+                }
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                let start_line = line;
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                let text: String = chars[start..i.min(chars.len())].iter().collect();
+                if text.contains("SAFETY:") {
+                    out.safety_lines.push(start_line);
+                }
+            }
+            '"' => {
+                i = skip_string(&chars, i, &mut line);
+            }
+            '\'' => {
+                i = skip_char_or_lifetime(&chars, i, &mut line);
+            }
+            c if c.is_ascii_digit() => {
+                i = skip_number(&chars, i);
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                // String-literal prefixes: r"…", r#"…"#, b"…", br#"…"#,
+                // b'…' — and the raw-identifier prefix r#ident.
+                let next = chars.get(i).copied();
+                let is_str_prefix = matches!(word.as_str(), "r" | "b" | "br" | "rb");
+                if is_str_prefix && next == Some('"') {
+                    i = skip_string(&chars, i, &mut line);
+                } else if is_str_prefix && next == Some('#') {
+                    let mut j = i;
+                    while chars.get(j) == Some(&'#') {
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        i = skip_raw_string(&chars, i, &mut line);
+                    } else if word == "r" {
+                        // Raw identifier r#ident: emit the identifier.
+                        i += 1; // consume '#'
+                        let id_start = i;
+                        while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                            i += 1;
+                        }
+                        out.tokens.push(Token {
+                            kind: TokenKind::Ident,
+                            text: chars[id_start..i].iter().collect(),
+                            line,
+                        });
+                    } else {
+                        out.tokens.push(Token { kind: TokenKind::Ident, text: word, line });
+                    }
+                } else if word == "b" && next == Some('\'') {
+                    i = skip_char_or_lifetime(&chars, i, &mut line);
+                } else {
+                    out.tokens.push(Token { kind: TokenKind::Ident, text: word, line });
+                }
+            }
+            c => {
+                out.tokens.push(Token { kind: TokenKind::Punct, text: c.to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Skip a (possibly prefixed) `"…"` string starting at `chars[i]` being
+/// the prefix or the opening quote; returns the index past the close.
+fn skip_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    while chars.get(i) != Some(&'"') {
+        i += 1; // consume prefix letters (r, b, br)
+    }
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string `r#"…"#` (any number of hashes); `i` points at the
+/// prefix letters. Returns the index past the closing quote+hashes.
+fn skip_raw_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    while chars.get(i) != Some(&'#') {
+        i += 1; // consume prefix letters
+    }
+    let mut hashes = 0usize;
+    while chars.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < chars.len() {
+        if chars[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if chars[i] == '"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while seen < hashes && chars.get(j) == Some(&'#') {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return j;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Disambiguate `'a'` / `b'x'` / `'\n'` (char literals, skipped) from
+/// `'a` (lifetime, skipped silently). `i` points at the prefix `b` or
+/// the opening quote.
+fn skip_char_or_lifetime(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    while chars.get(i) != Some(&'\'') {
+        i += 1; // consume a `b` prefix
+    }
+    i += 1;
+    match chars.get(i) {
+        Some('\\') => {
+            // Escaped char literal: scan to the closing quote.
+            i += 2;
+            while i < chars.len() && chars[i] != '\'' {
+                if chars[i] == '\n' {
+                    *line += 1;
+                }
+                i += 1;
+            }
+            i + 1
+        }
+        Some(&c) if c.is_alphanumeric() || c == '_' => {
+            let mut j = i + 1;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            if chars.get(j) == Some(&'\'') {
+                j + 1 // char literal like 'a'
+            } else {
+                j // lifetime like 'a — no token emitted
+            }
+        }
+        Some(_) => {
+            // Punctuation char literal like '(' or ' '.
+            if chars.get(i + 1) == Some(&'\'') {
+                i + 2
+            } else {
+                i + 1
+            }
+        }
+        None => i,
+    }
+}
+
+/// Consume a numeric literal (integers, floats, suffixes). No token is
+/// emitted — no rule inspects numbers.
+fn skip_number(chars: &[char], mut i: usize) -> usize {
+    while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+        i += 1;
+    }
+    // Fractional part — but not a `..` range operator.
+    if chars.get(i) == Some(&'.') && chars.get(i + 1).is_some_and(|c| c.is_ascii_digit()) {
+        i += 1;
+        while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Mark which tokens sit inside test-only code: an item annotated
+/// `#[cfg(test)]` (or any `cfg(…)` whose predicate mentions `test`
+/// without `not`) or `#[test]`. Returns one flag per token.
+///
+/// The scan is purely token-based: after the closing `]` of a matching
+/// attribute, everything up to the end of the annotated item — the
+/// matching close brace, or a `;` at brace depth zero for brace-less
+/// items — is marked, attributes stacked in between included.
+pub fn test_spans(tokens: &[Token]) -> Vec<bool> {
+    let mut in_test = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is_punct('#') && tokens.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+            // Collect the attribute's identifiers up to the matching ']'.
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut idents: Vec<&str> = Vec::new();
+            while j < tokens.len() && depth > 0 {
+                let t = &tokens[j];
+                if t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(']') {
+                    depth -= 1;
+                } else if t.kind == TokenKind::Ident {
+                    idents.push(&t.text);
+                }
+                j += 1;
+            }
+            let gates_test = match idents.first().copied() {
+                Some("test") => idents.len() == 1,
+                Some("cfg") => idents.contains(&"test") && !idents.contains(&"not"),
+                _ => false,
+            };
+            if gates_test {
+                // Mark from the attribute through the end of its item.
+                let end = item_end(tokens, j);
+                for flag in in_test.iter_mut().take(end).skip(i) {
+                    *flag = true;
+                }
+                i = end;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    in_test
+}
+
+/// Index one past the end of the item starting at token `start`: the
+/// matching close brace of its first `{`, or a top-level `;` for
+/// brace-less items (`use`, `mod name;`). Falls back to the end of the
+/// stream for malformed input.
+fn item_end(tokens: &[Token], start: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = start;
+    while k < tokens.len() {
+        let t = &tokens[k];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k + 1;
+            }
+        } else if t.is_punct(';') && depth == 0 {
+            return k + 1;
+        }
+        k += 1;
+    }
+    tokens.len()
+}

@@ -1,0 +1,275 @@
+//! `asa-lint` — the repo-specific determinism and crash-safety lint.
+//!
+//! Every correctness claim in this repo (incremental==naive oracle,
+//! snapshot byte-equality, bit-identical parallel passes, exact
+//! crash-resume) rests on strict determinism. The compiler cannot see
+//! that contract; `asa-lint` enforces it at the source level with a
+//! lightweight in-tree tokenizer ([`lexer`]) and a rule engine
+//! ([`rules`]), with vetted exceptions in the repo-root `lint.allow`
+//! file ([`allow`]).
+//!
+//! The engine is exposed as a library so the unit tests can drive rules
+//! over fixtures (`rust/src/lint/fixtures/`), plus a binary
+//! (`cargo run --bin asa-lint`) that walks `rust/src` and exits 0/1 for
+//! CI gating. A self-test (`repo_sources_pass_asa_lint`) runs the full
+//! lint over the real tree on every `cargo test`, so violations fail
+//! tier-1 locally even before CI.
+
+pub mod allow;
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use allow::{AllowEntry, Allowlist, ApplyResult};
+pub use rules::RULES;
+
+/// One lint finding: rule, repo-relative path, 1-based line, and a
+/// message that says what to do instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint a single source file. `path_rel` must be repo-relative with
+/// forward slashes — rule scopes key off it.
+pub fn check_source(path_rel: &str, src: &str) -> Vec<Diagnostic> {
+    rules::check_tokens(path_rel, &lexer::lex(src))
+}
+
+/// Collect every `.rs` file under `src_root`, depth-first with sorted
+/// directory entries so diagnostics come out in a stable order. The
+/// `fixtures/` directory is skipped: its files violate the rules on
+/// purpose.
+pub fn walk_rust_sources(src_root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut files = Vec::new();
+    let mut stack = vec![src_root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)
+            .map_err(|e| format!("read dir {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                if p.file_name().is_some_and(|n| n == "fixtures") {
+                    continue;
+                }
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                files.push(p);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint the whole repo rooted at `root` (the directory holding
+/// `Cargo.toml`). Returns raw diagnostics; apply an [`Allowlist`] to
+/// filter vetted exceptions.
+pub fn lint_repo(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let src_root = root.join("rust").join("src");
+    let mut diags = Vec::new();
+    for path in walk_rust_sources(&src_root)? {
+        let src =
+            fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        diags.extend(check_source(&rel, &src));
+    }
+    Ok(diags)
+}
+
+/// Load the repo-root `lint.allow` if present (a missing file is an
+/// empty allowlist, not an error).
+pub fn load_allowlist(root: &Path) -> Result<Allowlist, String> {
+    match fs::read_to_string(root.join("lint.allow")) {
+        Ok(text) => Allowlist::parse(&text),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Allowlist::default()),
+        Err(e) => Err(format!("read lint.allow: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Expected hit lines for `rule`: the fixture marks each violating
+    /// line with a `// LINT: <rule>` comment, so the expectations live
+    /// next to the code they describe instead of as brittle numbers.
+    fn marked_lines(src: &str, rule: &str) -> Vec<u32> {
+        let marker = format!("LINT: {rule}");
+        src.lines()
+            .enumerate()
+            .filter(|(_, l)| l.contains(&marker))
+            .map(|(i, _)| (i + 1) as u32)
+            .collect()
+    }
+
+    fn flagged_lines(path: &str, src: &str, rule: &str) -> Vec<u32> {
+        check_source(path, src)
+            .into_iter()
+            .filter(|d| d.rule == rule)
+            .map(|d| d.line)
+            .collect()
+    }
+
+    fn assert_fixture(path: &str, src: &str, rule: &str) {
+        let expected = marked_lines(src, rule);
+        assert!(!expected.is_empty(), "fixture for {rule} has no LINT markers");
+        assert_eq!(flagged_lines(path, src, rule), expected, "rule {rule} on {path}");
+    }
+
+    #[test]
+    fn wall_clock_fixture() {
+        let src = include_str!("fixtures/wall_clock.rs");
+        assert_fixture("rust/src/simulator/fixture.rs", src, "wall-clock");
+    }
+
+    #[test]
+    fn rng_source_fixture() {
+        let src = include_str!("fixtures/rng_source.rs");
+        assert_fixture("rust/src/simulator/fixture.rs", src, "rng-source");
+    }
+
+    #[test]
+    fn default_hash_fixture() {
+        let src = include_str!("fixtures/default_hash.rs");
+        assert_fixture("rust/src/simulator/fixture.rs", src, "default-hash");
+    }
+
+    #[test]
+    fn hot_path_panic_fixture() {
+        let src = include_str!("fixtures/hot_path_panic.rs");
+        // Checked as if it were one of the five hot-path files.
+        assert_fixture("rust/src/simulator/sim.rs", src, "hot-path-panic");
+    }
+
+    #[test]
+    fn safety_comment_fixture() {
+        let src = include_str!("fixtures/safety_comment.rs");
+        assert_fixture("rust/src/util/fixture.rs", src, "safety-comment");
+    }
+
+    #[test]
+    fn float_cmp_fixture() {
+        let src = include_str!("fixtures/float_cmp.rs");
+        assert_fixture("rust/src/coordinator/fixture.rs", src, "float-cmp");
+    }
+
+    #[test]
+    fn no_print_fixture() {
+        let src = include_str!("fixtures/no_print.rs");
+        assert_fixture("rust/src/simulator/fixture.rs", src, "no-print");
+    }
+
+    #[test]
+    fn hot_path_rule_only_covers_hot_files() {
+        let src = include_str!("fixtures/hot_path_panic.rs");
+        // The same source outside the five hot-path files is clean.
+        assert!(flagged_lines("rust/src/simulator/metrics.rs", src, "hot-path-panic").is_empty());
+    }
+
+    #[test]
+    fn out_of_scope_paths_are_clean() {
+        let src = include_str!("fixtures/no_print.rs");
+        // experiments/ is the report layer: printing there is by design.
+        assert!(flagged_lines("rust/src/experiments/report.rs", src, "no-print").is_empty());
+        // main.rs and bin/ are CLI surface.
+        assert!(flagged_lines("rust/src/main.rs", src, "no-print").is_empty());
+    }
+
+    #[test]
+    fn lexer_skips_strings_comments_and_lifetimes() {
+        let src = "\
+// .unwrap() in a comment\n\
+/* block with HashMap and std::time::Instant */\n\
+pub fn f<'a>(s: &'a str) -> &'a str {\n\
+    let _c = 'x';\n\
+    let _raw = r#\"call .unwrap() and thread_rng()\"#;\n\
+    s\n\
+}\n";
+        assert!(check_source("rust/src/simulator/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_window_is_three_lines() {
+        let src = "\
+pub fn f(p: *const u8) -> u8 {\n\
+    // SAFETY: caller contract.\n\
+    //\n\
+    //\n\
+    //\n\
+    unsafe { *p }\n\
+}\n";
+        // The SAFETY comment is four lines above the unsafe: too far.
+        let hits = flagged_lines("rust/src/util/fixture.rs", src, "safety-comment");
+        assert_eq!(hits, [6]);
+    }
+
+    #[test]
+    fn allowlist_round_trip() {
+        let text = "\
+# Vetted exceptions for the fixture test.\n\
+wall-clock rust/src/util/bench.rs        # benches measure real elapsed time\n\
+no-print   rust/src/util/bench.rs 12     # table output goes to stdout\n\
+rng-source rust/src/util/never.rs        # stale entry, matches nothing\n";
+        let allow = Allowlist::parse(text).expect("well-formed allowlist parses");
+        assert_eq!(allow.entries.len(), 3);
+        assert_eq!(allow.entries[0].line, None);
+        assert_eq!(allow.entries[1].line, Some(12));
+        assert_eq!(allow.entries[0].justification, "benches measure real elapsed time");
+
+        let diag = |rule: &'static str, path: &str, line: u32| Diagnostic {
+            rule,
+            path: path.to_string(),
+            line,
+            message: String::new(),
+        };
+        let diags = vec![
+            diag("wall-clock", "rust/src/util/bench.rs", 40),
+            diag("no-print", "rust/src/util/bench.rs", 12),
+            diag("no-print", "rust/src/util/bench.rs", 99),
+        ];
+        let res = allow.apply(diags);
+        // File-level entry takes any line; line-pinned entry takes only
+        // its line; the stale entry is reported unused.
+        assert_eq!(res.suppressed.len(), 2);
+        assert_eq!(res.remaining.len(), 1);
+        assert_eq!(res.remaining[0].line, 99);
+        assert_eq!(res.unused.len(), 1);
+        assert_eq!(res.unused[0].rule, "rng-source");
+    }
+
+    #[test]
+    fn allowlist_rejects_missing_justification() {
+        assert!(Allowlist::parse("wall-clock rust/src/util/bench.rs\n").is_err());
+        assert!(Allowlist::parse("just-one-field # why\n").is_err());
+        assert!(Allowlist::parse("rule path notaline # why\n").is_err());
+    }
+
+    /// The real tree must be clean modulo `lint.allow` — this is the
+    /// tier-1 mirror of the blocking CI job.
+    #[test]
+    #[cfg_attr(miri, ignore)] // reads the source tree from disk
+    fn repo_sources_pass_asa_lint() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let diags = lint_repo(root).expect("repo walk succeeds");
+        let allow = load_allowlist(root).expect("lint.allow parses");
+        let res = allow.apply(diags);
+        let rendered: Vec<String> = res.remaining.iter().map(|d| d.to_string()).collect();
+        assert!(res.remaining.is_empty(), "unallowed lint violations:\n{}", rendered.join("\n"));
+    }
+}

@@ -1,0 +1,208 @@
+//! The `asa-lint` rule set.
+//!
+//! Every rule here guards a determinism or crash-safety invariant that
+//! the oracle tests can only catch *after* it has been violated; the
+//! lint catches the violating source line at review time. Rules match
+//! on the token stream from [`super::lexer`], so comments, strings, and
+//! doc examples never fire, and `#[cfg(test)]`-gated code is exempt
+//! wherever the rule's contract only covers production paths.
+//!
+//! See DESIGN.md §13 for the catalogue with rationale.
+
+use super::lexer::{self, LexOutput, TokenKind};
+use super::Diagnostic;
+
+/// Static description of one rule, for `--list-rules` and the docs.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// Every implemented rule, in diagnostic order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "wall-clock",
+        summary: "no std::time / Instant / SystemTime in library code — simulated time only",
+    },
+    RuleInfo {
+        name: "rng-source",
+        summary: "no ambient randomness (rand, thread_rng, RandomState) — seeded util::rng only",
+    },
+    RuleInfo {
+        name: "default-hash",
+        summary: "no default-hashed HashMap/HashSet in determinism-critical dirs — use FxHash*",
+    },
+    RuleInfo {
+        name: "hot-path-panic",
+        summary: "no .unwrap()/todo!/unimplemented!/dbg! in the scheduling hot path outside tests",
+    },
+    RuleInfo {
+        name: "safety-comment",
+        summary: "every `unsafe` must have a // SAFETY: comment within the three lines above",
+    },
+    RuleInfo {
+        name: "float-cmp",
+        summary: "no .partial_cmp() calls on ordering paths — f64 orderings use total_cmp",
+    },
+    RuleInfo {
+        name: "no-print",
+        summary: "no println!/eprintln!/print!/eprint! in library code — use a sink or return data",
+    },
+];
+
+/// The five files forming the scheduling hot path (ISSUE 10): a panic
+/// here kills a simulation mid-pass, so every invariant dereference must
+/// say *which* invariant it relies on (`.expect("…")`) or return an error.
+const HOT_PATH_FILES: &[&str] = &[
+    "rust/src/simulator/slurm.rs",
+    "rust/src/simulator/sim.rs",
+    "rust/src/simulator/cluster.rs",
+    "rust/src/simulator/store.rs",
+    "rust/src/simulator/event.rs",
+];
+
+/// Directories whose map iteration order can reach events, metrics, or
+/// serialized output — the determinism-critical scope.
+const DETERMINISM_DIRS: &[&str] = &["simulator", "coordinator", "experiments", "workflow"];
+
+/// Directories where stray stdout/stderr writes would pollute the
+/// machine-readable output of `asa` subcommands. `experiments/` is the
+/// report layer (it prints by design) and `bin/` is the CLI surface, so
+/// both stay out of scope.
+const PRINT_FREE_DIRS: &[&str] = &["simulator", "coordinator", "workflow", "runtime", "util"];
+
+fn under_dir(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| {
+        let prefix = format!("rust/src/{d}/");
+        path.starts_with(&prefix)
+    })
+}
+
+/// True for library sources: everything under `rust/src/` except the
+/// binaries and the lint engine itself (whose rule tables and fixtures
+/// spell out the forbidden tokens).
+fn is_library(path: &str) -> bool {
+    path.starts_with("rust/src/")
+        && !path.starts_with("rust/src/bin/")
+        && !path.starts_with("rust/src/lint/")
+        && path != "rust/src/main.rs"
+}
+
+/// Run every applicable rule over one lexed file. `path` must be
+/// repo-relative with forward slashes (e.g. `rust/src/simulator/sim.rs`).
+pub fn check_tokens(path: &str, lx: &LexOutput) -> Vec<Diagnostic> {
+    let in_test = lexer::test_spans(&lx.tokens);
+    let mut diags = Vec::new();
+
+    let lib = is_library(path);
+    let det = under_dir(path, DETERMINISM_DIRS);
+    let hot = HOT_PATH_FILES.contains(&path);
+    let print_free = under_dir(path, PRINT_FREE_DIRS);
+
+    let toks = &lx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        let test = in_test[i];
+        let ident = t.kind == TokenKind::Ident;
+        let next_is = |ch: char| toks.get(i + 1).is_some_and(|n| n.is_punct(ch));
+        let prev_is_dot = i > 0 && toks[i - 1].is_punct('.');
+
+        // wall-clock: lexical time sources. Applies even inside tests —
+        // a wall-clock assert makes a test flaky by construction.
+        if lib && ident && (t.text == "Instant" || t.text == "SystemTime") {
+            let msg = format!(
+                "`{}` is a wall-clock type; library code must use simulated `Time` only",
+                t.text
+            );
+            push(&mut diags, "wall-clock", path, t.line, msg);
+        }
+        if lib
+            && t.is_ident("std")
+            && next_is(':')
+            && toks.get(i + 2).is_some_and(|n| n.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|n| n.is_ident("time"))
+        {
+            let msg = "`std::time` is wall-clock; library code must use simulated `Time` only";
+            push(&mut diags, "wall-clock", path, t.line, msg.to_string());
+        }
+
+        // rng-source: ambient randomness. Also applies inside tests — a
+        // seeded test that consults ambient entropy is no longer seeded.
+        let rng_idents = ["rand", "thread_rng", "ThreadRng", "StdRng", "SmallRng", "RandomState"];
+        if lib && ident && rng_idents.contains(&t.text.as_str()) {
+            let msg = format!(
+                "`{}` draws ambient randomness; use the seeded in-tree `util::rng::Rng`",
+                t.text
+            );
+            push(&mut diags, "rng-source", path, t.line, msg);
+        }
+
+        // default-hash: SipHash with a random key randomizes iteration
+        // order run-to-run. Test-only maps that never reach output are
+        // exempt.
+        if det && !test && ident && (t.text == "HashMap" || t.text == "HashSet") {
+            let msg = format!(
+                "default-hashed `{}` has run-dependent iteration order; use `Fx{}`",
+                t.text, t.text
+            );
+            push(&mut diags, "default-hash", path, t.line, msg);
+        }
+
+        // hot-path-panic: unwrap and draft-marker macros in the pass
+        // pipeline.
+        if hot && !test {
+            if prev_is_dot && t.is_ident("unwrap") && next_is('(') {
+                let msg = "`.unwrap()` in the scheduling hot path; use a typed error or an \
+                           invariant-messaged `.expect(\"…\")`";
+                push(&mut diags, "hot-path-panic", path, t.line, msg.to_string());
+            }
+            let panic_macros = ["todo", "unimplemented", "dbg"];
+            if ident && panic_macros.contains(&t.text.as_str()) && next_is('!') {
+                let msg = format!("`{}!` in the scheduling hot path", t.text);
+                push(&mut diags, "hot-path-panic", path, t.line, msg);
+            }
+        }
+
+        // safety-comment: unsafe anywhere in the tree needs a SAFETY
+        // note within the three preceding lines.
+        if path.starts_with("rust/src/") && t.is_ident("unsafe") {
+            let documented = lx.safety_lines.iter().any(|&l| l <= t.line && l + 3 >= t.line);
+            if !documented {
+                let msg = "`unsafe` without a `// SAFETY:` comment in the three lines above";
+                push(&mut diags, "safety-comment", path, t.line, msg.to_string());
+            }
+        }
+
+        // float-cmp: ordering through PartialOrd on floats is partial
+        // (NaN ⇒ None ⇒ silent fallback orderings). total_cmp is the
+        // mandated comparator; `fn partial_cmp` *definitions* (the Ord
+        // plumbing on non-float keys) are not calls and do not fire.
+        if det && !test && prev_is_dot && t.is_ident("partial_cmp") {
+            let msg = "`.partial_cmp()` call; orderings over f64 must use `.total_cmp()`";
+            push(&mut diags, "float-cmp", path, t.line, msg.to_string());
+        }
+
+        // no-print: stray stdout/stderr in library layers.
+        let print_macros = ["println", "eprintln", "print", "eprint"];
+        if print_free
+            && !test
+            && ident
+            && print_macros.contains(&t.text.as_str())
+            && next_is('!')
+        {
+            let msg = format!(
+                "`{}!` in library code; return data or take a `&mut impl io::Write` sink",
+                t.text
+            );
+            push(&mut diags, "no-print", path, t.line, msg);
+        }
+    }
+
+    // One diagnostic per (rule, line): the sequence matchers can overlap
+    // (`std::time::Instant` trips both forms of wall-clock).
+    diags.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+    diags
+}
+
+fn push(diags: &mut Vec<Diagnostic>, rule: &'static str, path: &str, line: u32, message: String) {
+    diags.push(Diagnostic { rule, path: path.to_string(), line, message });
+}

@@ -1,0 +1,370 @@
+//! Runtime invariant auditor (DESIGN.md §13).
+//!
+//! A read-only cross-structure consistency check over the whole
+//! [`Simulator`]: core accounting, queue/arena agreement, dependency-index
+//! integrity, fair-share cache coherence, and event-heap bookkeeping. The
+//! per-module invariants live next to their structures
+//! ([`crate::simulator::store::JobStore::audit`] and friends); this module
+//! checks the *joints* between them — the places where two structures hold
+//! redundant views of the same fact and a bug makes them drift apart.
+//!
+//! Enabled via `ASA_AUDIT=1` (every scheduling pass) or by default every
+//! 64th pass under debug assertions; release builds audit only when asked.
+//! Violations panic with an `ASA_AUDIT:` prefix so CI logs are greppable.
+
+use crate::simulator::job::{Dependency, JobId, JobState};
+use crate::simulator::sim::{SchedEngine, Simulator};
+use crate::util::hash::FxHashMap;
+
+/// Audit cadence resolved from the environment: `ASA_AUDIT` unset means
+/// every 64th pass in debug builds and never in release; `ASA_AUDIT=0`
+/// (or empty) disables; any other value audits every pass.
+pub(crate) fn default_audit_every() -> u32 {
+    match std::env::var("ASA_AUDIT") {
+        Ok(v) if v.is_empty() || v == "0" => 0,
+        Ok(_) => 1,
+        Err(_) => {
+            if cfg!(debug_assertions) {
+                64
+            } else {
+                0
+            }
+        }
+    }
+}
+
+/// Run every invariant check against the simulator's current state.
+/// Read-only; returns the first violation found, described with enough
+/// context to locate the offending structure.
+pub fn audit_simulator(sim: &Simulator) -> Result<(), String> {
+    sim.store.audit().map_err(|e| format!("job store: {e}"))?;
+    sim.cluster.audit().map_err(|e| format!("cluster: {e}"))?;
+    sim.events.audit().map_err(|e| format!("event queue: {e}"))?;
+    sim.fairshare.audit().map_err(|e| format!("fair share: {e}"))?;
+    audit_jobs(sim)?;
+    audit_queues(sim)?;
+    audit_begin_set(sim)?;
+    audit_deps(sim)?;
+    audit_running_counts(sim)?;
+    Ok(())
+}
+
+/// Per-job state invariants: every occupied arena slot must agree with the
+/// queue, the cluster, and the hold bookkeeping about what the job is
+/// currently doing.
+fn audit_jobs(sim: &Simulator) -> Result<(), String> {
+    let mut held = 0usize;
+    for id in sim.store.occupied_ids() {
+        let hot = sim.store.hot(id);
+        let scan = sim.store.scan(id);
+        let p = scan.partition as usize;
+        if p >= sim.cluster.len() {
+            return Err(format!("{id:?}: partition {p} out of range"));
+        }
+        if scan.fs_idx as usize >= sim.fairshare.user_count() {
+            return Err(format!(
+                "{id:?}: fs_idx {} out of range ({} accounts)",
+                scan.fs_idx,
+                sim.fairshare.user_count()
+            ));
+        }
+        if hot.held {
+            held += 1;
+        }
+        match hot.state {
+            JobState::Pending => {
+                if hot.held && hot.queue_pos.is_some() {
+                    return Err(format!("{id:?}: held job is also queued"));
+                }
+                if !hot.held {
+                    match hot.queue_pos {
+                        Some(pos) => {
+                            let slot = sim.queues[p].get(pos as usize).copied();
+                            if slot != Some(id) {
+                                return Err(format!(
+                                    "{id:?}: queue_pos {pos} in partition {p} holds {slot:?}"
+                                ));
+                            }
+                        }
+                        None => {
+                            // Legal only for a future submission whose
+                            // Submit event has not fired yet.
+                            if scan.submit_time < sim.now {
+                                return Err(format!(
+                                    "{id:?}: pending, un-held, un-queued, submit_time {} < now {}",
+                                    scan.submit_time, sim.now
+                                ));
+                            }
+                        }
+                    }
+                }
+                if sim.cluster.allocation(id).is_some() {
+                    return Err(format!("{id:?}: pending job holds an allocation"));
+                }
+            }
+            JobState::Running => {
+                if hot.held || hot.queue_pos.is_some() {
+                    return Err(format!("{id:?}: running job still held/queued"));
+                }
+                let Some(fin) = hot.finish_at else {
+                    return Err(format!("{id:?}: running job has no finish event time"));
+                };
+                if fin < sim.now {
+                    return Err(format!("{id:?}: finish_at {fin} already in the past"));
+                }
+                match sim.cluster.part(p).allocation(id) {
+                    None => {
+                        return Err(format!("{id:?}: running but unallocated in partition {p}"));
+                    }
+                    Some(a) => {
+                        if a.cores != scan.cores {
+                            return Err(format!(
+                                "{id:?}: allocation holds {} cores, job requested {}",
+                                a.cores, scan.cores
+                            ));
+                        }
+                        if a.started > sim.now {
+                            return Err(format!(
+                                "{id:?}: allocation started at {} > now {}",
+                                a.started, sim.now
+                            ));
+                        }
+                    }
+                }
+            }
+            _ => {
+                if hot.held || hot.queue_pos.is_some() {
+                    return Err(format!("{id:?}: terminal job still held/queued"));
+                }
+                if sim.cluster.allocation(id).is_some() {
+                    return Err(format!("{id:?}: terminal job holds an allocation"));
+                }
+            }
+        }
+    }
+    if held != sim.held_count {
+        return Err(format!("held_count {} != {held} held jobs in arena", sim.held_count));
+    }
+    if sim.engine == SchedEngine::Naive
+        && (sim.held_count != 0 || !sim.begin_set.is_empty() || !sim.dep_children.is_empty())
+    {
+        return Err(format!(
+            "naive engine carries incremental state: held {}, begins {}, dep keys {}",
+            sim.held_count,
+            sim.begin_set.len(),
+            sim.dep_children.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Reverse direction of the queue/arena agreement: every queue slot names
+/// a live pending job that points back at exactly that slot.
+fn audit_queues(sim: &Simulator) -> Result<(), String> {
+    for (p, queue) in sim.queues.iter().enumerate() {
+        for (pos, &id) in queue.iter().enumerate() {
+            if !sim.store.is_live(id) {
+                return Err(format!("queue {p} slot {pos}: {id:?} is not live"));
+            }
+            let hot = sim.store.hot(id);
+            if hot.state != JobState::Pending || hot.held {
+                return Err(format!(
+                    "queue {p} slot {pos}: {id:?} is {:?} (held {})",
+                    hot.state, hot.held
+                ));
+            }
+            if hot.queue_pos != Some(pos as u32) {
+                return Err(format!(
+                    "queue {p} slot {pos}: {id:?} claims queue_pos {:?}",
+                    hot.queue_pos
+                ));
+            }
+            if sim.store.scan(id).partition as usize != p {
+                return Err(format!("queue {p} slot {pos}: {id:?} belongs to another partition"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The eagerly-pruned `--begin` release set must be a bijection with the
+/// held `BeginAt` jobs, and (post-pass, after `promote_due_begins`) hold
+/// only strictly-future release times.
+fn audit_begin_set(sim: &Simulator) -> Result<(), String> {
+    let mut held_begins = 0usize;
+    for id in sim.store.occupied_ids() {
+        if sim.store.hot(id).held
+            && matches!(sim.store.cold(id).dependency, Some(Dependency::BeginAt(_)))
+        {
+            held_begins += 1;
+        }
+    }
+    if sim.begin_set.len() != held_begins {
+        return Err(format!(
+            "begin_set has {} entries for {held_begins} held BeginAt jobs",
+            sim.begin_set.len()
+        ));
+    }
+    for &(t, id) in &sim.begin_set {
+        if !sim.store.is_live(id) {
+            return Err(format!("begin_set entry ({t}, {id:?}) names a dead job"));
+        }
+        let hot = sim.store.hot(id);
+        if hot.state != JobState::Pending || !hot.held {
+            return Err(format!(
+                "begin_set entry ({t}, {id:?}): job is {:?} (held {})",
+                hot.state, hot.held
+            ));
+        }
+        match sim.store.cold(id).dependency {
+            Some(Dependency::BeginAt(b)) if b == t => {}
+            ref d => {
+                return Err(format!("begin_set entry ({t}, {id:?}): dependency is {d:?}"));
+            }
+        }
+        if t <= sim.now {
+            return Err(format!(
+                "begin_set entry ({t}, {id:?}) is due (now {}): promote_due_begins missed it",
+                sim.now
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Dependency-index integrity: keys are live non-terminal parents,
+/// children are live parked jobs that name the parent back, and no child
+/// appears in more lists than it has unmet dependencies (dead parents are
+/// counted in `unmet_deps` without index entries, so `<=`, not `==`).
+fn audit_deps(sim: &Simulator) -> Result<(), String> {
+    let mut occurrences: FxHashMap<JobId, u32> = FxHashMap::default();
+    for (&parent, children) in &sim.dep_children {
+        if !sim.store.is_live(parent) {
+            return Err(format!("dep index key {parent:?} is not live"));
+        }
+        let pstate = sim.store.hot(parent).state;
+        if !matches!(pstate, JobState::Pending | JobState::Running) {
+            return Err(format!("dep index key {parent:?} is terminal ({pstate:?})"));
+        }
+        if children.is_empty() {
+            return Err(format!("dep index key {parent:?} has an empty child list"));
+        }
+        for &child in children {
+            if !sim.store.is_live(child) {
+                return Err(format!("dep child {child:?} of {parent:?} is not live"));
+            }
+            let hot = sim.store.hot(child);
+            if hot.state != JobState::Pending || !hot.held {
+                return Err(format!(
+                    "dep child {child:?} of {parent:?} is {:?} (held {})",
+                    hot.state, hot.held
+                ));
+            }
+            match sim.store.cold(child).dependency {
+                Some(Dependency::AfterOk(ref parents)) if parents.contains(&parent) => {}
+                ref d => {
+                    return Err(format!(
+                        "dep child {child:?} does not list {parent:?}: dependency is {d:?}"
+                    ));
+                }
+            }
+            *occurrences.entry(child).or_default() += 1;
+        }
+    }
+    for (child, n) in occurrences {
+        let unmet = sim.store.hot(child).unmet_deps;
+        if n > unmet {
+            return Err(format!(
+                "dep child {child:?} appears in {n} lists but has {unmet} unmet deps"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Core-accounting conservation per partition: the number of Running jobs
+/// bound to each partition must equal its allocation count. Together with
+/// the forward check in [`audit_jobs`] (every Running job holds a
+/// matching allocation in its own partition) this makes jobs ↔
+/// allocations a bijection — no orphan allocations, no phantom runners.
+fn audit_running_counts(sim: &Simulator) -> Result<(), String> {
+    let mut running = vec![0usize; sim.cluster.len()];
+    for id in sim.store.occupied_ids() {
+        if sim.store.hot(id).state == JobState::Running {
+            running[sim.store.scan(id).partition as usize] += 1;
+        }
+    }
+    for (p, &n) in running.iter().enumerate() {
+        let allocs = sim.cluster.part(p).running_count();
+        if n != allocs {
+            return Err(format!("partition {p}: {n} running jobs vs {allocs} allocations"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{JobSpec, SystemConfig};
+
+    #[test]
+    fn auditor_is_silent_on_a_valid_run() {
+        // Background workload plus foreground jobs exercising every parking
+        // path: plain, future-submitted, --begin held, dependency held,
+        // and a cancellation mid-flight.
+        let mut sim = Simulator::new(SystemConfig::testbed(8, 4), 7);
+        audit_simulator(&sim).unwrap();
+        let a = sim.submit(JobSpec::new(1, "a", 4, 200));
+        let dep = Dependency::AfterOk(vec![a]);
+        let _b = sim.submit(JobSpec::new(2, "b", 2, 50).with_dependency(dep));
+        let c = sim.submit(JobSpec::new(3, "c", 1, 10).with_dependency(Dependency::BeginAt(400)));
+        sim.submit_at(300, JobSpec::new(4, "d", 2, 30));
+        audit_simulator(&sim).unwrap();
+        sim.run_until(150);
+        audit_simulator(&sim).unwrap();
+        sim.cancel(c);
+        sim.run_until(600);
+        audit_simulator(&sim).unwrap();
+        sim.run_until(2_000);
+        audit_simulator(&sim).unwrap();
+    }
+
+    #[test]
+    fn auditor_is_silent_for_the_naive_engine() {
+        let mut sim =
+            Simulator::new_empty_with_engine(SystemConfig::testbed(4, 4), SchedEngine::Naive);
+        let a = sim.submit(JobSpec::new(1, "a", 4, 100));
+        let dep = Dependency::AfterOk(vec![a]);
+        let _b = sim.submit(JobSpec::new(2, "b", 4, 50).with_dependency(dep));
+        sim.run_until(500);
+        audit_simulator(&sim).unwrap();
+    }
+
+    #[test]
+    fn corrupted_core_accounting_is_caught() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(8, 4));
+        sim.submit(JobSpec::new(1, "a", 8, 500));
+        sim.run_until(10);
+        audit_simulator(&sim).unwrap();
+        // Seed a deliberate conservation violation: free cores no longer
+        // match total - allocated.
+        sim.cluster.part_mut(0).corrupt_free_cores_for_test(3);
+        let err = audit_simulator(&sim).unwrap_err();
+        assert!(err.starts_with("cluster:"), "unexpected: {err}");
+        assert!(err.contains("free"), "should name core accounting: {err}");
+    }
+
+    #[test]
+    fn corrupted_queue_back_pointer_is_caught() {
+        let mut sim = Simulator::new_empty(SystemConfig::testbed(2, 2));
+        sim.submit(JobSpec::new(1, "a", 4, 100));
+        let b = sim.submit(JobSpec::new(2, "b", 4, 100));
+        sim.run_until(10);
+        audit_simulator(&sim).unwrap();
+        // b is still queued behind a; break its back-pointer.
+        sim.store.hot_mut(b).queue_pos = Some(7);
+        let err = audit_simulator(&sim).unwrap_err();
+        assert!(err.contains("queue"), "unexpected: {err}");
+    }
+}

@@ -143,6 +143,52 @@ impl Cluster {
         self.by_end.iter().map(|&(t, c, _)| (t, c))
     }
 
+    /// Invariant audit (DESIGN.md §13): core-accounting conservation and
+    /// `by_end` index consistency. Read-only; returns the first violation.
+    ///
+    /// `by_end` and `allocs` must be bijective: equal sizes plus a
+    /// matching allocation behind every index entry (the set's tuples are
+    /// unique, so per-entry matches imply the bijection).
+    pub(crate) fn audit(&self) -> Result<(), String> {
+        if self.free > self.total {
+            return Err(format!("free {} exceeds total {}", self.free, self.total));
+        }
+        let used: Cores = self.allocs.values().map(|a| a.cores).sum();
+        if used + self.free != self.total {
+            return Err(format!(
+                "core conservation broken: used {used} + free {} != total {}",
+                self.free, self.total
+            ));
+        }
+        if self.by_end.len() != self.allocs.len() {
+            return Err(format!(
+                "by_end holds {} entries for {} allocations",
+                self.by_end.len(),
+                self.allocs.len()
+            ));
+        }
+        for &(end, cores, job) in &self.by_end {
+            let a = self
+                .allocs
+                .get(&job)
+                .ok_or_else(|| format!("by_end entry for unallocated job {job:?}"))?;
+            if a.limit_end != end || a.cores != cores {
+                return Err(format!(
+                    "by_end entry ({end}, {cores}) mismatches allocation ({}, {}) of {job:?}",
+                    a.limit_end, a.cores
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deliberately corrupt the free-core counter so tests can prove the
+    /// auditor catches broken core accounting.
+    #[cfg(test)]
+    pub(crate) fn corrupt_free_cores_for_test(&mut self, free: Cores) {
+        self.free = free;
+    }
+
     /// Canonical serialization: capacity counters plus allocations sorted
     /// by job id. The `by_end` index is derived state and is rebuilt on
     /// read rather than written.
@@ -247,6 +293,14 @@ impl Partitions {
     /// address the partition directly).
     pub fn allocation(&self, job: JobId) -> Option<&Allocation> {
         self.parts.iter().find_map(|c| c.allocation(job))
+    }
+
+    /// Audit every partition (DESIGN.md §13).
+    pub(crate) fn audit(&self) -> Result<(), String> {
+        for (p, c) in self.parts.iter().enumerate() {
+            c.audit().map_err(|e| format!("partition {p}: {e}"))?;
+        }
+        Ok(())
     }
 
     pub(crate) fn snap_write(&self, w: &mut SnapWriter) {

@@ -285,6 +285,51 @@ impl EventQueue {
         }
     }
 
+    /// Invariant audit (DESIGN.md §13): sequence-number uniqueness and
+    /// dedup/tombstone bookkeeping. Every `sample_times` entry must name
+    /// a live Sample in the heap, and every `dead_samples` tombstone must
+    /// name exactly one heap Sample. Read-only; returns the first
+    /// violation found.
+    pub(crate) fn audit(&self) -> Result<(), String> {
+        let mut seqs = FxHashSet::default();
+        for e in self.heap.iter() {
+            if e.seq >= self.seq {
+                return Err(format!("heap entry seq {} >= counter {}", e.seq, self.seq));
+            }
+            if !seqs.insert(e.seq) {
+                return Err(format!("duplicate heap seq {}", e.seq));
+            }
+        }
+        for (&t, &s) in &self.sample_times {
+            if self.dead_samples.contains(&s) {
+                return Err(format!("dedup index names retracted sample seq {s} (t={t})"));
+            }
+            let hit = self
+                .heap
+                .iter()
+                .find(|e| e.seq == s && matches!(e.kind, EventKind::Sample));
+            match hit {
+                Some(e) if e.time == t => {}
+                Some(e) => {
+                    let at = e.time;
+                    return Err(format!("dedup index t={t} names seq {s} scheduled at t={at}"));
+                }
+                None => return Err(format!("dedup index t={t} names seq {s} not in heap")),
+            }
+        }
+        for &s in &self.dead_samples {
+            let named = self
+                .heap
+                .iter()
+                .filter(|e| e.seq == s && matches!(e.kind, EventKind::Sample))
+                .count();
+            if named != 1 {
+                return Err(format!("tombstone seq {s} names {named} heap samples, expected 1"));
+            }
+        }
+        Ok(())
+    }
+
     pub(crate) fn snap_read(r: &mut SnapReader) -> Result<EventQueue, String> {
         let seq = r.u64()?;
         let n = r.usz()?;
@@ -489,6 +534,25 @@ mod tests {
     }
 
     #[test]
+    fn audit_accepts_live_and_tombstoned_states() {
+        let mut q = EventQueue::new();
+        q.audit().unwrap();
+        q.push(5, EventKind::Submit(JobId(1)));
+        assert!(q.push_sample_dedup(10));
+        assert!(q.push_sample_dedup(20));
+        q.audit().unwrap();
+        assert!(q.retract_sample(10)); // tombstone lingers in the heap
+        q.audit().unwrap();
+        assert!(q.pop().is_some());
+        q.audit().unwrap();
+        // Corrupt the dedup index: point it at a seq that never existed.
+        q.sample_times.insert(99, 12345);
+        let err = q.audit().unwrap_err();
+        assert!(err.contains("not in heap"), "unexpected: {err}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 10k-iteration churn loop: minutes under miri
     fn dedup_bookkeeping_stays_bounded_under_churn() {
         let mut q = EventQueue::new();
         for i in 0..10_000i64 {

@@ -229,6 +229,78 @@ impl FairShare {
             + self.index.len() * (size_of::<u32>() * 2)
     }
 
+    /// Invariant audit (DESIGN.md §13): index bijection, total
+    /// consistency, and cache coherence. Fresh cached factors (those with
+    /// `factor_gen == generation`) must equal a bit-identical recompute of
+    /// the formula; the totals must match the per-account sums up to
+    /// floating-point addition-order noise (relative tolerance, not
+    /// bitwise — rebases and charges accumulate in a different order than
+    /// a fresh sum). Read-only; returns the first violation found.
+    pub(crate) fn audit(&self) -> Result<(), String> {
+        let n = self.accounts.len();
+        if self.index.len() != n {
+            return Err(format!("index has {} users for {n} accounts", self.index.len()));
+        }
+        let mut seen = vec![false; n];
+        for (&user, &idx) in &self.index {
+            let i = idx as usize;
+            if i >= n {
+                return Err(format!("user {user} maps to index {i} (accounts {n})"));
+            }
+            if seen[i] {
+                return Err(format!("account index {i} mapped by two users"));
+            }
+            seen[i] = true;
+        }
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
+        let share_sum: f64 = self.accounts.iter().map(|a| a.shares).sum();
+        if !close(share_sum, self.total_shares) {
+            return Err(format!("total_shares {} != account sum {share_sum}", self.total_shares));
+        }
+        let usage_sum: f64 = self.accounts.iter().map(|a| a.usage_scaled).sum();
+        if !close(usage_sum, self.total_usage_scaled) {
+            return Err(format!(
+                "total_usage_scaled {} != account sum {usage_sum}",
+                self.total_usage_scaled
+            ));
+        }
+        if self.refreshed_gen > self.generation {
+            return Err(format!(
+                "refreshed_gen {} ahead of generation {}",
+                self.refreshed_gen, self.generation
+            ));
+        }
+        for (i, acct) in self.accounts.iter().enumerate() {
+            if acct.factor_gen > self.generation {
+                return Err(format!(
+                    "account {i} factor_gen {} ahead of generation {}",
+                    acct.factor_gen, self.generation
+                ));
+            }
+            if acct.factor_gen != self.generation {
+                continue; // stale cache: value is dead, anything goes
+            }
+            let fresh = if self.total_usage_scaled <= 0.0 || self.total_shares <= 0.0 {
+                1.0
+            } else {
+                let usage_frac = acct.usage_scaled / self.total_usage_scaled;
+                let share_frac = acct.shares / self.total_shares;
+                if share_frac <= 0.0 {
+                    0.0
+                } else {
+                    2f64.powf(-usage_frac / share_frac)
+                }
+            };
+            if acct.factor.to_bits() != fresh.to_bits() {
+                return Err(format!(
+                    "account {i} cached factor {} != recomputed {fresh}",
+                    acct.factor
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Serialize the full ledger bit-exactly: every float as its bit
     /// pattern, the generation counters verbatim (the scheduler's
     /// cache-validity protocol depends on them), accounts in dense-index
@@ -483,6 +555,29 @@ mod tests {
         fs.snap_write(&mut wa);
         back.snap_write(&mut wb);
         assert_eq!(wa.into_bytes(), wb.into_bytes());
+    }
+
+    #[test]
+    fn audit_passes_through_charges_refreshes_and_rebase() {
+        let mut fs = FairShare::new(3600);
+        fs.audit().unwrap();
+        fs.ensure_user(1, 1.0);
+        fs.ensure_user(2, 3.0);
+        fs.audit().unwrap();
+        fs.charge(1, 1e5, 10);
+        fs.audit().unwrap();
+        fs.refresh_factors();
+        fs.audit().unwrap();
+        // Push past the rebase threshold (512 half-lives).
+        fs.charge(2, 50.0, 3600 * 600);
+        fs.refresh_factors();
+        fs.audit().unwrap();
+        // Corrupt a fresh cached factor: the bit-exact recompute catches it.
+        let idx = fs.index[&1] as usize;
+        assert_eq!(fs.accounts[idx].factor_gen, fs.generation, "fresh after refresh");
+        fs.accounts[idx].factor += 1e-9;
+        let err = fs.audit().unwrap_err();
+        assert!(err.contains("cached factor"), "unexpected: {err}");
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //!   resume (DESIGN.md §12).
 //! * [`eventlog`] — append-only observable-event logs: record, replay to a
 //!   point, bisect two logs for their first divergence.
+//! * [`audit`] — the runtime invariant auditor (`ASA_AUDIT=1`), cross-
+//!   checking all of the above against each other (DESIGN.md §13).
 
+pub mod audit;
 pub mod event;
 pub mod job;
 pub mod store;

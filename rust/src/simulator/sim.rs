@@ -228,6 +228,12 @@ pub struct Simulator {
     /// Foreground users already seeded with pre-existing usage.
     pub(crate) seeded_users: FxHashSet<u32>,
     pub(crate) usage_rng: Rng,
+    /// Run the invariant auditor after every Nth scheduling pass; `0`
+    /// disables. Resolved from `ASA_AUDIT` / debug assertions at
+    /// construction (see [`super::audit::default_audit_every`]); not part
+    /// of snapshots — a restored simulator re-reads its own environment.
+    pub(crate) audit_every: u32,
+    pub(crate) passes_since_audit: u32,
 }
 
 impl Simulator {
@@ -279,9 +285,12 @@ impl Simulator {
             fault_plan: FaultPlan::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: rng.fork(0x05a6e),
+            audit_every: super::audit::default_audit_every(),
+            passes_since_audit: 0,
         };
         sim.prefill();
-        let first_gap = sim.trace.as_mut().unwrap().next_gap(0);
+        let trace = sim.trace.as_mut().expect("constructed with Some(trace) above");
+        let first_gap = trace.next_gap(0);
         sim.events.push(first_gap, EventKind::TraceArrival);
         sim
     }
@@ -321,6 +330,8 @@ impl Simulator {
             fault_plan: FaultPlan::new(),
             seeded_users: FxHashSet::default(),
             usage_rng: Rng::new(0),
+            audit_every: super::audit::default_audit_every(),
+            passes_since_audit: 0,
         }
     }
 
@@ -337,7 +348,8 @@ impl Simulator {
     fn prefill(&mut self) {
         // Background users carry pre-existing (decayed) usage so the
         // fair-share ordering at t=0 is as diverse as a production system's.
-        let profile = self.trace.as_ref().unwrap().profile().clone();
+        let trace = self.trace.as_ref().expect("prefill runs only on trace-backed simulators");
+        let profile = trace.profile().clone();
         if profile.initial_user_usage > 0.0 {
             for u in 0..profile.user_pool {
                 let usage = self
@@ -346,7 +358,8 @@ impl Simulator {
                 self.fairshare.charge(1000 + u, usage, 0);
             }
         }
-        let (running, backlog) = self.trace.as_mut().unwrap().prefill();
+        let trace = self.trace.as_mut().expect("prefill runs only on trace-backed simulators");
+        let (running, backlog) = trace.prefill();
         for (spec, residual) in running {
             let id = self.register(spec, false);
             // Read the limit back post-registration: the partition QOS cap
@@ -717,7 +730,8 @@ impl Simulator {
             JobState::Running => {
                 let sc = *self.store.scan(id);
                 self.cluster.part_mut(sc.partition as usize).release(id);
-                let start = self.store.cold(id).start_time.unwrap();
+                let start =
+                    self.store.cold(id).start_time.expect("running jobs have a start time");
                 let used = (self.now - start) as f64 * sc.cores as f64;
                 let user = self.store.hot(id).user;
                 self.fairshare.charge(user, used, self.now);
@@ -845,6 +859,43 @@ impl Simulator {
     }
 
     fn run_scheduling_pass(&mut self) {
+        self.run_scheduling_pass_inner();
+        self.maybe_audit();
+    }
+
+    /// Count passes and run the invariant auditor at the configured
+    /// cadence. A violation is a simulator bug, never a recoverable
+    /// condition, so it panics — with an `ASA_AUDIT:` prefix CI logs can
+    /// be grepped for.
+    fn maybe_audit(&mut self) {
+        if self.audit_every == 0 {
+            return;
+        }
+        self.passes_since_audit += 1;
+        if self.passes_since_audit >= self.audit_every {
+            self.passes_since_audit = 0;
+            if let Err(e) = super::audit::audit_simulator(self) {
+                panic!("ASA_AUDIT: invariant violated at t={}: {e}", self.now);
+            }
+        }
+    }
+
+    /// Run the full invariant audit now (see [`super::audit`]); `Err`
+    /// carries the first violation found. The scenario suite and the
+    /// oracle proptests call this at checkpoints regardless of the
+    /// periodic cadence.
+    pub fn audit(&self) -> Result<(), String> {
+        super::audit::audit_simulator(self)
+    }
+
+    /// Override the periodic audit cadence (`0` disables); tests use this
+    /// instead of racing on the `ASA_AUDIT` process environment.
+    pub fn set_audit_every(&mut self, every: u32) {
+        self.audit_every = every;
+        self.passes_since_audit = 0;
+    }
+
+    fn run_scheduling_pass_inner(&mut self) {
         self.need_pass = false;
         self.metrics.passes += 1;
         if self.engine == SchedEngine::Incremental {
@@ -1259,7 +1310,7 @@ impl Simulator {
         debug_assert_eq!(self.store.state_of(id), Some(JobState::Running));
         let sc = *self.store.scan(id);
         self.cluster.part_mut(sc.partition as usize).release(id);
-        let start = self.store.cold(id).start_time.unwrap();
+        let start = self.store.cold(id).start_time.expect("running jobs have a start time");
         let used = (self.now - start) as f64 * sc.cores as f64;
         let user = self.store.hot(id).user;
         self.fairshare.charge(user, used, self.now);
@@ -1332,13 +1383,11 @@ impl Simulator {
                 }
                 EventKind::Finish(id) => self.finish_job(id),
                 EventKind::TraceArrival => {
-                    if self.trace.is_some() {
-                        let (spec, gap, cap) = {
-                            let trace = self.trace.as_mut().unwrap();
-                            let spec = trace.next_job();
-                            let gap = trace.next_gap(self.now);
-                            (spec, gap, trace.profile().max_queued_jobs)
-                        };
+                    let now = self.now;
+                    if let Some(trace) = self.trace.as_mut() {
+                        let spec = trace.next_job();
+                        let gap = trace.next_gap(now);
+                        let cap = trace.profile().max_queued_jobs;
                         if cap > 0 && self.queue_depth() >= cap {
                             // Admission control (Slurm MaxJobCount): drop
                             // the arrival instead of growing the queue

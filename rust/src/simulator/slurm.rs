@@ -255,9 +255,10 @@ pub fn schedule_pass_with(
     // to hand out. Skip the O(n log n) sort; the head-of-line reservation
     // (the priority argmax) still comes from one linear scan, so the
     // result is identical to the sorted path's.
-    let min_cores = candidates.iter().map(|c| c.cores).min().unwrap();
+    let min_cores =
+        candidates.iter().map(|c| c.cores).min().expect("candidates checked non-empty above");
     if min_cores > free {
-        let head_key = order.iter().copied().min().unwrap();
+        let head_key = order.iter().copied().min().expect("one packed key per candidate");
         let head = &candidates[head_key.2 as usize];
         let (shadow, _) = earliest_fit(cluster, &[], &mut scratch.ends, now, free, head.cores);
         result.reservation = Some((head.id, shadow));

@@ -148,15 +148,15 @@ impl<'a> SnapReader<'a> {
     }
 
     pub fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take(4) yields 4 bytes")))
     }
 
     pub fn u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take(8) yields 8 bytes")))
     }
 
     pub fn i64(&mut self) -> Result<i64, String> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().expect("take(8) yields 8 bytes")))
     }
 
     pub fn u128(&mut self) -> Result<u128, String> {
@@ -645,6 +645,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // simulates 12 busy hours: minutes under miri
     fn mid_run_snapshot_resumes_bit_identically_under_load_and_faults() {
         let cfg = busy_cfg();
         let mut a = Simulator::new(cfg.clone(), 7);

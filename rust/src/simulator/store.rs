@@ -464,6 +464,62 @@ impl JobStore {
             + self.names.bytes_estimate()
     }
 
+    /// Ids of all occupied slots in slot order — the simulator-level
+    /// auditor cross-checks arena contents against queues, cluster state,
+    /// and the event heap.
+    pub(crate) fn occupied_ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        (0..self.occupied.len())
+            .filter(|&s| self.occupied[s])
+            .map(|s| JobId::from_parts(s as u32, self.gen[s]))
+    }
+
+    /// Invariant audit (DESIGN.md §13): free-list, generation, and
+    /// live-count integrity of the recycling arena. Read-only; returns
+    /// the first violation found.
+    pub(crate) fn audit(&self) -> Result<(), String> {
+        let n = self.hot.len();
+        let lens = [self.scan.len(), self.cold.len(), self.gen.len(), self.occupied.len()];
+        if lens.iter().any(|&l| l != n) {
+            return Err(format!("parallel arrays disagree: hot {n}, others {lens:?}"));
+        }
+        let occupied = self.occupied.iter().filter(|&&o| o).count();
+        if occupied != self.live {
+            return Err(format!("live counter {} != occupied slot count {occupied}", self.live));
+        }
+        if self.free.len() != n - occupied {
+            return Err(format!(
+                "free list holds {} slots, expected {} ({} slots, {occupied} occupied)",
+                self.free.len(),
+                n - occupied,
+                n
+            ));
+        }
+        let mut on_free_list = vec![false; n];
+        for &slot in &self.free {
+            let s = slot as usize;
+            if s >= n {
+                return Err(format!("free-list slot {s} out of bounds (capacity {n})"));
+            }
+            if self.occupied[s] {
+                return Err(format!("free-list slot {s} is occupied"));
+            }
+            if on_free_list[s] {
+                return Err(format!("free-list slot {s} listed twice"));
+            }
+            on_free_list[s] = true;
+        }
+        for s in 0..n {
+            if self.occupied[s] && self.scan[s].seq >= self.next_seq {
+                return Err(format!(
+                    "slot {s} carries seq {} >= next_seq {}",
+                    self.scan[s].seq, self.next_seq
+                ));
+            }
+        }
+        Ok(())
+    }
+
+
     /// Serialize the whole arena verbatim: every slot row (occupied or
     /// not — retired rows still hold bytes that the uninterrupted twin
     /// also holds, and slot recycling must resume with identical

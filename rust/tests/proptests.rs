@@ -257,6 +257,9 @@ fn apply_oracle_script(sim: &mut Simulator, script: &[OracleAction]) -> Vec<SimE
     while let Some(ev) = sim.step() {
         events.push(ev);
     }
+    // Full invariant sweep at quiescence — the ASA_AUDIT CI lanes run the
+    // same checks mid-run after every scheduling pass.
+    sim.audit().expect("invariant audit at quiescence");
     events
 }
 
@@ -443,12 +446,36 @@ fn run_snapshotted_oracle(
             if resume_threads > 0 {
                 sim.set_pass_threads(resume_threads);
             }
+            sim.audit().expect("invariant audit after snapshot restore");
         }
     }
     while let Some(ev) = sim.step() {
         events.push(ev);
     }
+    sim.audit().expect("invariant audit at quiescence");
     oracle_fingerprint(&sim, events)
+}
+
+#[test]
+fn prop_every_pass_audit_is_clean_at_1_and_4_threads() {
+    // The ASA_AUDIT=1 CI lanes run the whole suite with the per-pass
+    // auditor armed via the environment; this property pins the same
+    // coverage deterministically (both serial and parallel pass paths),
+    // independent of how the test process was launched.
+    check("per-pass invariant audit stays clean", 15, |g| {
+        let nodes = g.u32(2, 8);
+        let cpn = g.u32(1, 8);
+        let script = gen_oracle_script(g, nodes * cpn, 1);
+        for threads in [1usize, 4] {
+            let mut sim = Simulator::new_empty_with_engine(
+                SystemConfig::testbed(nodes, cpn),
+                SchedEngine::Incremental,
+            );
+            sim.set_pass_threads(threads);
+            sim.set_audit_every(1);
+            apply_oracle_script(&mut sim, &script);
+        }
+    });
 }
 
 #[test]
